@@ -1,0 +1,60 @@
+"""Fig. 11: encryption/decryption on the read path.
+
+(a) response time: decrypt-while-reading (FV) vs read-then-CPU-decrypt;
+(b) throughput delta: plain read vs read+decrypt — the paper's claim is
+the delta is ~0 because the cipher is fused into the stream. Here the FV
+path fuses the crypt kernel into the pipeline; the measured delta is the
+kernel's marginal cost."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+from repro.core import operators as op
+from repro.core.client import (FViewNode, alloc_table_mem, farview_request,
+                               open_connection, table_read, table_write)
+from repro.core.table import FTable, Column
+from repro.data.pipeline import db_table_columns
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+def run(n_rows: int = 1 << 14) -> None:
+    node = FViewNode(256 * 2**20)
+    qp = open_connection(node)
+    ft = FTable("e", tuple(Column(f"c{i}") for i in range(8)),
+                n_rows=n_rows)
+    alloc_table_mem(qp, ft)
+    data = db_table_columns(n_rows)
+    words = ft.encode(data)
+    key = np.array([11, 13], np.uint32)
+    u32 = jnp.asarray(words.reshape(-1), jnp.float32).view(jnp.uint32)
+    enc = kops.crypt(u32, key, 5)
+    table_write(qp, ft, np.asarray(enc.view(jnp.float32)).reshape(
+        words.shape))
+
+    pipe_dec = (op.Crypt(key=(11, 13), nonce=5, when="pre"),)
+    pipe_plain = ()
+    farview_request(qp, ft, pipe_dec)
+    us_fv_dec = timeit(lambda: farview_request(qp, ft, pipe_dec),
+                       repeat=3) * 1e6
+    us_fv_plain = timeit(lambda: farview_request(qp, ft, pipe_plain),
+                         repeat=3) * 1e6
+
+    # LCPU: read raw + decrypt on the client CPU with the jnp reference
+    enc_np = np.asarray(enc)
+
+    def lcpu():
+        return np.asarray(kref.ctr_crypt(jnp.asarray(enc_np),
+                                         jnp.asarray(key), 5))
+
+    us_lcpu = timeit(lcpu, repeat=3) * 1e6
+    row("crypto", "FV_read", us_fv_plain, mb=round(ft.n_bytes / 2**20, 2))
+    row("crypto", "FV_read+dec", us_fv_dec, mb=round(ft.n_bytes / 2**20, 2),
+        overhead_pct=round(100 * (us_fv_dec - us_fv_plain)
+                           / max(us_fv_plain, 1e-9), 1))
+    row("crypto", "LCPU_read+dec", us_fv_plain + us_lcpu,
+        mb=round(ft.n_bytes / 2**20, 2))
+    row("crypto", "RCPU_read+dec", us_fv_plain + us_lcpu,
+        mb=round(ft.n_bytes / 2**20, 2))

@@ -1,0 +1,46 @@
+"""LM integration benchmark: far-KV decode bytes, push-down vs naive fetch.
+
+The Farview economics applied to serving: per decode step per layer, mode
+"far" ships Hq*(D+2) floats of partial-softmax state; mode "naive" ships
+the raw KV rows. The table sweeps context length and reports the modeled
+reduction factor plus a measured CPU walltime for the shard-level attention
+(partial_attention + merge vs full gather + attention)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+from repro.core.far_kv import shipped_bytes_per_layer
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+def run() -> None:
+    b, hq, hkv, d, tp = 8, 32, 8, 128, 16
+    for s in (4096, 32768, 524288):
+        far = shipped_bytes_per_layer("far", batch=b, hq=hq, hkv=hkv,
+                                      head_dim=d, seq_len=s, tp=tp)
+        nai = shipped_bytes_per_layer("naive", batch=b, hq=hq, hkv=hkv,
+                                      head_dim=d, seq_len=s, tp=tp)
+        row("far_kv", f"bytes_far_S{s}", 0, bytes_per_layer=far,
+            reduction=round(nai / far, 1))
+        row("far_kv", f"bytes_naive_S{s}", 0, bytes_per_layer=nai,
+            reduction=1.0)
+
+    # measured: partial attention on one shard + merge vs full attention
+    rng = np.random.default_rng(0)
+    s_loc = 2048
+    q = jnp.asarray(rng.normal(size=(b, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s_loc, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s_loc, hkv, d)), jnp.float32)
+    lens = jnp.full((b,), s_loc, jnp.int32)
+    kops.decode_attention(q, k, v, lens)
+    us_shard = timeit(
+        lambda: np.asarray(kops.decode_attention(q, k, v, lens)[0]),
+        repeat=3) * 1e6
+    us_full = timeit(
+        lambda: np.asarray(kref.full_attention_oracle(q, k, v, lens)),
+        repeat=3) * 1e6
+    row("far_kv", f"kernel_shard_S{s_loc}", us_shard)
+    row("far_kv", f"oracle_full_S{s_loc}", us_full)

@@ -1,0 +1,71 @@
+"""Fig. 9: DISTINCT and GROUP BY+SUM vs LCPU/RCPU dict baselines.
+
+(a) distinct with #distinct == #rows (worst case), (b) group-by with
+growing data size, (c) group-by with fixed group count. The FV path is the
+hash_group kernel + client-side overflow merge; the baseline is a python
+dict (the paper used a fast C++ hash map — CPU numbers are indicative,
+shipped bytes exact)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+from repro.core import operators as op
+from repro.core.client import (FViewNode, alloc_table_mem, farview_request,
+                               merge_group_partials, open_connection,
+                               table_write)
+from repro.core.table import FTable, Column
+from repro.kernels import ref as kref
+
+
+def run() -> None:
+    node = FViewNode(512 * 2**20)
+    qp = open_connection(node)
+    rng = np.random.default_rng(1)
+
+    # (a) DISTINCT, all-unique worst case + low-cardinality best case
+    for n, card, tag in [(1 << 11, 1 << 11, "unique"), (1 << 13, 64, "c64")]:
+        ft = FTable("d", (Column("k", "i32"), Column("v")), n_rows=n)
+        alloc_table_mem(qp, ft)
+        keys = (np.arange(n, dtype=np.int32) if card == n
+                else rng.integers(0, card, n).astype(np.int32))
+        data = {"k": keys, "v": rng.normal(size=n).astype(np.float32)}
+        table_write(qp, ft, ft.encode(data))
+        pipe = (op.Distinct(("k",), n_buckets=1 << 12),)
+        res = farview_request(qp, ft, pipe)
+        us_fv = timeit(lambda: farview_request(qp, ft, pipe), repeat=3) * 1e6
+        us_lcpu = timeit(lambda: np.unique(keys), repeat=3) * 1e6
+        row("grouping", f"FV_distinct_{tag}", us_fv,
+            shipped_bytes=res.shipped_bytes, rows=n)
+        row("grouping", f"LCPU_distinct_{tag}", us_lcpu,
+            shipped_bytes=0, rows=n)
+        row("grouping", f"RCPU_distinct_{tag}", us_lcpu,
+            shipped_bytes=ft.n_bytes, rows=n)
+        node.pool.free_table(ft)
+
+    # (b)+(c) GROUP BY k SUM(v): data-size sweep at card=256
+    for n in (1 << 12, 1 << 13, 1 << 14):
+        ft = FTable("g", (Column("k", "i32"), Column("v")), n_rows=n)
+        alloc_table_mem(qp, ft)
+        keys = rng.integers(0, 256, n).astype(np.int32)
+        vals = rng.normal(size=n).astype(np.float32)
+        table_write(qp, ft, ft.encode({"k": keys, "v": vals}))
+        pipe = (op.GroupBy("k", ("v",), n_buckets=1024),)
+        res = farview_request(qp, ft, pipe)
+        us_fv = timeit(lambda: farview_request(qp, ft, pipe), repeat=3) * 1e6
+
+        def lcpu():
+            out = {}
+            for k, v in zip(keys, vals):
+                out[k] = out.get(k, 0.0) + v
+            return out
+
+        us_lcpu = timeit(lcpu, repeat=3) * 1e6
+        row("grouping", f"FV_groupby_n{n}", us_fv,
+            shipped_bytes=res.shipped_bytes, rows=n)
+        row("grouping", f"LCPU_groupby_n{n}", us_lcpu, shipped_bytes=0,
+            rows=n)
+        row("grouping", f"RCPU_groupby_n{n}", us_lcpu,
+            shipped_bytes=ft.n_bytes, rows=n)
+        node.pool.free_table(ft)

@@ -1,0 +1,60 @@
+"""Small-table join (paper §Conclusions future work): FV in-memory join vs
+LCPU/RCPU dict-merge baselines. FV ships only matched+selected rows with
+the build values appended; RCPU ships the whole probe table."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+from repro.core import operators as op
+from repro.core.client import (FViewNode, alloc_table_mem, farview_request,
+                               open_connection, table_write)
+from repro.core.table import FTable, Column
+
+
+def run(n_rows: int = 1 << 14) -> None:
+    node = FViewNode(256 * 2**20)
+    qp = open_connection(node)
+    rng = np.random.default_rng(5)
+    probe = FTable("probe", (Column("k", "i32"), Column("a"), Column("b")),
+                   n_rows=n_rows)
+    alloc_table_mem(qp, probe)
+    pk = rng.integers(0, 1024, n_rows).astype(np.int32)
+    pd = {"k": pk, "a": rng.random(n_rows).astype(np.float32),
+          "b": rng.random(n_rows).astype(np.float32)}
+    table_write(qp, probe, probe.encode(pd))
+
+    for k_build, match_pct in ((64, 6), (512, 50)):
+        bname = f"build{k_build}"
+        build = FTable(bname, (Column("k", "i32"), Column("v")),
+                       n_rows=k_build)
+        alloc_table_mem(qp, build)
+        bk = rng.permutation(1024)[:k_build].astype(np.int32)
+        bv = rng.random(k_build).astype(np.float32)
+        table_write(qp, build, build.encode({"k": bk, "v": bv}))
+
+        pipe = (op.JoinSmall(probe_key="k", build_table=bname,
+                             build_key="k", build_cols=("v",)),)
+        res = farview_request(qp, probe, pipe)
+        us_fv = timeit(lambda: farview_request(qp, probe, pipe),
+                       repeat=3) * 1e6
+
+        lut = {int(kk): float(vv) for kk, vv in zip(bk, bv)}
+
+        def lcpu():
+            out = []
+            for i in range(n_rows):
+                v = lut.get(int(pk[i]))
+                if v is not None:
+                    out.append((pk[i], v))
+            return out
+
+        us_lcpu = timeit(lcpu, repeat=3) * 1e6
+        row("join", f"FV_join_{match_pct}pct", us_fv,
+            shipped_bytes=res.shipped_bytes, rows=n_rows,
+            matched=int(res.count))
+        row("join", f"LCPU_join_{match_pct}pct", us_lcpu, shipped_bytes=0,
+            rows=n_rows)
+        row("join", f"RCPU_join_{match_pct}pct", us_lcpu,
+            shipped_bytes=probe.n_bytes, rows=n_rows)

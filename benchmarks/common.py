@@ -1,0 +1,46 @@
+"""Shared benchmark utilities: timing, CSV rows, the LCPU/RCPU baselines.
+
+Baselines (paper §6.1):
+  FV    — Farview pipeline on the pool (kernels, interpret mode on CPU)
+  LCPU  — local buffer cache + numpy processing on the "client CPU"
+  RCPU  — remote buffer cache: full table "shipped" (bytes accounted), then
+          numpy processing client-side.
+On this container both baselines run on the same CPU, so wall-times are
+indicative; the byte accounting (shipped/read) is exact and is the number
+the paper's economics rest on. Each row reports both.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+ROWS: list[dict] = []
+
+
+def timeit(fn, *, repeat: int = 5, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def row(bench: str, name: str, us: float, **derived):
+    r = {"bench": bench, "name": name, "us_per_call": round(us, 1)}
+    r.update(derived)
+    ROWS.append(r)
+    return r
+
+
+def print_csv():
+    keys = ["bench", "name", "us_per_call"]
+    extra = sorted({k for r in ROWS for k in r} - set(keys))
+    cols = keys + extra
+    print(",".join(cols))
+    for r in ROWS:
+        print(",".join(str(r.get(k, "")) for k in cols))

@@ -1,0 +1,57 @@
+"""Benchmark harness: one module per paper table/figure. CSV to stdout.
+
+  bench_rdma        Fig. 6   read throughput / response time
+  bench_projection  Fig. 7   projection vs smart addressing
+  bench_selection   Fig. 8   selection @ 100/50/25% selectivity
+  bench_grouping    Fig. 9   distinct / group-by+sum
+  bench_regex       Fig. 10  regex matching
+  bench_crypto      Fig. 11  encryption on the read path
+  bench_multiclient Fig. 12  6 concurrent clients
+  bench_join        (§7 fut.) small-table in-memory join
+  bench_resources   Table 1  per-operator resource budget
+  bench_far_kv      (LM)     far-KV push-down economics
+
+Wall-times are CPU-indicative (kernels run interpret=True); shipped/read
+byte columns are exact and carry the paper's actual claims.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (bench_crypto, bench_far_kv, bench_grouping,
+                        bench_join, bench_multiclient, bench_projection,
+                        bench_rdma, bench_regex, bench_resources,
+                        bench_selection)
+from benchmarks.common import print_csv
+
+ALL = {
+    "rdma": bench_rdma.run,
+    "projection": bench_projection.run,
+    "selection": bench_selection.run,
+    "grouping": bench_grouping.run,
+    "regex": bench_regex.run,
+    "crypto": bench_crypto.run,
+    "multiclient": bench_multiclient.run,
+    "join": bench_join.run,
+    "resources": bench_resources.run,
+    "far_kv": bench_far_kv.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=tuple(ALL))
+    args = ap.parse_args()
+    for name, fn in ALL.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        fn()
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    print_csv()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Serving with the disaggregated KV pool: FV vs RCPU vs LCPU, batched.
+
+    PYTHONPATH=src python examples/serve_far_kv.py
+
+Brings up a granite-family model on an 8-device (forced CPU) mesh with the
+KV cache sequence-sharded over the "model" axis — the Farview pool — and
+decodes the same batch under all three read paths, verifying the logits
+agree and printing each mode's modeled per-step network bytes.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import smoke_config
+from repro.core.far_kv import shipped_bytes_per_layer
+from repro.launch.mesh import make_test_mesh
+from repro.models.lm import LM
+
+mesh = make_test_mesh((2, 4), ("data", "model"))
+cfg = smoke_config(get_config("granite-3-2b"))
+key = jax.random.PRNGKey(0)
+lm_pool = LM(cfg, mesh=mesh, dp_axes=("data",))
+lm_local = LM(cfg)
+params = lm_pool.init(key)
+
+B, MAX_S, GEN = 4, 256, 16
+prompt = jax.random.randint(key, (B, 8), 0, cfg.vocab)
+
+print(f"mesh {dict(mesh.shape)}; cache (B={B}, S={MAX_S}) seq-sharded "
+      f"over 'model' = the disaggregated pool axis")
+outs = {}
+with jax.set_mesh(mesh):
+    for mode, lm in [("far", lm_pool), ("naive", lm_pool),
+                     ("local", lm_local)]:
+        cache = lm.init_cache(B, MAX_S, jnp.float32)
+        pos = 0
+        # teacher-forced prefill through the decode path
+        for t in range(prompt.shape[1]):
+            logits, cache = lm.decode_step(
+                params, cache, {"tokens": prompt[:, t:t + 1]},
+                jnp.int32(pos), jnp.int32(pos), mode=mode)
+            pos += 1
+        toks = [jnp.argmax(logits[:, -1], -1)]
+        for _ in range(GEN - 1):
+            logits, cache = lm.decode_step(
+                params, cache, {"tokens": toks[-1][:, None]},
+                jnp.int32(pos), jnp.int32(pos), mode=mode)
+            pos += 1
+            toks.append(jnp.argmax(logits[:, -1], -1))
+        outs[mode] = np.stack([np.asarray(t) for t in toks], 1)
+        ship = shipped_bytes_per_layer(
+            mode, batch=B, hq=cfg.n_heads, hkv=cfg.n_kv_heads,
+            head_dim=cfg.resolved_head_dim, seq_len=MAX_S, tp=4)
+        print(f"  mode={mode:6s} generated {outs[mode].shape} tokens; "
+              f"modeled bytes/layer/step = {ship:,}")
+
+assert np.array_equal(outs["far"], outs["naive"]), "FV != RCPU tokens"
+assert np.array_equal(outs["far"], outs["local"]), "FV != LCPU tokens"
+print("all three read paths generated identical tokens ✓")
+red = (shipped_bytes_per_layer("naive", batch=B, hq=cfg.n_heads,
+                               hkv=cfg.n_kv_heads,
+                               head_dim=cfg.resolved_head_dim,
+                               seq_len=MAX_S, tp=4)
+       / shipped_bytes_per_layer("far", batch=B, hq=cfg.n_heads,
+                                 hkv=cfg.n_kv_heads,
+                                 head_dim=cfg.resolved_head_dim,
+                                 seq_len=MAX_S, tp=4))
+print(f"push-down reduces per-step network bytes {red:.1f}x at S={MAX_S} "
+      f"(grows linearly with S)")

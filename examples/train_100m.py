@@ -1,0 +1,66 @@
+"""End-to-end training driver: ~100M-param xLSTM for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_100m.py [--steps 300]
+
+This is the (b) end-to-end deliverable: the full production path — config,
+data pipeline, AdamW, fault-tolerant loop with async checkpoints — on the
+xlstm-125m architecture at a width that fits CPU. Default runs a 4-layer
+~14M-param slice for wall-clock sanity; --full-depth uses all 12 layers
+(~125M params, slower). Loss on the Markov stream decreases; checkpoints
+land in --ckpt-dir and a restart resumes.
+"""
+import argparse
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import TrainConfig
+from repro.data.pipeline import TokenPipeline
+from repro.models.lm import LM
+from repro.runtime.train_loop import TrainLoop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_100m")
+    ap.add_argument("--full-depth", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config("xlstm-125m")
+    if not args.full_depth:
+        # keep the family (3 mLSTM + 1 sLSTM per group), narrow for CPU
+        cfg = cfg.replace(n_layers=4, d_model=256, n_heads=4,
+                          vocab=8192, param_dtype="float32")
+    else:
+        cfg = cfg.replace(param_dtype="float32")
+    lm = LM(cfg)
+    import jax
+    n_params = sum(int(x.size) for x in jax.tree.leaves(
+        jax.eval_shape(lm.init, jax.random.PRNGKey(0))))
+    print(f"arch=xlstm-125m layers={cfg.n_layers} d={cfg.d_model} "
+          f"params={n_params/1e6:.1f}M")
+
+    tcfg = TrainConfig(learning_rate=args.lr, warmup_steps=20,
+                       total_steps=args.steps, checkpoint_dir=args.ckpt_dir,
+                       checkpoint_every=100)
+    pipe = TokenPipeline(vocab=cfg.vocab, seq_len=args.seq,
+                         global_batch=args.batch, seed=0)
+    loop = TrainLoop(lm, tcfg, pipe)
+    stats = loop.run(args.steps)
+    l = stats.losses
+    print(f"steps={stats.steps_done} restarts={stats.restarts} "
+          f"nan_events={stats.nan_events} "
+          f"ewma_step={stats.step_time_ewma*1e3:.0f}ms")
+    k = max(1, len(l) // 10)
+    print(f"loss first{k}={np.mean(l[:k]):.4f} -> last{k}="
+          f"{np.mean(l[-k:]):.4f}")
+    assert np.mean(l[-k:]) < np.mean(l[:k]), "loss must decrease"
+    print("checkpoints at:", loop.ckpt.all_steps())
+
+
+if __name__ == "__main__":
+    main()

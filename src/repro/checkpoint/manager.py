@@ -1,0 +1,169 @@
+"""Checkpointing: atomic, async, elastic-restore.
+
+Layout:  <dir>/step_<N>/  arrays.npz (flattened pytree)  +  manifest.json
+  * atomic: written to step_<N>.tmp, fsync'd, then os.rename (a crashed
+    writer never corrupts the latest checkpoint),
+  * async: `save_async` snapshots to host RAM synchronously (cheap) and
+    writes in a background thread so the train loop never blocks on disk,
+  * elastic: arrays are saved *unsharded* (gathered); restore re-shards onto
+    whatever mesh the new job has (N->M hosts), which is what makes elastic
+    re-mesh (runtime/fault.py) a pure restart-path operation,
+  * retention: keep_last prunes old steps (the preempt checkpoint is always
+    kept).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+_EMPTY = "__empty_dict__"
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        if not tree:                   # preserve empty subtrees ({} leaves)
+            out[f"{prefix}{_EMPTY}"] = np.zeros((0,), np.int8)
+            return out
+        for k, v in sorted(tree.items()):
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: dict):
+    root: dict = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        cur = root
+        for p in parts[:-1]:
+            cur = cur.setdefault(p, {})
+        cur[parts[-1]] = val
+
+    def fix(node):
+        if isinstance(node, dict):
+            keys = list(node.keys())
+            if keys == [_EMPTY]:
+                return {}
+            if keys and all(k.isdigit() for k in keys):
+                return tuple(fix(node[str(i)]) for i in range(len(keys)))
+            return {k: fix(v) for k, v in node.items()}
+        return node
+
+    return fix(root)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep_last: int = 3):
+        self.dir = directory
+        self.keep_last = keep_last
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+        self._error: Exception | None = None
+
+    # ------------------------------------------------------------------ save
+    def _write(self, step: int, host_tree: dict, meta: dict):
+        tmp = os.path.join(self.dir, f"step_{step}.tmp")
+        final = os.path.join(self.dir, f"step_{step}")
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"), **host_tree)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({"step": step, **meta}, f)
+        with open(os.path.join(tmp, "manifest.json")) as f:
+            os.fsync(f.fileno())
+        shutil.rmtree(final, ignore_errors=True)
+        os.rename(tmp, final)
+        self._prune()
+
+    def _prune(self):
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep_last] if self.keep_last else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    def save(self, step: int, tree, meta: dict | None = None,
+             *, asynchronous: bool = False):
+        """Snapshot to host memory now; write to disk (maybe in background)."""
+        flat = _flatten(tree)
+        host = {k: np.asarray(v) for k, v in flat.items()}  # device->host sync
+        meta = dict(meta or {})
+        # npz can't round-trip ml_dtypes (bf16 -> void); store them as u16
+        # raw bits + a dtype sidecar in the manifest.
+        dtypes = {}
+        for k, v in host.items():
+            if v.dtype.name == "bfloat16":
+                dtypes[k] = "bfloat16"
+                host[k] = v.view(np.uint16)
+        meta["_dtypes"] = dtypes
+        if asynchronous:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write_guard, args=(step, host, meta), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host, meta)
+
+    def _write_guard(self, step, host, meta):
+        try:
+            self._write(step, host, meta)
+        except Exception as e:  # surfaced on next wait()
+            self._error = e
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.dir, name,
+                                               "manifest.json")):
+                    out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int | None = None, *, shardings=None):
+        """Load a checkpoint; optionally place leaves per a shardings tree
+        (elastic restore: the saved arrays are unsharded, so any target mesh
+        works)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            return None, None
+        path = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            meta = json.load(f)
+        npz = np.load(os.path.join(path, "arrays.npz"))
+        flat = {k: npz[k] for k in npz.files}
+        for k, dt in meta.get("_dtypes", {}).items():
+            if dt == "bfloat16" and k in flat:
+                import ml_dtypes
+                flat[k] = flat[k].view(ml_dtypes.bfloat16)
+        tree = _unflatten(flat)
+        if shardings is not None:
+            flat_s = _flatten(shardings)
+            placed = {k: (jax.device_put(v, flat_s[k])
+                          if not k.endswith(_EMPTY) and k in flat_s else v)
+                      for k, v in _flatten(tree).items()}
+            tree = _unflatten(placed)
+        return tree, meta

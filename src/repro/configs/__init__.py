@@ -1,0 +1,83 @@
+"""Config registry: --arch <id> -> ModelConfig, + input_specs per shape.
+
+`input_specs(cfg, shape)` returns ShapeDtypeStruct stand-ins for every model
+input (weak-type-correct, shardable, no device allocation) — the dry-run
+lowers against these; smoke tests/examples materialize real arrays of the
+same shapes (reduced).
+"""
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ModelConfig, ServeConfig, Shape, SHAPES,
+                                TrainConfig, smoke_config)
+
+_MODULES = {
+    "xlstm-125m": "xlstm_125m",
+    "gemma2-9b": "gemma2_9b",
+    "granite-3-2b": "granite_3_2b",
+    "yi-6b": "yi_6b",
+    "granite-3-8b": "granite_3_8b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "musicgen-large": "musicgen_large",
+    "llama-3.2-vision-11b": "llama_3_2_vision_11b",
+    "zamba2-2.7b": "zamba2_2_7b",
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; choose from {ARCHS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.CONFIG
+
+
+def cell_is_applicable(cfg: ModelConfig, shape: Shape) -> tuple[bool, str]:
+    """long_500k requires sub-quadratic attention (DESIGN.md §5)."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, ("skipped: pure full-attention arch at 500k context "
+                       "(quadratic prefill); run for ssm/hybrid only")
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: Shape, *,
+                dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStructs for one (arch x shape) cell's step function inputs."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        specs: dict = {}
+        if cfg.embed_input:
+            specs["embeds"] = sds((b, s, cfg.d_model), dtype)
+        else:
+            specs["tokens"] = sds((b, s), i32)
+        if cfg.n_image_tokens:
+            specs["image_embeds"] = sds((b, cfg.n_image_tokens, cfg.d_model),
+                                        dtype)
+        if shape.kind == "train":
+            specs["labels"] = sds((b, s), i32)
+        return specs
+    # decode: one new token against a cache of seq_len
+    specs = {}
+    if cfg.embed_input:
+        specs["embeds"] = sds((b, 1, cfg.d_model), dtype)
+    else:
+        specs["tokens"] = sds((b, 1), i32)
+    return specs
+
+
+def decode_cache_specs(cfg: ModelConfig, shape: Shape,
+                       kv_dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStructs of the decode cache for one cell (no allocation)."""
+    from repro.models.lm import LM
+    lm = LM(cfg)
+    shapes = jax.eval_shape(
+        lambda: lm.init_cache(shape.global_batch, shape.seq_len, kv_dtype))
+    return shapes

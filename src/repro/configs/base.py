@@ -1,0 +1,140 @@
+"""Config dataclasses: model architecture, shapes, train/serve settings."""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    arch: str
+    family: str                 # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0           # 0 -> d_model // n_heads
+    act: str = "silu"
+
+    # attention flavor
+    attn_pattern: str = "full"  # full | gemma2_alt | cross_every
+    window: int = 0             # sliding window (gemma2 local layers)
+    softcap_attn: float = 0.0
+    softcap_logits: float = 0.0
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = True
+    scale_embed: bool = False   # gemma: x *= sqrt(d)
+
+    # vlm
+    cross_every: int = 0        # a cross-attn layer every k layers
+    n_image_tokens: int = 0
+
+    # audio (musicgen): frontend supplies embeddings
+    embed_input: bool = False
+
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    d_expert: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+    # ssm / hybrid / xlstm
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    slstm_every: int = 0        # xlstm: every k-th block is sLSTM
+    shared_attn_every: int = 0  # zamba2: shared attn block every k mamba layers
+
+    # numerics / structure
+    param_dtype: str = "bfloat16"
+    norm_eps: float = 1e-6
+    kv_chunk: int = 1024        # flash-attention KV chunk
+    ssm_chunk: int = 256
+    ce_chunk: int = 1024        # chunked cross-entropy sequence chunk
+    remat: bool = True
+    remat_policy: str = "nothing"   # nothing | dots_no_batch | dots
+
+    # sub-quadratic? (drives long_500k applicability)
+    subquadratic: bool = False
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                   # train | prefill | decode
+
+
+# the assigned input-shape set (identical for all 10 LM archs)
+SHAPES: dict[str, Shape] = {
+    "train_4k": Shape("train_4k", 4096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    grad_clip: float = 1.0
+    microbatch: int = 0             # 0 = no grad accumulation
+    grad_compression: str = "none"  # none | int8_ef
+    checkpoint_every: int = 200
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    kv_mode: str = "far"            # far | naive | local
+    max_seq: int = 4096
+    batch: int = 8
+    kv_dtype: str = "bfloat16"
+
+
+def smoke_config(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    kw = dict(
+        n_layers=min(cfg.n_layers, 4),
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads < cfg.n_heads
+        else 4,
+        head_dim=32,
+        d_ff=256 if cfg.d_ff else 0,
+        vocab=512,
+        param_dtype="float32",
+        kv_chunk=64,
+        ssm_chunk=32,
+        window=min(cfg.window, 64) if cfg.window else 0,
+        n_image_tokens=32 if cfg.n_image_tokens else 0,
+    )
+    if cfg.n_experts:
+        kw.update(n_experts=8, top_k=2, d_expert=64)
+    if cfg.ssm_state:
+        kw.update(ssm_state=16)
+    if cfg.family == "hybrid":
+        kw.update(n_layers=4, shared_attn_every=2)
+    if cfg.family == "ssm":
+        kw.update(n_layers=4, slstm_every=max(cfg.slstm_every, 0) and 4)
+    if cfg.cross_every:
+        kw.update(cross_every=2, n_layers=4)
+    if cfg.attn_pattern == "gemma2_alt":
+        kw.update(n_layers=4)
+    return cfg.replace(**kw)

@@ -1,0 +1,12 @@
+"""gemma2-9b [dense] — local+global alternating, logit softcap
+[arXiv:2408.00118; hf]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="gemma2-9b", family="dense",
+    n_layers=42, d_model=3584, n_heads=16, n_kv_heads=8, head_dim=256,
+    d_ff=14336, vocab=256000, act="gelu",
+    attn_pattern="gemma2_alt", window=4096,
+    softcap_attn=50.0, softcap_logits=30.0,
+    scale_embed=True, tie_embeddings=True,
+)

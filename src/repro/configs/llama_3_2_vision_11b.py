@@ -1,0 +1,12 @@
+"""llama-3.2-vision-11b [vlm] — cross-attn image layers
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified]. Vision tower is a STUB:
+input_specs() supplies projected patch embeddings."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="llama-3.2-vision-11b", family="vlm",
+    n_layers=40, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab=128256,
+    cross_every=5, n_image_tokens=1600,
+    tie_embeddings=False, rope_theta=500000.0,
+)

@@ -1,0 +1,11 @@
+"""moonshot-v1-16b-a3b [moe] — kimi/moonlight, 64e top-6
+[hf:moonshotai/Moonlight-16B-A3B; hf]. d_ff=1408 is per-expert width."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="moonshot-v1-16b-a3b", family="moe",
+    n_layers=48, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=0, vocab=163840,
+    n_experts=64, top_k=6, d_expert=1408,
+    tie_embeddings=False,
+)

@@ -1,0 +1,11 @@
+"""musicgen-large [audio] — decoder-only over EnCodec tokens
+[arXiv:2306.05284; hf]. Frontend is a STUB: input_specs() supplies
+precomputed frame embeddings (B, S, d_model)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="musicgen-large", family="audio",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=32,
+    d_ff=8192, vocab=2048, act="gelu",
+    embed_input=True, tie_embeddings=False,
+)

@@ -1,0 +1,11 @@
+"""qwen3-moe-30b-a3b [moe] — 128 experts top-8 [hf:Qwen/Qwen3-30B-A3B; hf].
+The assigned d_ff=768 is the per-expert FFN width."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="qwen3-moe-30b-a3b", family="moe",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=4, head_dim=128,
+    d_ff=0, vocab=151936,
+    n_experts=128, top_k=8, d_expert=768,
+    tie_embeddings=False, rope_theta=1000000.0,
+)

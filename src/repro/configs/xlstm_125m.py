@@ -1,0 +1,9 @@
+"""xlstm-125m [ssm] — sLSTM + mLSTM blocks [arXiv:2405.04517; unverified]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="xlstm-125m", family="ssm",
+    n_layers=12, d_model=768, n_heads=4, n_kv_heads=4, d_ff=0,
+    vocab=50304, slstm_every=4,          # (3 mLSTM + 1 sLSTM) x 3 groups
+    tie_embeddings=True, subquadratic=True,
+)

@@ -1,0 +1,12 @@
+"""zamba2-2.7b [hybrid] — Mamba2 + shared attn blocks
+[arXiv:2411.15242; hf]. 54 Mamba2 layers; one SHARED transformer block
+(weights reused) applied every 6 layers (9 applications)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch="zamba2-2.7b", family="hybrid",
+    n_layers=54, d_model=2560, n_heads=32, n_kv_heads=32,
+    d_ff=10240, vocab=32000,
+    ssm_state=64, shared_attn_every=6,
+    tie_embeddings=True, subquadratic=True,
+)

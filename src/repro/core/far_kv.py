@@ -1,0 +1,217 @@
+"""Disaggregated KV cache with attention push-down (Farview for LM serving).
+
+The KV cache is the LM's buffer pool: large, append-only, read-dominated.
+We shard it by *sequence* over the pool axis (default "model") — the cache
+rows live on "memory" devices like Farview's network-attached DRAM — and
+offer three read paths per the paper's evaluation matrix:
+
+  mode="far"    (FV):   partial flash-attention runs at each shard owner;
+                        only (o, m, l) = Hq*(D+2) floats cross the wire.
+                        This is operator push-down: softmax-weighted-sum is
+                        the aggregation operator.
+  mode="naive"  (RCPU): shards ship their raw KV rows to the compute side
+                        (all_gather), which attends locally. Bytes ∝ 2*S*Hkv*D.
+  mode="local"  (LCPU): no disaggregation — cache is head-sharded like
+                        standard TP serving; needs the whole sequence to fit
+                        next to compute.
+
+All three functions are written for use *inside* `jax.shard_map` over the
+pool axis, so the collective schedule is explicit and auditable in the
+lowered HLO (that is what §Roofline measures). `attend_block` wires a whole
+GQA attention block (projections TP-sharded by heads + far-pool cache).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# partial attention (XLA impl; kernels/decode_attention.py is the TPU kernel)
+# ---------------------------------------------------------------------------
+def partial_attention(q, k, v, length, *, scale: float, start: int | jnp.ndarray = 0):
+    """Unnormalized flash partials over one KV chunk.
+
+    q: (B, Hq, D); k/v: (B, S_loc, Hkv, D); length: (B,) *local* valid rows.
+    Returns o (B, Hq, D) f32, m (B, Hq), l (B, Hq).
+    """
+    b, hq, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    # MXU-native: consume the cache in its stored dtype (bf16 on the wire),
+    # accumulate in f32 — never materialize an f32 cache copy (§Perf B1).
+    qc = q.astype(k.dtype).reshape(b, hkv, g, d)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qc, k, optimize=True,
+                        preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(s)[None, None, None, :]
+    valid = pos < length[:, None, None, None]
+    neg = jnp.float32(-1e30)
+    scores = jnp.where(valid, scores, neg)
+    m = jnp.max(scores, axis=-1)
+    m_safe = jnp.maximum(m, neg)
+    p = jnp.where(valid, jnp.exp(scores - m_safe[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p.astype(k.dtype), v, optimize=True,
+                   preferred_element_type=jnp.float32)
+    return (o.reshape(b, hq, d), m_safe.reshape(b, hq), l.reshape(b, hq))
+
+
+def merge_partials_named(o, m, l, axis: str):
+    """LSE-merge partials across a mesh axis; ships Hq*(D+2) floats/device."""
+    m_g = jax.lax.pmax(m, axis)
+    w = jnp.exp(m - m_g)
+    l_g = jax.lax.psum(l * w, axis)
+    o_g = jax.lax.psum(o * w[..., None], axis)
+    return o_g / jnp.maximum(l_g, 1e-30)[..., None]
+
+
+# ---------------------------------------------------------------------------
+# cache append (write path) — sequence-sharded pool
+# ---------------------------------------------------------------------------
+def append_seq_sharded(k_cache, v_cache, k_new, v_new, pos, axis: str):
+    """Write one token's K/V into the owning sequence shard.
+
+    k_cache/v_cache: (B, S_loc, Hkv, D) local chunk; k_new/v_new (B, Hkv, D)
+    replicated (callers all_gather head-sharded projections first).
+    pos: () int32 global write position.
+    """
+    s_loc = k_cache.shape[1]
+    idx = jax.lax.axis_index(axis)
+    start = idx * s_loc
+    off = jnp.clip(pos - start, 0, s_loc - 1)
+    in_range = (pos >= start) & (pos < start + s_loc)
+    k_upd = jax.lax.dynamic_update_slice(
+        k_cache, k_new[:, None].astype(k_cache.dtype), (0, off, 0, 0))
+    v_upd = jax.lax.dynamic_update_slice(
+        v_cache, v_new[:, None].astype(v_cache.dtype), (0, off, 0, 0))
+    k_cache = jnp.where(in_range, k_upd, k_cache)
+    v_cache = jnp.where(in_range, v_upd, v_cache)
+    return k_cache, v_cache
+
+
+def local_lengths(global_len, s_loc: int, axis: str):
+    """Per-shard valid-row counts given global cache lengths (B,)."""
+    start = jax.lax.axis_index(axis) * s_loc
+    return jnp.clip(global_len - start, 0, s_loc)
+
+
+# ---------------------------------------------------------------------------
+# the three read paths
+# ---------------------------------------------------------------------------
+def attend_far(q_rep, k_cache, v_cache, global_len, *, axis: str,
+               scale: float):
+    """FV: push-down. q replicated; cache seq-sharded; returns replicated."""
+    s_loc = k_cache.shape[1]
+    loc_len = local_lengths(global_len, s_loc, axis)
+    o, m, l = partial_attention(q_rep, k_cache, v_cache, loc_len, scale=scale)
+    return merge_partials_named(o, m, l, axis)
+
+
+def attend_naive(q_rep, k_cache, v_cache, global_len, *, axis: str,
+                 scale: float):
+    """RCPU: fetch-then-compute. All KV rows cross the wire."""
+    k_full = jax.lax.all_gather(k_cache, axis, axis=1, tiled=True)
+    v_full = jax.lax.all_gather(v_cache, axis, axis=1, tiled=True)
+    o, m, l = partial_attention(q_rep, k_full, v_full, global_len, scale=scale)
+    return o / jnp.maximum(l, 1e-30)[..., None]
+
+
+def attend_local(q_loc, k_cache_loc, v_cache_loc, global_len, *,
+                 scale: float):
+    """LCPU: heads-sharded cache, no cross-device traffic in attention."""
+    o, m, l = partial_attention(q_loc, k_cache_loc, v_cache_loc, global_len,
+                                scale=scale)
+    return o / jnp.maximum(l, 1e-30)[..., None]
+
+
+# ---------------------------------------------------------------------------
+# full decode attention block (projections + far pool), for shard_map use
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class BlockWeights:
+    """Per-device TP shards of one attention block's projections."""
+    wq: jnp.ndarray    # (d, hq_loc * dh)
+    wk: jnp.ndarray    # (d, hkv_loc * dh)
+    wv: jnp.ndarray    # (d, hkv_loc * dh)
+    wo: jnp.ndarray    # (hq_loc * dh, d)
+
+
+def attend_block(x, w: BlockWeights, k_cache, v_cache, pos, global_len, *,
+                 axis: str, n_q_heads: int, n_kv_heads: int, head_dim: int,
+                 mode: str = "far", scale: float | None = None):
+    """One decode attention block inside shard_map over `axis`.
+
+    x: (B, d) replicated activations. Caches: mode far/naive -> seq-sharded
+    (B, S_loc, Hkv, D); mode local -> head-sharded (B, S, Hkv_loc, D).
+    Returns ((B, d) replicated output, updated caches).
+    """
+    tp = jax.lax.axis_size(axis)
+    if scale is None:
+        scale = 1.0 / float(np.sqrt(head_dim))
+    b = x.shape[0]
+    hq_loc = n_q_heads // tp
+    hkv_loc = max(1, n_kv_heads // tp)
+
+    q_loc = (x @ w.wq).reshape(b, hq_loc, head_dim)
+    k_loc = (x @ w.wk).reshape(b, hkv_loc, head_dim)
+    v_loc = (x @ w.wv).reshape(b, hkv_loc, head_dim)
+
+    if mode == "local":
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k_loc[:, None].astype(k_cache.dtype), (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v_loc[:, None].astype(v_cache.dtype), (0, pos, 0, 0))
+        attn = attend_local(q_loc, k_cache, v_cache,
+                            jnp.maximum(global_len, pos + 1), scale=scale)
+        out = jax.lax.psum(attn.reshape(b, -1).astype(x.dtype) @ w.wo, axis)
+        return out, k_cache, v_cache
+
+    # far / naive: replicate q + the new KV heads (tiny), seq-sharded pool.
+    # When tp > n_kv_heads the kv projections are replicated per head group
+    # (device i computes kv head i * n_kv // tp); de-dup by striding.
+    q_rep = jax.lax.all_gather(q_loc, axis, axis=1, tiled=True)
+    k_all = jax.lax.all_gather(k_loc, axis, axis=1, tiled=True)
+    v_all = jax.lax.all_gather(v_loc, axis, axis=1, tiled=True)
+    if tp > n_kv_heads:
+        stride = tp // n_kv_heads
+        k_new, v_new = k_all[:, ::stride], v_all[:, ::stride]
+    else:
+        k_new, v_new = k_all, v_all
+    k_cache, v_cache = append_seq_sharded(k_cache, v_cache, k_new, v_new,
+                                          pos, axis)
+    glen = jnp.maximum(global_len, pos + 1)
+    if mode == "far":
+        attn = attend_far(q_rep, k_cache, v_cache, glen, axis=axis,
+                          scale=scale)
+    elif mode == "naive":
+        attn = attend_naive(q_rep, k_cache, v_cache, glen, axis=axis,
+                            scale=scale)
+    else:
+        raise ValueError(mode)
+    # out-projection: my head slice x my wo shard, row-parallel + psum
+    idx = jax.lax.axis_index(axis)
+    attn_loc = jax.lax.dynamic_slice(
+        attn, (0, idx * hq_loc, 0), (b, hq_loc, head_dim))
+    out = jax.lax.psum(attn_loc.reshape(b, -1).astype(x.dtype) @ w.wo, axis)
+    return out, k_cache, v_cache
+
+
+def shipped_bytes_per_layer(mode: str, *, batch: int, hq: int, hkv: int,
+                            head_dim: int, seq_len: int, tp: int,
+                            bytes_per_el: int = 2) -> int:
+    """Modeled network bytes per decode step per layer (the Fig. 8 economics)."""
+    if mode == "local":
+        return batch * hq * head_dim * bytes_per_el          # psum of out proj
+    q_ship = batch * hq * head_dim * bytes_per_el            # all_gather q
+    kv_new = 2 * batch * hkv * head_dim * bytes_per_el
+    if mode == "far":
+        merge = batch * hq * (head_dim + 2) * 4              # o,m,l f32 psum
+        return q_ship + kv_new + merge
+    if mode == "naive":
+        fetch = 2 * batch * seq_len * hkv * head_dim * bytes_per_el * (tp - 1) // tp
+        return q_ship + kv_new + fetch
+    raise ValueError(mode)

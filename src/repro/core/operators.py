@@ -1,0 +1,134 @@
+"""Logical operator IR for Farview pipelines (paper §3.1, §5).
+
+A pipeline is an ordered list of operator descriptors, validated against the
+canonical stage order of Fig. 4:
+
+    [Crypt(decrypt)] -> Project|SmartAddress -> [Select|RegexMatch]
+        -> [Distinct|GroupBy] -> [Crypt(encrypt)] -> Pack (implicit)
+
+Descriptors are hashable; their tuple is the pipeline *signature* — the key
+of the compiled-executable cache in pipeline.py, which plays the role of the
+paper's precompiled partial bitstreams for the dynamic regions.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+# comparison ops (shared codes with kernels/ref.py)
+OPS = {"<": 1, "<=": 2, ">": 3, ">=": 4, "==": 5, "!=": 6}
+
+
+@dataclass(frozen=True)
+class Project:
+    """Return a subset of columns (paper §5.2 'Projection')."""
+    cols: tuple[str, ...]
+
+
+@dataclass(frozen=True)
+class SmartAddress:
+    """Column-granular reads from the pool (paper §5.2 'Smart addressing').
+
+    Instead of streaming whole rows and projecting in the pipeline, issue
+    per-column reads. Beneficial when row_words >> len(cols) (Fig. 7)."""
+    cols: tuple[str, ...]
+
+
+@dataclass(frozen=True)
+class Predicate:
+    col: str
+    op: str        # one of OPS
+    value: float
+
+
+@dataclass(frozen=True)
+class Select:
+    """AND of per-column predicates (paper §5.3 'Predicate selection')."""
+    predicates: tuple[Predicate, ...]
+
+
+@dataclass(frozen=True)
+class RegexMatch:
+    """Filter byte-string rows by a regex (paper §5.3)."""
+    pattern: str
+
+
+@dataclass(frozen=True)
+class JoinSmall:
+    """Inner join against a SMALL pool-resident build table (the paper's
+    stated future work, §Conclusions): the memory node reads the build
+    table into on-chip memory once and matches the probe stream against
+    it. Build keys must be unique. Matched probe rows survive; the build's
+    value columns are appended to the response."""
+    probe_key: str
+    build_table: str               # name of the build FTable in the pool
+    build_key: str
+    build_cols: tuple              # value columns appended on match
+
+
+@dataclass(frozen=True)
+class Distinct:
+    """DISTINCT over key column(s) (paper §5.4)."""
+    cols: tuple[str, ...]
+    n_buckets: int = 1024
+
+
+@dataclass(frozen=True)
+class GroupBy:
+    """GROUP BY key with aggregates over value columns (paper §5.4)."""
+    key: str
+    values: tuple[str, ...]
+    aggs: tuple[str, ...] = ("count", "sum")   # of count/sum/min/max/avg
+    n_buckets: int = 1024
+
+
+@dataclass(frozen=True)
+class Crypt:
+    """CTR-mode stream cipher on the data path (paper §5.5)."""
+    key: tuple[int, int]
+    nonce: int
+    when: str = "pre"   # "pre" = decrypt data read from pool; "post" = encrypt response
+
+
+@dataclass(frozen=True)
+class Pack:
+    """Length-prefixed response packing (paper §5.5) — implicit, kept for
+    signature completeness when explicitly requested."""
+
+
+STAGE_ORDER = {
+    Crypt: 0,          # pre-crypt
+    SmartAddress: 1,
+    Project: 1,
+    Select: 2,
+    RegexMatch: 2,
+    JoinSmall: 2,      # joins compose with selection, before grouping
+    Distinct: 3,
+    GroupBy: 3,
+    Pack: 5,
+}
+
+
+def validate_pipeline(pipeline: tuple) -> tuple:
+    """Check stage ordering; returns the pipeline unchanged."""
+    last = -1
+    n_reads = 0
+    for op in pipeline:
+        stage = STAGE_ORDER[type(op)]
+        if isinstance(op, Crypt):
+            stage = 0 if op.when == "pre" else 4
+        if stage < last:
+            raise ValueError(
+                f"operator {op} out of pipeline order (stage {stage} after "
+                f"{last}) — canonical order is decrypt->project->select->"
+                f"group->encrypt->pack")
+        last = stage
+        if isinstance(op, (Project, SmartAddress)):
+            n_reads += 1
+    if n_reads > 1:
+        raise ValueError("at most one Project/SmartAddress per pipeline")
+    return pipeline
+
+
+def signature(pipeline: tuple) -> tuple:
+    """Hashable pipeline identity (the 'bitstream id' of a dynamic region)."""
+    return tuple(pipeline)

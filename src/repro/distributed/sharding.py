@@ -1,0 +1,239 @@
+"""Sharding rules: param/opt/batch/cache PartitionSpecs per architecture.
+
+The mesh is (data, model) single-pod or (pod, data, model) multi-pod
+(launch/mesh.py). Roles:
+
+  * batch / FSDP axis: ("pod",)+("data",) — data parallel batch sharding AND
+    ZeRO-style parameter+optimizer sharding (the *other* dim of each weight).
+  * "model" axis: tensor parallelism (heads / d_ff / experts / vocab) AND the
+    disaggregated-pool axis (far-KV sequence shards, Farview table striping).
+
+All rules are *divisibility-checked*: if a dim doesn't divide the axis size
+the axis is dropped (replicated) rather than failing — this is what lets the
+same rule table serve 10 architectures x reduced smoke configs x 4-device
+test meshes without special cases.
+
+Layout conventions (matching models/):
+  stacked group weights carry a leading G axis (never sharded);
+  "up" projections  (d_in -> big): shard in over FSDP, out over model;
+  "down" projections (big -> d_out): shard in over model, out over FSDP;
+  experts (E, d, f): E over model (expert parallelism), d over FSDP;
+  embeddings (V, d): V over model, d over FSDP;
+  norms / biases / scalars: FSDP on the last dim when divisible.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, Shape
+
+# weight-name classes ---------------------------------------------------------
+_UP_NAMES = {
+    "wq", "wk", "wv",                     # attention in-projections
+    "w_gate", "w_up",                     # GLU MLP
+    "w_in",                               # mamba2 fused in-proj
+    "w_q", "w_k", "w_v",                  # mlstm projections (square di x di)
+    "w_i", "w_f", "w_z",                  # gate projections
+    "skip",                               # mlstm learnable skip (di x di)
+}
+_DOWN_NAMES = {"wo", "w_down", "w_out", "w_o"}
+_VEC_NAMES = {"w", "a_log", "dt_bias", "d_skip", "b", "scale"}
+
+
+def dp_axes_of(mesh: Mesh) -> tuple[str, ...]:
+    """FSDP/batch axes = every mesh axis that isn't 'model'."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return True
+    if isinstance(axes, str):
+        axes = (axes,)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    return dim % total == 0 and dim >= total
+
+
+def _maybe(dim: int, mesh: Mesh, axes):
+    """Axes if divisible else None (replicate)."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        axes = (axes,)
+    # progressively drop trailing axes until it fits
+    for k in range(len(axes), 0, -1):
+        sub = axes[:k]
+        if _fits(dim, mesh, sub):
+            return sub if len(sub) > 1 else sub[0]
+    return None
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_spec(path: str, shape: tuple[int, ...], mesh: Mesh,
+               cfg: ModelConfig | None = None) -> P:
+    """PartitionSpec for one parameter leaf, by path + shape."""
+    dp = dp_axes_of(mesh)
+    name = path.split("/")[-1]
+    stacked = path.startswith("groups/")
+    lead = (None,) if stacked else ()
+    body = shape[1:] if stacked else shape
+
+    # --- embeddings / head --------------------------------------------------
+    if name == "table":                                   # (V, d)
+        v, d = body
+        return P(*lead, _maybe(v, mesh, "model"), _maybe(d, mesh, dp))
+    if "head" in path and name == "w" and len(body) == 2:  # (d, V)
+        d, v = body
+        return P(*lead, _maybe(d, mesh, dp), _maybe(v, mesh, "model"))
+
+    # --- MoE expert banks (E, d, f) / (E, f, d) ------------------------------
+    if "moe" in path and name in ("w_gate", "w_up") and len(body) == 3:
+        e, d, f = body
+        return P(*lead, _maybe(e, mesh, "model"), _maybe(d, mesh, dp), None)
+    if "moe" in path and name == "w_down" and len(body) == 3:
+        e, f, d = body
+        return P(*lead, _maybe(e, mesh, "model"), _maybe(f, mesh, dp), None)
+    if name == "router":                                  # (d, E)
+        d, e = body
+        return P(*lead, _maybe(d, mesh, dp), None)
+
+    # --- sLSTM per-head recurrent blocks (H, dh, dh) --------------------------
+    if re.fullmatch(r"r_[ifzo]", name) and len(body) == 3:
+        h = body[0]
+        return P(*lead, _maybe(h, mesh, "model"), None, None)
+
+    # --- generic matmuls ------------------------------------------------------
+    if len(body) == 2:
+        d_in, d_out = body
+        if name in _DOWN_NAMES:
+            return P(*lead, _maybe(d_in, mesh, "model"),
+                     _maybe(d_out, mesh, dp))
+        if name in _UP_NAMES or name == "w_o" or len(body) == 2:
+            # default: treat as up-projection
+            return P(*lead, _maybe(d_in, mesh, dp),
+                     _maybe(d_out, mesh, "model"))
+
+    # --- vectors / scalars ----------------------------------------------------
+    if len(body) == 1:
+        return P(*lead, _maybe(body[0], mesh, dp))
+    if len(body) == 0:
+        return P(*lead)
+    # fallback: shard last dim over dp if possible
+    spec = [None] * len(body)
+    spec[-1] = _maybe(body[-1], mesh, dp)
+    return P(*lead, *spec)
+
+
+def param_specs(params_shapes, mesh: Mesh,
+                cfg: ModelConfig | None = None):
+    """Pytree of PartitionSpec mirroring a params (or ShapeDtypeStruct) tree."""
+    def leaf_spec(path, leaf):
+        return param_spec(_path_str(path), tuple(leaf.shape), mesh, cfg)
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_shapes)
+
+
+def opt_specs(opt_shapes, pspecs):
+    """Optimizer state shardings mirror the params (step replicated)."""
+    return {"m": pspecs, "v": pspecs, "step": P()}
+
+
+# --------------------------------------------------------------------------- #
+# activations / batch / cache
+# --------------------------------------------------------------------------- #
+def batch_axes(mesh: Mesh, global_batch: int) -> tuple[str, ...] | None:
+    """Batch-sharding axes: as many dp axes as the batch divides."""
+    dp = dp_axes_of(mesh)
+    got = _maybe(global_batch, mesh, dp)
+    if got is None:
+        return None
+    return (got,) if isinstance(got, str) else tuple(got)
+
+
+def batch_specs(cfg: ModelConfig, shape: Shape, mesh: Mesh) -> dict:
+    """PartitionSpecs for one step's data batch."""
+    dp = batch_axes(mesh, shape.global_batch)
+    bs = dp if dp else None
+    specs: dict[str, P] = {}
+    kind = shape.kind
+    seq_axis = None
+    if kind in ("train", "prefill"):
+        seq_axis = _maybe(shape.seq_len, mesh, "model")
+    if cfg.embed_input:
+        specs["embeds"] = P(bs, seq_axis if kind != "decode" else None, None)
+    else:
+        specs["tokens"] = P(bs, seq_axis)
+    if cfg.n_image_tokens and kind != "decode":
+        # decode reads image KV from the prefilled cross-attn cache instead
+        specs["image_embeds"] = P(bs, None, None)
+    if kind == "train":
+        specs["labels"] = P(bs, seq_axis)
+    return specs
+
+
+def cache_specs(cache_shapes, mesh: Mesh, global_batch: int) -> Any:
+    """Decode-cache shardings.
+
+    Attention KV leaves (G, B, S, H, D): batch over dp, sequence over "model"
+    (the far pool axis). Recurrent-state leaves: batch over dp, heads over
+    "model" when divisible.
+    """
+    dp = batch_axes(mesh, global_batch)
+    bs = dp if dp else None
+
+    def leaf(path, sds):
+        shp = tuple(sds.shape)
+        name = _path_str(path).split("/")[-1]
+        if name.startswith(("k_", "v_")) and len(shp) == 5:
+            # (G, B, Hkv, S, D) pre-transposed layout: S (dim 3) is the
+            # far-pool axis
+            g, b, h, s, d = shp
+            return P(None, bs, None, _maybe(s, mesh, "model"), None)
+        if name.startswith("ssm_") and len(shp) == 5:
+            g, b, h, n, pdim = shp
+            return P(None, bs, _maybe(h, mesh, "model"), None, None)
+        if name.startswith("C_") and len(shp) == 5:      # mlstm (G,B,H,dh,dh)
+            g, b, h, d1, d2 = shp
+            return P(None, bs, _maybe(h, mesh, "model"), None, None)
+        if len(shp) >= 2:
+            return P(None, bs, *([None] * (len(shp) - 2)))
+        return P(None)
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_shapes)
+
+
+def activation_spec(mesh: Mesh, global_batch: int, *,
+                    seq_sharded: bool = True) -> P:
+    """Residual-stream constraint (B, S, d): batch over dp, seq over model
+    (Megatron-style sequence parallelism for train/prefill)."""
+    dp = batch_axes(mesh, global_batch)
+    return P(dp if dp else None, "model" if seq_sharded else None, None)
+
+
+def constrain(x, spec: P):
+    """with_sharding_constraint that is a no-op outside jit/mesh context."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)

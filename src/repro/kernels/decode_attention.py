@@ -1,0 +1,111 @@
+"""Far-KV partial attention kernel (flash-decoding over one KV-cache shard).
+
+This is the paper's operator push-down applied to LM serving: the KV cache is
+the disaggregated buffer pool, and instead of shipping raw K/V rows to the
+querying device (the "RCPU" baseline), the shard owner computes a *partial*
+softmax-weighted sum — the aggregation operator — and ships only
+(o, m, l): d_head + 2 floats per head instead of 2 * S_shard * d_head.
+
+Kernel structure (flash-decoding, TPU-native):
+  * grid = (batch, kv_heads, S_blocks); the S dimension is sequential, so the
+    output blocks (revisited every step) act as VMEM accumulators.
+  * Each step: scores = Q G-group @ K-block^t on the MXU, running-max rescale
+    on the VPU, P @ V-block accumulate on the MXU.
+  * Masking by cache length handles ragged batches (continuous batching).
+
+Outputs are *unnormalized* partials; repro.core.far_kv merges them across
+shards with a log-sum-exp weighted combine (ref.merge_partials).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_KV = 256
+NEG_INF = -1.0e30
+
+
+def _kernel(scale, block_kv, q_ref, k_ref, v_ref, len_ref,
+            o_ref, m_ref, l_ref):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...][0, 0].astype(jnp.float32)                  # (G, D)
+    k = k_ref[...][0, 0].astype(jnp.float32)                  # (T, D)
+    v = v_ref[...][0, 0].astype(jnp.float32)                  # (T, D)
+    length = len_ref[0, 0]
+
+    t = k.shape[0]
+    pos = s_idx * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (1, t), 1)                                 # (1, T)
+    valid = pos < length
+
+    scores = jax.lax.dot(q, k.T,
+                         precision=jax.lax.Precision.HIGHEST) * scale  # (G, T)
+    scores = jnp.where(valid, scores, NEG_INF)
+
+    m_prev = m_ref[...][0, 0]                                 # (G, 1)
+    l_prev = l_ref[...][0, 0]                                 # (G, 1)
+    o_prev = o_ref[...][0, 0]                                 # (G, D)
+
+    m_cur = jnp.max(scores, axis=1, keepdims=True)            # (G, 1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)                           # (G, 1)
+    p = jnp.where(valid, jnp.exp(scores - m_new), 0.0)        # (G, T)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+    o_new = o_prev * alpha + jax.lax.dot(
+        p, v, precision=jax.lax.Precision.HIGHEST)
+
+    o_ref[...] = o_new[None, None]
+    m_ref[...] = m_new[None, None]
+    l_ref[...] = l_new[None, None]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "block_kv", "interpret"))
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     lengths: jnp.ndarray, *, scale: float,
+                     block_kv: int = DEFAULT_BLOCK_KV,
+                     interpret: bool = True):
+    """q: (B, Hkv, G, D); k/v: (B, Hkv, S, D); lengths: (B, 1) int32.
+
+    S % block_kv == 0; G a multiple of 8 and D of 128 (wrapper pads).
+    Returns partials o (B, Hkv, G, D) f32, m (B, Hkv, G, 1), l (B, Hkv, G, 1).
+    """
+    b, hkv, g, d = q.shape
+    s = k.shape[2]
+    assert s % block_kv == 0, (s, block_kv)
+    nsb = s // block_kv
+    kern = functools.partial(_kernel, scale, block_kv)
+    return pl.pallas_call(
+        kern,
+        grid=(b, hkv, nsb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, hi, si: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda bi, hi, si: (bi, hi, si, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda bi, hi, si: (bi, hi, si, 0)),
+            pl.BlockSpec((1, 1), lambda bi, hi, si: (bi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, hi, si: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, g, 1), lambda bi, hi, si: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, g, 1), lambda bi, hi, si: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, lengths)

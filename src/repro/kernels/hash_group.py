@@ -1,0 +1,179 @@
+"""Distinct / group-by / aggregation kernel (paper §5.4).
+
+TPU adaptation of Farview's cuckoo-hash + LRU-shift-register design:
+
+  * FPGA BRAM hash tables -> a bucket table resident in VMEM across the whole
+    grid (the output blocks are revisited by every grid step, so they act as
+    on-chip accumulators, exactly like Farview's on-chip hash state).
+  * hash lookups -> one-hot *matmuls* on the MXU. A (buckets x rows) one-hot
+    matrix aggregates counts and sums in one dot; bucket "claims" (which key
+    owns a bucket) are also resolved with one-hot matmuls over the 16-bit
+    halves of the key so that f32 MXU arithmetic stays exact.
+  * cuckoo collision eviction -> rows whose key differs from the bucket
+    owner's key are flagged as *overflow* and shipped to the client for
+    software post-aggregation — the same observable contract as the paper's
+    collision buffer.
+  * the LRU shift register (hazard protection) is unnecessary: the whole
+    block is aggregated associatively in one step, so read-after-write
+    hazards between consecutive tuples cannot occur.
+
+Aggregates: count, sum, min, max (avg = sum/count client-side, as in ops.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref
+
+DEFAULT_BLOCK_ROWS = 256
+_BIG = np.float32(3.0e38)
+_SENT = np.int32(ref.KEY_SENTINEL)
+
+
+def _halves(keys_u32):
+    hi = (keys_u32 >> np.uint32(16)).astype(jnp.float32)
+    lo = (keys_u32 & np.uint32(0xFFFF)).astype(jnp.float32)
+    return hi, lo
+
+
+def _recombine(hi_f, lo_f):
+    hi = jnp.round(hi_f).astype(jnp.uint32)
+    lo = jnp.round(lo_f).astype(jnp.uint32)
+    return ((hi << np.uint32(16)) | lo).astype(jnp.int32)
+
+
+def _kernel(n_buckets, keys_ref, vals_ref, bkey_ref, cnt_ref, sum_ref,
+            min_ref, max_ref, ovf_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        bkey_ref[...] = jnp.full_like(bkey_ref, _SENT)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        min_ref[...] = jnp.full_like(min_ref, _BIG)
+        max_ref[...] = jnp.full_like(max_ref, -_BIG)
+
+    keys = keys_ref[...][:, 0]                                # (R,) int32
+    vals = vals_ref[...]                                      # (R, V) f32
+    r = keys.shape[0]
+    b = n_buckets
+
+    ku = keys.astype(jnp.uint32)
+    h = (ku * np.uint32(0x9E3779B1)) >> np.uint32(32 - int(np.log2(b)))
+    bucket = h.astype(jnp.int32)                              # (R,)
+
+    # one-hot (B, R): bucket membership, built on the VPU.
+    iota_b = jax.lax.broadcasted_iota(jnp.int32, (b, r), 0)
+    member = (bucket[None, :] == iota_b)                      # (B, R) bool
+
+    # --- per-block claimant: lowest row index in each bucket ----------------
+    iota_r = jax.lax.broadcasted_iota(jnp.int32, (b, r), 1)
+    first_idx = jnp.min(jnp.where(member, iota_r, r), axis=1)  # (B,)
+    nonempty = first_idx < r
+    first_sel = (iota_r == first_idx[:, None]) & member        # (B, R) one-hot
+    fsel_f = first_sel.astype(jnp.float32)
+    khi, klo = _halves(ku)
+    blk_hi = jax.lax.dot(fsel_f, khi[:, None],
+                         precision=jax.lax.Precision.HIGHEST)[:, 0]
+    blk_lo = jax.lax.dot(fsel_f, klo[:, None],
+                         precision=jax.lax.Precision.HIGHEST)[:, 0]
+    blk_key = jnp.where(nonempty, _recombine(blk_hi, blk_lo), _SENT)
+
+    # --- merge with the global bucket table (claim if empty) ---------------
+    cur = bkey_ref[...][:, 0]
+    newkey = jnp.where(cur == _SENT, blk_key, cur)
+    bkey_ref[...] = newkey[:, None]
+
+    # --- ownership: does each row's key match its bucket's owner? ----------
+    # gather owner key per row with exact one-hot matmuls over 16-bit halves
+    mem_f = member.astype(jnp.float32)                        # (B, R)
+    ohi, olo = _halves(newkey.astype(jnp.uint32))
+    row_hi = jax.lax.dot(ohi[None, :], mem_f,
+                         precision=jax.lax.Precision.HIGHEST)[0]
+    row_lo = jax.lax.dot(olo[None, :], mem_f,
+                         precision=jax.lax.Precision.HIGHEST)[0]
+    owner_key = _recombine(row_hi, row_lo)                    # (R,)
+    owns = keys == owner_key
+    ovf_ref[...] = (~owns).astype(jnp.int32)[:, None]
+
+    owned = member & owns[None, :]                            # (B, R)
+    owned_f = owned.astype(jnp.float32)
+
+    # --- aggregate on the MXU ----------------------------------------------
+    cnt_ref[...] = cnt_ref[...] + jnp.round(jax.lax.dot(
+        owned_f, jnp.ones((r, 1), jnp.float32),
+        precision=jax.lax.Precision.HIGHEST)).astype(jnp.int32)
+    sum_ref[...] = sum_ref[...] + jax.lax.dot(
+        owned_f, vals.astype(jnp.float32),
+        precision=jax.lax.Precision.HIGHEST)
+
+    # --- min/max: masked reductions, bucket-chunked to bound VMEM ----------
+    nv = vals.shape[1]
+    chunk = min(32, b)
+    valsf = vals.astype(jnp.float32)
+
+    def mm_step(i, carry):
+        cmin, cmax = carry
+        own_c = jax.lax.dynamic_slice(owned, (i * chunk, 0), (chunk, r))
+        sel = own_c[:, :, None]                               # (c, R, 1)
+        vmin = jnp.min(jnp.where(sel, valsf[None], _BIG), axis=1)
+        vmax = jnp.max(jnp.where(sel, valsf[None], -_BIG), axis=1)
+        cmin = jax.lax.dynamic_update_slice(cmin, vmin, (i * chunk, 0))
+        cmax = jax.lax.dynamic_update_slice(cmax, vmax, (i * chunk, 0))
+        return cmin, cmax
+
+    blk_min, blk_max = jax.lax.fori_loop(
+        0, b // chunk, mm_step,
+        (jnp.full((b, nv), _BIG), jnp.full((b, nv), -_BIG)))
+    min_ref[...] = jnp.minimum(min_ref[...], blk_min)
+    max_ref[...] = jnp.maximum(max_ref[...], blk_max)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_buckets", "block_rows", "interpret"))
+def group_aggregate(keys: jnp.ndarray, values: jnp.ndarray, *,
+                    n_buckets: int = 1024,
+                    block_rows: int = DEFAULT_BLOCK_ROWS,
+                    interpret: bool = True):
+    """keys (N,1) int32, values (N,V) f32; N % block_rows == 0.
+
+    Returns (bucket_keys (B,1) i32, count (B,1) i32, sum (B,V) f32,
+             min (B,V) f32, max (B,V) f32, overflow_mask (N,1) i32).
+    """
+    n, _ = keys.shape
+    v = values.shape[1]
+    assert n % block_rows == 0
+    assert n_buckets & (n_buckets - 1) == 0, "n_buckets must be a power of 2"
+    nb = n // block_rows
+    kern = functools.partial(_kernel, n_buckets)
+    return pl.pallas_call(
+        kern,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, v), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n_buckets, 1), lambda i: (0, 0)),
+            pl.BlockSpec((n_buckets, 1), lambda i: (0, 0)),
+            pl.BlockSpec((n_buckets, v), lambda i: (0, 0)),
+            pl.BlockSpec((n_buckets, v), lambda i: (0, 0)),
+            pl.BlockSpec((n_buckets, v), lambda i: (0, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_buckets, 1), jnp.int32),
+            jax.ShapeDtypeStruct((n_buckets, 1), jnp.int32),
+            jax.ShapeDtypeStruct((n_buckets, v), jnp.float32),
+            jax.ShapeDtypeStruct((n_buckets, v), jnp.float32),
+            jax.ShapeDtypeStruct((n_buckets, v), jnp.float32),
+            jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(keys, values)

@@ -1,0 +1,75 @@
+"""Small-table join kernel (the paper's stated future work, §Conclusions:
+"performing joins against small tables in the memory by reading the small
+table into the FPGA and matching the tuples read from memory against it").
+
+TPU adaptation: the build side lives in VMEM across all grid steps (the
+FPGA on-chip-table analogue); the probe stream is matched per block with a
+one-hot key-equality matmul on the MXU:
+
+    M[i, j]  = (probe_key_i == build_key_j)          (VPU compare)
+    joined   = M @ build_values                       (MXU gather-by-match)
+    matched  = row_sum(M) > 0
+
+Build keys must be unique (enforced by the ops.py wrapper): each probe row
+matches at most one build row, so M is one-hot per row and the matmul IS
+the value gather. 16-bit key halves keep the f32 compare exact (same trick
+as hash_group).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _kernel(probe_ref, bkey_ref, bval_ref, out_ref, hit_ref):
+    pk = probe_ref[...][:, 0]                                 # (R,) i32
+    bk = bkey_ref[...][:, 0]                                  # (K,) i32
+    bv = bval_ref[...]                                        # (K, V) f32
+
+    match = (pk[:, None] == bk[None, :])                      # (R, K) bool
+    m_f = match.astype(jnp.float32)
+    joined = jax.lax.dot(m_f, bv,
+                         precision=jax.lax.Precision.HIGHEST)  # (R, V)
+    hits = jnp.sum(m_f, axis=1, keepdims=True)                # (R, 1)
+    out_ref[...] = joined
+    hit_ref[...] = (hits > 0.5).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def hash_join(probe_keys: jnp.ndarray, build_keys: jnp.ndarray,
+              build_vals: jnp.ndarray, *,
+              block_rows: int = DEFAULT_BLOCK_ROWS,
+              interpret: bool = True):
+    """probe_keys (N,1) i32; build_keys (K,1) i32 (unique);
+    build_vals (K,V) f32. N % block_rows == 0 (wrapper pads).
+
+    Returns (joined (N,V) f32 — matched build values, 0 where no match;
+             hit (N,1) i32 — 1 where the probe key exists in the build).
+    """
+    n = probe_keys.shape[0]
+    k, v = build_vals.shape
+    assert n % block_rows == 0
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+            pl.BlockSpec((k, 1), lambda i: (0, 0)),       # build side: VMEM
+            pl.BlockSpec((k, v), lambda i: (0, 0)),       # resident per step
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, v), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, v), jnp.float32),
+            jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(probe_keys, build_keys, build_vals)

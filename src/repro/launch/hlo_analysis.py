@@ -1,0 +1,526 @@
+"""Trip-count-aware FLOP / HBM-byte / collective-byte analysis of compiled HLO.
+
+Why this exists: `compiled.cost_analysis()` counts each `while` body ONCE,
+regardless of trip count (verified empirically: a lax.scan of 10 matmuls
+reports the flops of 1). Every model here scans over layer groups, KV chunks,
+and CE chunks, so raw cost_analysis under-counts by 10-100x. The compiled
+HLO text, however, carries `backend_config={"known_trip_count":{"n":"N"}}`
+on every while op, so an exact accounting is recoverable:
+
+  cost(entry) where
+    cost(while)       = trip * (cost(body) + cost(cond))
+    cost(fusion|call) = flops: recurse into called computation;
+                        bytes: boundary operands + result, slice/alias-aware
+                        (a fusion that only dynamic-slices a stacked-params
+                        buffer reads just the slice; a fusion whose root
+                        updates an accumulator in place touches only the
+                        update bytes — XLA aliases both patterns)
+    cost(dot)         = flops: 2 * prod(result) * prod(contracted dims)
+                        bytes: operands + result
+    cost(collective)  = operand bytes by op class (+ ring link-bytes model)
+    cost(elementwise) = flops: ~1/element; bytes: operands + result
+
+Shapes in the compiled module are per-partition (post-GSPMD), so every
+number reported here is PER DEVICE per step. `HloAnalyzer.hotspots()` is
+the dry-run "profile" that the §Perf hypothesis loop reads.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+# one instruction:  %name = TYPE opcode(operands), attrs
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\((.*?)\)\s*->")
+_TRIP_RE = re.compile(r'known_trip_count.{0,4}:.{0,4}n.{0,4}:.{0,3}"(\d+)"')
+_CALLS_RE = re.compile(r"calls=%([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w.\-]+)")
+_OPERAND_NAME_RE = re.compile(r"%([\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+?)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# opcodes that move no bytes / do no work.
+# "convert" is free by design: the CPU backend has no native bf16, so XLA
+# legalizes every bf16 dot/fusion by inserting f32 convert round-trips (it
+# even keeps whole while-loop carries in f32). On the TPU TARGET none of
+# those converts exist (bf16 is a native MXU/VPU type) and genuine dtype
+# casts fuse into their consumers. Operand byte accounting resolves THROUGH
+# convert chains to the source dtype, so values are costed at their true
+# (TPU) width.
+_FREE = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+         "convert", "after-all", "partition-id", "replica-id", "iota",
+         "rng-bit-generator", "add-dependency", "domain", "opt-barrier"}
+
+_TRANSCENDENTAL = {"exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+                   "sine", "cosine", "logistic", "expm1", "log1p", "atan2",
+                   "cbrt", "erf", "exponential-minus-one"}
+
+_MOVE_OPS = {"copy", "copy-start", "copy-done", "transpose", "reshape",
+             "concatenate", "pad", "reverse", "sort", "reduce",
+             "reduce-window", "select-and-scatter", "map", "cholesky",
+             "triangular-solve", "custom-call", "convert", "scatter"}
+
+
+def _shape_of(type_str: str):
+    """All dtype[dims] groups in a type string -> [(dtype, [dims]), ...]."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        d = [int(x) for x in dims.split(",")] if dims else []
+        out.append((dt, d))
+    return out
+
+
+def _nbytes(shapes) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _nelems(shapes) -> int:
+    total = 0
+    for _, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_shapes: list            # [(dtype, dims), ...]
+    operand_names: list[str]
+    line: str
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    transcendentals: float = 0.0
+    hbm_bytes: float = 0.0
+    coll: dict = field(default_factory=lambda: {c: 0.0 for c in COLLECTIVES})
+    link_bytes: float = 0.0
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.transcendentals += other.transcendentals * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        for c in COLLECTIVES:
+            self.coll[c] += other.coll[c] * mult
+        self.link_bytes += other.link_bytes * mult
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.coll.values())
+
+    def as_dict(self) -> dict:
+        d = {"flops": self.flops, "transcendentals": self.transcendentals,
+             "hbm_bytes": self.hbm_bytes, "link_bytes": self.link_bytes}
+        d["collectives"] = {k: v for k, v in self.coll.items()}
+        d["collective_bytes"] = self.collective_bytes
+        return d
+
+
+class HloAnalyzer:
+    def __init__(self, hlo_text: str):
+        self.computations: dict[str, list[Instr]] = {}
+        self.entry: str | None = None
+        self._cost_cache: dict[tuple[str, bool], Cost] = {}
+        self._promo_cache: dict[str, bool] = {}
+        self._parse(hlo_text)
+
+    # ------------------------------------------------------------------ parse
+    def _parse(self, text: str):
+        cur: list[Instr] | None = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line:
+                continue
+            hdr = _COMP_HDR_RE.match(line)
+            if hdr and line.endswith("{"):
+                cur = []
+                self.computations[hdr.group(1)] = cur
+                if line.startswith("ENTRY"):
+                    self.entry = hdr.group(1)
+                continue
+            if line.startswith("}"):
+                cur = None
+                continue
+            if cur is None:
+                continue
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            name, type_str, opcode, rest = m.groups()
+            depth, end = 1, len(rest)
+            for i, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            ops = _OPERAND_NAME_RE.findall(rest[:end])
+            cur.append(Instr(name=name, opcode=opcode,
+                             result_shapes=_shape_of(type_str),
+                             operand_names=ops, line=line))
+
+    # ------------------------------------------------------------- dot flops
+    def _dot_flops(self, instr: Instr, symtab: dict) -> float:
+        out_elems = _nelems(instr.result_shapes)
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.line)
+        lhs = symtab.get(instr.operand_names[0]) \
+            if instr.operand_names else None
+        if not m or lhs is None:
+            return 2.0 * out_elems
+        cdims = [int(x) for x in m.group(1).split(",") if x]
+        _, ldims = lhs[0]
+        k = 1
+        for c in cdims:
+            if c < len(ldims):
+                k *= ldims[c]
+        return 2.0 * out_elems * k
+
+    # -------------------------------------------------------- per-instruction
+    def _instr_cost(self, ins: Instr, symtab: dict, *,
+                    inside_fusion: bool = False) -> Cost:
+        total = Cost()
+        op = ins.opcode
+        if op in _FREE or op == "while":
+            return total              # while handled by caller (multiplicity)
+        res_b = _nbytes(ins.result_shapes)
+        opd_b = sum(_nbytes(symtab[o]) for o in ins.operand_names
+                    if o in symtab)
+        io_b = 0.0 if inside_fusion else float(res_b + opd_b)
+
+        if op in ("fusion", "call", "async-start"):
+            mc = _CALLS_RE.search(ins.line)
+            if mc:
+                if ins.opcode == "fusion" and \
+                        self._is_promotion_fusion(mc.group(1)):
+                    return total               # CPU bf16-emulation artifact
+                inner = self.cost_of(mc.group(1), inside_fusion=True)
+                total.add(inner)
+                if not inside_fusion:
+                    pb, out_override = self._fusion_param_bytes(
+                        mc.group(1), ins, symtab)
+                    out_b = res_b if out_override is None else out_override
+                    total.hbm_bytes += out_b + pb
+            return total
+        if op == "conditional":
+            branches = re.search(r"branch_computations=\{([^}]*)\}", ins.line)
+            if branches:
+                names = _OPERAND_NAME_RE.findall(branches.group(1))
+                costs = [self.cost_of(n) for n in names]
+                if costs:
+                    total.add(max(costs, key=lambda c: c.flops + c.hbm_bytes))
+            total.hbm_bytes += io_b
+            return total
+        if op in COLLECTIVES:
+            # size from RESOLVED operand bytes (symtab follows convert
+            # chains to the source dtype): a bf16 tensor the CPU backend
+            # promoted to f32 still moves bf16 on the TPU target.
+            g = self._group_size(ins.line)
+            base = float(opd_b or res_b)
+            if op == "all-gather":
+                operand = base
+                link = base * (g - 1)
+            elif op == "reduce-scatter":
+                operand = base
+                link = base * (g - 1) / max(g, 1)
+            elif op == "all-reduce":
+                operand = base
+                link = 2.0 * base * (g - 1) / max(g, 1)
+            else:                      # all-to-all, collective-permute
+                operand = base
+                link = base
+            total.coll[op] += operand
+            total.link_bytes += link
+            total.hbm_bytes += io_b
+            return total
+        if op in ("dot", "convolution"):
+            total.flops += self._dot_flops(ins, symtab)
+            total.hbm_bytes += io_b
+            return total
+        # aliasing / partial-touch data movement:
+        if op in ("slice", "dynamic-slice"):
+            if not inside_fusion:
+                total.hbm_bytes += 2.0 * res_b
+            return total
+        if op == "dynamic-update-slice":
+            if not inside_fusion:
+                upd = (ins.operand_names[1]
+                       if len(ins.operand_names) > 1 else None)
+                upd_b = _nbytes(symtab.get(upd, [])) if upd else res_b
+                total.hbm_bytes += 2.0 * upd_b
+            return total
+        if op == "gather":
+            if not inside_fusion:
+                total.hbm_bytes += 2.0 * res_b
+            return total
+        if op == "broadcast":
+            if not inside_fusion:
+                total.hbm_bytes += res_b + opd_b
+            return total
+        if op in _MOVE_OPS:
+            if op in ("reduce", "map", "sort", "scatter"):
+                total.flops += _nelems(
+                    [symtab[o][0] for o in ins.operand_names
+                     if o in symtab and symtab[o]])
+            total.hbm_bytes += io_b
+            return total
+        # elementwise and everything else: 1 flop per output element
+        ne = _nelems(ins.result_shapes)
+        total.flops += ne
+        if op in _TRANSCENDENTAL:
+            total.transcendentals += ne
+        total.hbm_bytes += io_b
+        return total
+
+    def _is_promotion_fusion(self, comp_name: str) -> bool:
+        """True when a fused computation only re-types/reshapes data
+        (convert/bitcast/reshape/copy/slice-of-full): a CPU bf16-emulation
+        artifact with no TPU counterpart. Costed as free."""
+        if comp_name in self._promo_cache:
+            return self._promo_cache[comp_name]
+        ok = True
+        for i in self.computations.get(comp_name, []):
+            if i.opcode in ("parameter", "constant", "tuple",
+                            "get-tuple-element", "bitcast", "convert",
+                            "reshape", "copy", "broadcast"):
+                continue
+            ok = False
+            break
+        self._promo_cache[comp_name] = ok
+        return ok
+
+    def _resolved_symtab(self, instrs) -> dict:
+        """name -> result_shapes, with convert/bitcast chains (incl.
+        convert-only fusions) resolved to their source so operands are
+        costed at source (TPU) width."""
+        symtab = {i.name: i.result_shapes for i in instrs}
+        alias = {}
+        for i in instrs:
+            if i.opcode in ("convert", "bitcast") and i.operand_names:
+                alias[i.name] = i.operand_names[0]
+            elif i.opcode == "fusion" and i.operand_names:
+                mc = _CALLS_RE.search(i.line)
+                if mc and self._is_promotion_fusion(mc.group(1)):
+                    alias[i.name] = i.operand_names[0]
+        out = {}
+        for name, shapes in symtab.items():
+            cur, hops = name, 0
+            while cur in alias and hops < 20:
+                cur = alias[cur]
+                hops += 1
+            out[name] = symtab.get(cur, shapes)
+        return out
+
+    # ------------------------------------------------------------- cost walk
+    def cost_of(self, comp_name: str, *, inside_fusion: bool = False) -> Cost:
+        key = (comp_name, inside_fusion)
+        if key in self._cost_cache:
+            return self._cost_cache[key]
+        total = Cost()
+        instrs = self.computations.get(comp_name, [])
+        symtab = self._resolved_symtab(instrs)
+        for ins in instrs:
+            if ins.opcode == "while":
+                trip = 1
+                mt = _TRIP_RE.search(ins.line)
+                if mt:
+                    trip = int(mt.group(1))
+                body = _BODY_RE.search(ins.line)
+                cond = _COND_RE.search(ins.line)
+                if body:
+                    total.add(self.cost_of(body.group(1)), trip)
+                if cond:
+                    total.add(self.cost_of(cond.group(1)), trip)
+                continue
+            total.add(self._instr_cost(ins, symtab,
+                                       inside_fusion=inside_fusion))
+        self._cost_cache[key] = total
+        return total
+
+    def _fusion_param_bytes(self, comp_name: str, call: Instr,
+                            caller_symtab: dict) -> float:
+        """Bytes a fusion actually reads from each boundary operand.
+
+        Follows bitcast/reshape/copy aliases transitively. If every terminal
+        use of parameter(i) is a (dynamic-)slice, only the slice bytes leave
+        HBM; if a use is a dynamic-update-slice whose target aliases the
+        param (in-place accumulator), only ~the update bytes are touched —
+        and when that DUS is the fusion ROOT, the fusion *output* is aliased
+        to the input too, so the returned out_override replaces the result
+        bytes with the update bytes.
+
+        Returns (param_read_bytes, out_bytes_override | None).
+        """
+        instrs = self.computations.get(comp_name, [])
+        symtab = {i.name: i.result_shapes for i in instrs}
+        params: dict[int, str] = {}
+        for i in instrs:
+            if i.opcode == "parameter":
+                m = re.search(r"parameter\((\d+)\)", i.line)
+                if m:
+                    params[int(m.group(1))] = i.name
+        root = None
+        for i in instrs:
+            if "ROOT" in i.line.split("=")[0]:
+                root = i
+        # unwrap convert/bitcast roots: ROOT convert(DUS(...)) is still an
+        # in-place update on the TPU target
+        by_name = {i.name: i for i in instrs}
+        seen_root = set()
+        while (root is not None
+               and root.opcode in ("convert", "bitcast", "reshape", "copy")
+               and root.operand_names
+               and root.name not in seen_root):
+            seen_root.add(root.name)
+            nxt = by_name.get(root.operand_names[0])
+            if nxt is None:
+                break
+            root = nxt
+        total = 0.0
+        out_override = None
+        for idx, pname in params.items():
+            if idx >= len(call.operand_names):
+                continue
+            full = float(_nbytes(caller_symtab.get(call.operand_names[idx],
+                                                   [])))
+            alias = {pname}
+            changed = True
+            # "convert" is transparent here: XLA CPU emulates bf16 by
+            # promoting fusion internals to f32 (convert(param) wrappers
+            # around slice/update chains); on the TPU target those converts
+            # do not exist, so they must not break in-place detection.
+            _transparent = ("bitcast", "reshape", "copy", "convert")
+            while changed:
+                changed = False
+                for i in instrs:
+                    if (i.opcode in _transparent
+                            and i.name not in alias
+                            and any(o in alias for o in i.operand_names)):
+                        alias.add(i.name)
+                        changed = True
+            per_use = 0.0
+            sliced_only = True
+            for u in instrs:
+                if u.opcode in _transparent:
+                    continue
+                if not any(o in alias for o in u.operand_names):
+                    continue
+                if u.opcode in ("slice", "dynamic-slice"):
+                    per_use = max(per_use, float(_nbytes(u.result_shapes)))
+                elif (u.opcode == "dynamic-update-slice"
+                      and u.operand_names and u.operand_names[0] in alias):
+                    upd = (_nbytes(symtab.get(u.operand_names[1], []))
+                           if len(u.operand_names) > 1 else 0)
+                    per_use = max(per_use, float(upd))
+                    if root is not None and u.name == root.name:
+                        # in-place accumulator: output aliases this param
+                        out_override = float(upd)
+                else:
+                    sliced_only = False
+                    break
+            total += per_use if sliced_only else full
+        return total, out_override
+
+    @staticmethod
+    def _group_size(line: str) -> int:
+        m = _GROUPS_RE.search(line)
+        if m:
+            return max(1, int(m.group(2)))
+        m = _GROUPS_LIST_RE.search(line)
+        if m:
+            return max(1, len(m.group(1).split(",")))
+        return 1
+
+    def entry_cost(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self.cost_of(self.entry)
+
+    # ------------------------------------------------------------- hotspots
+    def multiplicities(self) -> dict[str, float]:
+        """Execution count of each computation (trip counts down the graph)."""
+        mult: dict[str, float] = {self.entry: 1.0}
+        changed = True
+        for _ in range(30):            # call graph is shallow; iterate to fix
+            if not changed:
+                break
+            changed = False
+            for cn, instrs in self.computations.items():
+                m = mult.get(cn)
+                if m is None:
+                    continue
+                for ins in instrs:
+                    trip = 1
+                    mt = _TRIP_RE.search(ins.line)
+                    if mt:
+                        trip = int(mt.group(1))
+                    for pat in (_CALLS_RE, _BODY_RE, _COND_RE):
+                        mm = pat.search(ins.line)
+                        if mm:
+                            sub = mm.group(1)
+                            new = m * trip
+                            if mult.get(sub, 0.0) < new:
+                                mult[sub] = new
+                                changed = True
+        return mult
+
+    def hotspots(self, metric: str = "hbm_bytes", top: int = 20) -> list:
+        """Top instructions by metric x multiplicity, using the SAME rules
+        as cost_of. Returns [(value, mult, opcode, line_prefix), ...] —
+        this is the dry-run 'profile' the §Perf hypothesis loop reads."""
+        mult = self.multiplicities()
+        # computations reached via calls= are fusion bodies: their
+        # instructions are accounted at the CALL site, not individually.
+        fusion_comps = set()
+        for instrs in self.computations.values():
+            for ins in instrs:
+                if ins.opcode in ("fusion", "call", "async-start"):
+                    mc = _CALLS_RE.search(ins.line)
+                    if mc:
+                        fusion_comps.add(mc.group(1))
+        rows = []
+        for cn, instrs in self.computations.items():
+            m = mult.get(cn, 0.0)
+            if m <= 0 or cn in fusion_comps:
+                continue
+            symtab = self._resolved_symtab(instrs)
+            for ins in instrs:
+                if ins.opcode == "while":
+                    continue
+                c = self._instr_cost(ins, symtab, inside_fusion=False)
+                v = (c.collective_bytes if metric == "collective_bytes"
+                     else getattr(c, metric))
+                if v > 0:
+                    rows.append((v * m, m, ins.opcode,
+                                 ins.line.strip()[:160]))
+        rows.sort(key=lambda r: -r[0])
+        return rows[:top]
+
+
+def analyze(hlo_text: str) -> dict:
+    """One-call API: per-device {flops, hbm_bytes, collectives, link_bytes}."""
+    return HloAnalyzer(hlo_text).entry_cost().as_dict()

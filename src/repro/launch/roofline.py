@@ -1,0 +1,133 @@
+"""Roofline table generator: launch_results/*.json -> markdown tables.
+
+    PYTHONPATH=src python -m repro.launch.roofline [--mesh pod]
+
+Per (arch x shape) cell on the single-pod mesh (per the assignment: the
+roofline table is single-pod; the multi-pod pass only proves the "pod"
+axis shards):
+
+  compute    = scaled_flops_per_device / 197e12         [s]
+  memory     = scaled_hbm_bytes_per_device / 819e9      [s]
+  collective = scaled_coll_bytes_per_device / 50e9      [s]
+  dominant   = argmax of the three
+  MODEL_FLOPS / HLO_FLOPS  (useful-compute ratio; catches remat waste)
+  roofline fraction = compute / max(all three) — the headline score.
+
+All inputs are trip-count-scaled per-device numbers from hlo_analysis (raw
+cost_analysis counts while bodies once; see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import ARCHS, SHAPES
+from repro.launch.dryrun import RESULT_DIR
+from repro.launch.mesh import HW
+
+
+def load_cells(result_dir: str, mesh: str, tag: str = "") -> dict:
+    cells = {}
+    for path in glob.glob(os.path.join(result_dir, "*.json")):
+        rec = json.load(open(path))
+        if not isinstance(rec, dict):      # side-car files (comparisons)
+            continue
+        if rec.get("mesh") != mesh or rec.get("tag", "") != (tag or ""):
+            continue
+        if rec.get("kv_mode", "far") != "far":
+            continue
+        cells[(rec["arch"], rec["shape"])] = rec
+    return cells
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.3g}us"
+    if x < 1:
+        return f"{x*1e3:.3g}ms"
+    return f"{x:.3g}s"
+
+
+def one_sentence(rec: dict) -> str:
+    """What would move the dominant term down (per-cell heuristic note)."""
+    r = rec["roofline"]
+    dom = r["dominant"]
+    shape = rec["shape"]
+    arch = rec["arch"]
+    if dom == "memory":
+        if "decode" in shape or "long" in shape:
+            return ("decode reads the whole KV/state working set per token; "
+                    "fuse attention (Pallas) and quantize the cache to cut "
+                    "bytes")
+        return ("f32 attention-score / scan-state tensors round-trip HBM; "
+                "fused (flash) attention kernels and bf16 intermediates cut "
+                "the traffic")
+    if dom == "collective":
+        if rec.get("params_total", 0) > 1e10 or "moe" in arch:
+            return ("expert all-to-all + grad all-reduce dominate; overlap "
+                    "a2a with expert compute and reduce-scatter grads in "
+                    "bf16")
+        return ("grad all-reduce dominates; reduce-scatter + int8 "
+                "compression on the DP axis")
+    return ("MXU-bound: raise arithmetic intensity per chip (bigger "
+            "per-device batch) or accept — this is the roofline")
+
+
+def markdown_table(cells: dict) -> str:
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "MODEL/HLO flops | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCHS:
+        for shape in SHAPES:
+            rec = cells.get((arch, shape))
+            if rec is None:
+                lines.append(f"| {arch} | {shape} | — | — | — | — | — | "
+                             f"(missing) |")
+                continue
+            if rec["status"] == "skipped":
+                lines.append(f"| {arch} | {shape} | — | — | — | — | — | "
+                             f"skipped: full attn @500k |")
+                continue
+            r = rec["roofline"]
+            lines.append(
+                f"| {arch} | {shape} | {fmt_s(r['t_compute_s'])} | "
+                f"{fmt_s(r['t_memory_s'])} | {fmt_s(r['t_collective_s'])} | "
+                f"{r['dominant']} | {r['useful_flops_ratio']:.2f} | "
+                f"{r['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def notes_table(cells: dict) -> str:
+    lines = ["| arch x shape | dominant | what moves it down |",
+             "|---|---|---|"]
+    for (arch, shape), rec in sorted(cells.items()):
+        if rec["status"] != "ok":
+            continue
+        r = rec["roofline"]
+        lines.append(f"| {arch} x {shape} | {r['dominant']} | "
+                     f"{one_sentence(rec)} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod", choices=("pod", "multipod"))
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--dir", default=RESULT_DIR)
+    ap.add_argument("--notes", action="store_true")
+    args = ap.parse_args()
+    cells = load_cells(args.dir, args.mesh, args.tag)
+    print(markdown_table(cells))
+    if args.notes:
+        print()
+        print(notes_table(cells))
+
+
+if __name__ == "__main__":
+    main()

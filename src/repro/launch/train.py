@@ -1,0 +1,71 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container it trains reduced configs end-to-end (the quickstart /
+examples path). On a real fleet the SAME driver runs the full config: the
+mesh comes from make_production_mesh(), shardings from distributed/sharding,
+and the loop from runtime/train_loop (restore-on-start, preemption hook,
+async checkpoints). XLA latency-hiding flags for real TPU runs:
+
+    LIBTPU_INIT_ARGS="--xla_tpu_enable_async_collective_fusion=true
+      --xla_tpu_enable_async_collective_fusion_fuse_all_gather=true
+      --xla_tpu_overlap_compute_collective_tc=true
+      --xla_enable_async_all_gather=true"
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--smoke", action="store_true", default=True,
+                    help="use the reduced same-family config (CPU)")
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compression", default="none",
+                    choices=("none", "int8_ef"))
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_train")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.configs.base import TrainConfig, smoke_config
+    from repro.data.pipeline import TokenPipeline
+    from repro.models.lm import LM
+    from repro.runtime.train_loop import TrainLoop
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+    tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
+                       warmup_steps=max(1, args.steps // 10),
+                       checkpoint_dir=args.checkpoint_dir,
+                       checkpoint_every=args.checkpoint_every,
+                       grad_compression=args.grad_compression,
+                       seed=args.seed)
+    lm = LM(cfg)
+    pipe = TokenPipeline(vocab=cfg.vocab, seq_len=args.seq,
+                         global_batch=args.batch, seed=args.seed)
+    loop = TrainLoop(lm, tcfg, pipe, microbatches=args.microbatches)
+    print(f"training {args.arch} ({'smoke' if args.smoke else 'full'}) "
+          f"for {args.steps} steps on {jax.device_count()} device(s)")
+    stats = loop.run(args.steps)
+    losses = stats.losses
+    k = max(1, len(losses) // 10)
+    print(f"steps={stats.steps_done} restarts={stats.restarts} "
+          f"nan_events={stats.nan_events}")
+    print(f"loss: first10={np.mean(losses[:k]):.4f} "
+          f"last10={np.mean(losses[-k:]):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Modality frontend STUBS (per assignment spec).
+
+[audio] musicgen-large and [vlm] llama-3.2-vision specify the transformer
+BACKBONE only; the modality frontend supplies precomputed embeddings:
+
+  * musicgen: EnCodec frame embeddings. The real model sums 4 codebook
+    embeddings per frame with a delay pattern; the stub emits the summed
+    (B, S, d_model) frame embedding directly (deterministic from seed).
+  * llama-3.2-vision: ViT patch/tile embeddings projected to d_model,
+    (B, n_image_tokens, d_model).
+
+`input_specs()` (configs/__init__.py) returns ShapeDtypeStructs for these;
+the generators below produce concrete deterministic arrays for smoke tests
+and examples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def audio_frame_embeddings(cfg: ModelConfig, batch: int, seq: int,
+                           seed: int = 0, dtype=jnp.bfloat16):
+    key = jax.random.PRNGKey(seed)
+    return (jax.random.normal(key, (batch, seq, cfg.d_model), jnp.float32)
+            * 0.02).astype(dtype)
+
+
+def image_patch_embeddings(cfg: ModelConfig, batch: int, seed: int = 0,
+                           dtype=jnp.bfloat16):
+    key = jax.random.PRNGKey(seed + 1)
+    return (jax.random.normal(
+        key, (batch, cfg.n_image_tokens, cfg.d_model), jnp.float32)
+        * 0.02).astype(dtype)

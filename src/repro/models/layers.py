@@ -1,0 +1,294 @@
+"""Shared transformer layers: norms, RoPE, attention, GLU MLPs.
+
+Pure-functional JAX (init_* return param pytrees; apply fns take them).
+Attention is implemented flash-style (online softmax over KV chunks via
+lax.scan) so 32k-token prefill never materializes (S, S) score matrices —
+this is what keeps the dry-run memory_analysis honest at long context.
+
+Conventions:
+  * params are dicts of jnp arrays; stacked-layer variants add a leading
+    layer axis and are consumed by lax.scan in blocks.py.
+  * activations (B, S, D); attention heads explicit (B, S, H, Dh).
+  * dtypes: params in cfg.param_dtype (bf16 default), math in f32 where it
+    matters (softmax, norms, rope).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = dict
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, d_in, d_out, dtype, scale: float | None = None):
+    s = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def init_rmsnorm(d, dtype):
+    return {"w": jnp.zeros((d,), dtype)}
+
+
+def rms_norm(x, p, eps=1e-6, *, gemma_style: bool = True):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    w = p["w"].astype(jnp.float32)
+    return (y * (1.0 + w)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope(x, positions, *, theta: float = 10000.0):
+    """x: (B, S, H, Dh); positions: (B, S) or (S,)."""
+    b, s, h, dh = x.shape
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freq   # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash-style chunked attention
+# ---------------------------------------------------------------------------
+def _softcap(x, cap):
+    if cap is None or cap <= 0:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float | None = None, q_offset=0,
+                    kv_chunk: int = 1024, kv_valid_len=None,
+                    scale: float | None = None):
+    """Online-softmax attention over KV chunks.
+
+    q: (B, Sq, Hq, Dh); k/v: (B, Skv, Hkv, Dh). GQA by head grouping.
+    causal masks by (global) position: q position = q_offset + i.
+    window > 0 adds sliding-window masking (positions within `window`).
+    kv_valid_len: (B,) optional ragged KV lengths.
+    Returns (B, Sq, Hq, Dh) in q.dtype.
+    """
+    b, sq, hq, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(dh)
+    nchunks = max(1, skv // kv_chunk)
+    assert skv % nchunks == 0, (skv, kv_chunk)
+    cs = skv // nchunks
+
+    # MXU-native dtype discipline (§Perf B1): QK^T and PV consume K/V in
+    # their stored dtype with f32 accumulation (preferred_element_type) —
+    # no f32 copies of the K/V chunks ever hit HBM. The f32 softmax state
+    # (m, l, o) is what carries precision.
+    qc = q.astype(k.dtype).reshape(b, sq, hkv, g, dh)
+    kc = k.reshape(b, nchunks, cs, hkv, dh)
+    vc = v.reshape(b, nchunks, cs, hkv, dh)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def step(carry, inp):
+        m_prev, l_prev, o_prev = carry
+        kb, vb, ci = inp
+        k_pos = ci * cs + jnp.arange(cs)
+        scores = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kb, optimize=True,
+                            preferred_element_type=jnp.float32) * scale
+        scores = _softcap(scores, softcap)
+        mask = jnp.ones((sq, cs), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window and window > 0:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        mask = jnp.broadcast_to(mask[None, None, None], scores.shape)
+        if kv_valid_len is not None:
+            kvm = k_pos[None, :] < kv_valid_len[:, None]      # (B, cs)
+            mask &= kvm[:, None, None, None, :]
+        scores = jnp.where(mask, scores, -1e30)
+        m_cur = jnp.max(scores, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(scores - m_new[..., None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        o_new = o_prev * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vb, optimize=True,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((b, hkv, g, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    o0 = jnp.zeros((b, hkv, g, sq, dh), jnp.float32)
+    ks = jnp.moveaxis(kc, 1, 0)
+    vs = jnp.moveaxis(vc, 1, 0)
+    (m, l, o), _ = jax.lax.scan(step, (m0, l0, o0),
+                                (ks, vs, jnp.arange(nchunks)))
+    out = o / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out.reshape(b, hkv * g, sq, dh), 1, 2)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (training / prefill path)
+# ---------------------------------------------------------------------------
+def init_attention(key, d_model, n_heads, n_kv_heads, head_dim, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, d_model, n_heads * head_dim, dtype),
+        "wk": dense_init(k2, d_model, n_kv_heads * head_dim, dtype),
+        "wv": dense_init(k3, d_model, n_kv_heads * head_dim, dtype),
+        "wo": dense_init(k4, n_heads * head_dim, d_model, dtype,
+                         scale=1.0 / math.sqrt(n_heads * head_dim)),
+    }
+
+
+def attention(x, p, *, n_heads, n_kv_heads, head_dim, causal=True, window=0,
+              softcap=None, rope_theta=10000.0, positions=None,
+              kv_chunk=1024, query_pre_scale=None, kv_override=None,
+              q_offset=0):
+    """Full attention block: qkv proj + rope + flash + out proj.
+
+    kv_override: optional (k, v) tensors (cross attention).
+    Returns (out, (k, v)) so callers can stash the KV for caches.
+    """
+    b, s, d = x.shape
+    q = (x @ p["wq"]).reshape(b, s, n_heads, head_dim)
+    if kv_override is None:
+        k = (x @ p["wk"]).reshape(b, s, n_kv_heads, head_dim)
+        v = (x @ p["wv"]).reshape(b, s, n_kv_heads, head_dim)
+        if positions is None:
+            positions = jnp.arange(s)
+        q = rope(q, positions, theta=rope_theta)
+        k = rope(k, positions, theta=rope_theta)
+    else:
+        k, v = kv_override
+        if positions is None:
+            positions = jnp.arange(s)
+        q = rope(q, positions, theta=rope_theta)
+    scale = query_pre_scale if query_pre_scale is not None else None
+    out = flash_attention(q, k, v, causal=causal and kv_override is None,
+                          window=window, softcap=softcap, kv_chunk=kv_chunk,
+                          scale=scale, q_offset=q_offset)
+    return out.reshape(b, s, -1) @ p["wo"], (k, v)
+
+
+# ---------------------------------------------------------------------------
+# GLU MLP
+# ---------------------------------------------------------------------------
+def init_mlp(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype,
+                             scale=1.0 / math.sqrt(d_ff)),
+    }
+
+
+def mlp(x, p, *, act: str = "silu"):
+    gate = x @ p["w_gate"]
+    up = x @ p["w_up"]
+    if act == "silu":
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    elif act == "gelu":
+        h = jax.nn.gelu(gate.astype(jnp.float32),
+                        approximate=True).astype(x.dtype) * up
+    else:
+        raise ValueError(act)
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head
+# ---------------------------------------------------------------------------
+def init_embedding(key, vocab, d_model, dtype):
+    return {"table": (jax.random.normal(key, (vocab, d_model), jnp.float32)
+                      * 0.02).astype(dtype)}
+
+
+def embed(tokens, p, *, scale_by_dim: bool = False):
+    x = jnp.take(p["table"], tokens, axis=0)
+    if scale_by_dim:
+        x = x * jnp.asarray(math.sqrt(x.shape[-1]), x.dtype)
+    return x
+
+
+def unembed(x, p_embed=None, p_head=None, *, softcap=None):
+    if p_head is not None:
+        logits = x @ p_head["w"]
+    else:
+        logits = x @ p_embed["table"].T
+    logits = _softcap(logits.astype(jnp.float32), softcap)
+    return logits
+
+
+def cross_entropy(logits, labels, *, ignore_id: int = -1):
+    """Mean token CE; logits (B, S, V) f32, labels (B, S) int32."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    valid = labels != ignore_id
+    safe = jnp.where(valid, labels, 0)
+    ll = jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    return -jnp.sum(jnp.where(valid, ll, 0.0)) / jnp.maximum(
+        jnp.sum(valid), 1)
+
+
+def chunked_cross_entropy(x, w, labels, *, transpose_w: bool = False,
+                          softcap: float | None = None, chunk: int = 1024,
+                          ignore_id: int = -1):
+    """CE without materializing (B, S, V): scan over sequence chunks.
+
+    x: (B, S, d) final hidden states; w: (d, V) head (or (V, d) embedding
+    table with transpose_w=True); labels (B, S).
+    Each chunk computes its logits, softcaps, log-softmaxes, and reduces to
+    (sum_ll, n_valid) — only (B, chunk, V) is ever live. This is what keeps
+    the train-step memory_analysis bounded at vocab=256k x 1M tokens.
+    """
+    b, s, d = x.shape
+    if chunk >= s:
+        logits = _ce_logits(x, w, transpose_w, softcap)
+        return cross_entropy(logits, labels, ignore_id=ignore_id)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    xc = jnp.moveaxis(x.reshape(b, nc, chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+
+    def body(carry, inp):
+        ll_sum, n_valid = carry
+        xb, lb = inp
+        logits = _ce_logits(xb, w, transpose_w, softcap)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        valid = lb != ignore_id
+        safe = jnp.where(valid, lb, 0)
+        ll = jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+        ll_sum = ll_sum + jnp.sum(jnp.where(valid, ll, 0.0))
+        n_valid = n_valid + jnp.sum(valid)
+        return (ll_sum, n_valid), None
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (ll_sum, n_valid), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+        (xc, lc))
+    return -ll_sum / jnp.maximum(n_valid, 1)
+
+
+def _ce_logits(x, w, transpose_w, softcap):
+    logits = x @ (w.T if transpose_w else w)
+    return _softcap(logits.astype(jnp.float32), softcap)

@@ -1,0 +1,188 @@
+"""CausalLM driver: embedding -> scan(groups) -> norm -> logits.
+
+One class serves all 10 assigned architectures; family differences live in
+blocks.py. Three entry points:
+
+  loss/forward : training & prefill (full-sequence, flash attention),
+                 optional cache collection for the prefill->decode handoff.
+  decode_step  : single-token serve step against caches. Attention-bearing
+                 families read/write the disaggregated KV pool (far mode =
+                 the paper's operator push-down; naive/local = the paper's
+                 RCPU/LCPU baselines). Recurrent families carry O(1) state.
+
+Scan-over-groups keeps HLO size ~constant in depth; jax.checkpoint (remat)
+around the group body keeps train memory bounded at 32k context.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks as B
+from repro.models import layers as L
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig, *, mesh=None, dp_axes=("data",),
+                 act_spec=None, ce_act_spec=None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.dp_axes = dp_axes
+        # residual-stream sharding constraints (set by launch/ for pjit runs)
+        self.act_spec = act_spec          # applied inside the group scan
+        self.ce_act_spec = ce_act_spec    # applied to x before chunked CE
+
+    def _constrain(self, x, spec):
+        if spec is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, spec)
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.param_dtype)
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        params: dict[str, Any] = {}
+        if not cfg.embed_input:
+            params["embed"] = L.init_embedding(k1, cfg.vocab, cfg.d_model, dt)
+        groups, shared = B.init_stacked(k2, cfg)
+        params["groups"] = groups
+        params["shared"] = shared
+        params["ln_f"] = L.init_rmsnorm(cfg.d_model, dt)
+        if cfg.embed_input or not cfg.tie_embeddings:
+            params["head"] = {"w": L.dense_init(k3, cfg.d_model, cfg.vocab,
+                                                dt)}
+        return params
+
+    def param_count(self, params) -> int:
+        return sum(int(x.size) for x in jax.tree.leaves(params))
+
+    # --------------------------------------------------------------- forward
+    def _embed_in(self, params, batch):
+        cfg = self.cfg
+        if cfg.embed_input:
+            return batch["embeds"].astype(jnp.dtype(cfg.param_dtype))
+        return L.embed(batch["tokens"], params["embed"],
+                       scale_by_dim=cfg.scale_embed)
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        if "head" in params:
+            return L.unembed(x, p_head=params["head"],
+                             softcap=cfg.softcap_logits or None)
+        return L.unembed(x, p_embed=params["embed"],
+                         softcap=cfg.softcap_logits or None)
+
+    def _backbone(self, params, batch, *, collect_kv: bool = False):
+        """embed -> scan(groups). Returns (x, aux, kvs)."""
+        cfg = self.cfg
+        x = self._embed_in(params, batch)
+        x = self._constrain(x, self.act_spec)
+        image_embeds = batch.get("image_embeds")
+        if image_embeds is not None:
+            image_embeds = image_embeds.astype(x.dtype)
+        shared = params["shared"]
+
+        def body(xc, gp):
+            y, aux, kvs = B.group_fwd(xc, gp, cfg, shared,
+                                      image_embeds=image_embeds,
+                                      collect_kv=collect_kv,
+                                      mesh=self.mesh, dp_axes=self.dp_axes)
+            y = self._constrain(y, self.act_spec)
+            return y, (aux, kvs)
+
+        if cfg.remat:
+            policy = {
+                "nothing": jax.checkpoint_policies.nothing_saveable,
+                "dots_no_batch":
+                    jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+                "dots": jax.checkpoint_policies.dots_saveable,
+            }[cfg.remat_policy]
+            body = jax.checkpoint(body, policy=policy)
+        x, (auxs, kvs) = jax.lax.scan(body, x, params["groups"])
+        return x, (jnp.mean(auxs) if cfg.n_experts else 0.0), kvs
+
+    def forward(self, params, batch, *, collect_kv: bool = False,
+                max_seq: int | None = None):
+        """Returns (logits, aux_loss, cache|None)."""
+        x, aux, kvs = self._backbone(params, batch, collect_kv=collect_kv)
+        logits = self._logits(params, x)
+        cache = None
+        if collect_kv:
+            s = x.shape[1]
+            tgt = max_seq or s
+            def _pad(key, leaf):
+                # KV leaves are (G, B, Hkv, S, D): pad S (dim 3) to max_seq
+                if (key.startswith(("k_", "v_")) and "cross" not in key
+                        and leaf.ndim == 5 and leaf.shape[3] == s):
+                    pad = [(0, 0)] * leaf.ndim
+                    pad[3] = (0, tgt - s)
+                    return jnp.pad(leaf, pad)
+                return leaf
+            cache = {k: _pad(k, v) for k, v in kvs.items()}
+        return logits, aux, cache
+
+    def prefill(self, params, batch, *, max_seq: int | None = None):
+        """Serve prefill: last-position logits + KV cache (far-pool layout)."""
+        logits, _, cache = self.forward(params, batch, collect_kv=True,
+                                        max_seq=max_seq)
+        return logits[:, -1:], cache
+
+    def loss(self, params, batch):
+        """Train loss with chunked CE (never materializes (B, S, V))."""
+        cfg = self.cfg
+        x, aux, _ = self._backbone(params, batch)
+        x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        x = self._constrain(x, self.ce_act_spec)
+        if "head" in params:
+            w, tr = params["head"]["w"], False
+        else:
+            w, tr = params["embed"]["table"], True
+        ce = L.chunked_cross_entropy(
+            x, w, batch["labels"], transpose_w=tr,
+            softcap=cfg.softcap_logits or None, chunk=cfg.ce_chunk)
+        if cfg.n_experts:
+            ce = ce + cfg.router_aux_weight * aux
+        return ce
+
+    # ---------------------------------------------------------------- decode
+    def init_cache(self, batch: int, max_seq: int,
+                   kv_dtype=jnp.bfloat16) -> dict:
+        cfg = self.cfg
+        g = B.n_groups(cfg)
+        proto = B.group_cache(cfg, batch, max_seq, kv_dtype)
+        return {k: jnp.zeros((g,) + v.shape, v.dtype)
+                for k, v in proto.items()}
+
+    def decode_step(self, params, cache, batch, pos, length, *,
+                    mode: str = "far"):
+        """batch: {"tokens": (B,1)} or {"embeds": (B,1,d)}. pos: () int32.
+
+        Returns (logits (B,1,V), new_cache).
+
+        The cache rides the scan as xs->ys (sliced per group in, restacked
+        out); with donation the ys buffer aliases the input cache. §Perf B2
+        tried cache-as-carry with per-group dynamic updates instead — XLA's
+        copy-insertion then cloned every stacked buffer once per iteration
+        (read-write overlap), 3.5x MORE HBM traffic; xs->ys restacks only
+        the per-group slice. (Hypothesis refuted; kept the xs->ys form.)
+        """
+        cfg = self.cfg
+        x = self._embed_in(params, batch)
+        shared = params["shared"]
+        mesh, dp = self.mesh, self.dp_axes
+
+        def body(xc, inp):
+            gp, cg = inp
+            y, nc = B.group_dec(xc, gp, cg, cfg, shared, pos, length,
+                                mode=mode, mesh=mesh, dp_axes=dp)
+            return y, nc
+
+        x, new_cache = jax.lax.scan(body, x, (params["groups"], cache))
+        logits = self._logits(params, x)
+        return logits, new_cache

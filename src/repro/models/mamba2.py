@@ -1,0 +1,144 @@
+"""Mamba2 (SSD — state space dual) blocks, chunked scan + recurrent decode.
+
+TPU-native: the intra-chunk part is a masked (decay-weighted) attention-like
+matmul on the MXU; inter-chunk states are carried by a short lax.scan
+(S/chunk steps). Decode is an O(1) recurrent state update — the "cache" for
+hybrid archs (zamba2) is this state, not a KV pool.
+
+Head layout follows Mamba2: x projected to (H, P) value heads; B and C are
+shared across heads (single group), state size N per head; A scalar per head
+(negative, learned via log); dt per head via softplus.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, init_rmsnorm, rms_norm
+
+
+def init_mamba2(key, d_model, n_heads, d_state, dtype, *, expand: int = 2):
+    d_inner = expand * d_model
+    head_p = d_inner // n_heads
+    ks = jax.random.split(key, 6)
+    return {
+        # fused input projection: [x (d_inner), z gate (d_inner), B (N), C (N), dt (H)]
+        "w_in": dense_init(ks[0], d_model,
+                           2 * d_inner + 2 * d_state + n_heads, dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "norm": init_rmsnorm(d_inner, dtype),
+        "w_out": dense_init(ks[1], d_inner, d_model, dtype,
+                            scale=1.0 / math.sqrt(d_inner)),
+    }
+
+
+def _split_proj(xp, d_inner, d_state, n_heads):
+    xs = xp[..., :d_inner]
+    z = xp[..., d_inner:2 * d_inner]
+    bmat = xp[..., 2 * d_inner:2 * d_inner + d_state]
+    cmat = xp[..., 2 * d_inner + d_state:2 * d_inner + 2 * d_state]
+    dt = xp[..., 2 * d_inner + 2 * d_state:]
+    return xs, z, bmat, cmat, dt
+
+
+def ssd_chunk_scan(xh, bmat, cmat, dt, a_log, chunk: int):
+    """Chunked SSD. xh: (B,S,H,P); bmat/cmat: (B,S,N); dt: (B,S,H) (+softplus
+    already applied); a_log (H,). Returns y (B,S,H,P)."""
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    nc = max(1, s // chunk)
+    cs = s // nc
+    a = -jnp.exp(a_log)                                    # (H,) negative
+    da = dt * a[None, None, :]                             # (B,S,H) log decay
+    xc = xh.reshape(b, nc, cs, h, p)
+    bc = bmat.reshape(b, nc, cs, n)
+    cc = cmat.reshape(b, nc, cs, n)
+    dtc = dt.reshape(b, nc, cs, h)
+    dac = da.reshape(b, nc, cs, h)
+    da_cum = jnp.cumsum(dac, axis=2)                       # (B,nc,cs,H)
+    da_tot = da_cum[:, :, -1]                              # (B,nc,H)
+
+    def step(state, inp):
+        xb, bb, cb, dtb, dacum, datot = inp
+        # inter-chunk: y_i += (C_i . state) * exp(dacum_i)
+        y_inter = jnp.einsum("bcn,bhnp->bchp", cb.astype(jnp.float32), state,
+                             optimize=True) * jnp.exp(dacum)[..., None]
+        # intra-chunk: L[i,j] = exp(dacum_i - dacum_j) for j<=i.
+        # Mask BEFORE exp: non-causal lw is positive-large, exp overflows,
+        # and where(causal, exp(lw), 0) then yields inf*0 = NaN in the
+        # BACKWARD (d exp = exp). Masking the exponent keeps both passes
+        # finite.
+        lw = dacum[:, :, None, :] - dacum[:, None, :, :]   # (B,ci,cj,H)
+        causal = jnp.tril(jnp.ones((cs, cs), bool))
+        lw = jnp.where(causal[None, :, :, None], lw, -1e30)
+        L = jnp.exp(lw)
+        cb_f = cb.astype(jnp.float32)
+        bb_f = bb.astype(jnp.float32)
+        scores = jnp.einsum("bin,bjn->bij", cb_f, bb_f, optimize=True)
+        A = scores[..., None] * L * dtb[:, None, :, :]     # (B,ci,cj,H)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", A,
+                             xb.astype(jnp.float32), optimize=True)
+        # state update: S' = exp(datot) S + sum_j exp(datot - dacum_j) dt_j B_j x_j^T
+        w = jnp.exp(datot[:, None] - dacum) * dtb          # (B,cs,H)
+        upd = jnp.einsum("bjn,bjhp->bhnp", bb_f,
+                         xb.astype(jnp.float32) * w[..., None], optimize=True)
+        state = state * jnp.exp(datot)[:, :, None, None] + upd
+        return state, y_inter + y_intra
+
+    s0 = jnp.zeros((b, h, n, p), jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in
+               (xc, bc, cc, dtc, da_cum, da_tot))
+    final, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p), final
+
+
+def mamba2_block(x, p, *, n_heads: int, d_state: int, chunk: int = 256,
+                 expand: int = 2, return_state: bool = False):
+    """x: (B,S,d) -> (B,S,d)."""
+    b, s, d = x.shape
+    d_inner = expand * d
+    xp = x @ p["w_in"]
+    xs, z, bmat, cmat, dt_raw = _split_proj(xp, d_inner, d_state, n_heads)
+    head_p = d_inner // n_heads
+    xh = xs.reshape(b, s, n_heads, head_p)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+    y, final_state = ssd_chunk_scan(xh, bmat, cmat, dt, p["a_log"], chunk)
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(y, p["norm"])
+    out = y @ p["w_out"]
+    return (out, final_state) if return_state else out
+
+
+def mamba2_decode_step(x, p, state, *, n_heads: int, d_state: int,
+                       expand: int = 2):
+    """x: (B, d); state (B,H,N,P) -> (out (B,d), new state)."""
+    b, d = x.shape
+    d_inner = expand * d
+    xp = x @ p["w_in"]
+    xs, z, bmat, cmat, dt_raw = _split_proj(xp, d_inner, d_state, n_heads)
+    head_p = d_inner // n_heads
+    xh = xs.reshape(b, n_heads, head_p).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, :])
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt * a[None, :])                        # (B,H)
+    upd = jnp.einsum("bn,bhp->bhnp", bmat.astype(jnp.float32),
+                     xh * dt[..., None])
+    state = state * decay[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", cmat.astype(jnp.float32), state)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(b, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(y, p["norm"])
+    return y @ p["w_out"], state
+
+
+def mamba2_init_state(batch, d_model, n_heads, d_state, *, expand: int = 2):
+    head_p = expand * d_model // n_heads
+    return jnp.zeros((batch, n_heads, d_state, head_p), jnp.float32)

@@ -1,0 +1,239 @@
+"""Mixture-of-Experts layer with expert parallelism (EP over the model axis).
+
+Farview connection: top-k routing is *selection push-down* — only the tokens
+an expert actually needs cross the wire (all-to-all), never the full
+activation set. The capacity-factor dispatch below makes the shipped volume
+static and auditable in the dry-run HLO (the a2a bytes are the collective
+roofline term).
+
+Dispatch is sort-free scatter/gather (no (T, E, C) one-hot tensor — that
+formulation is O(T*E*C) memory and dies at 1M tokens):
+  1. router logits -> top-k (experts, weights) per token,
+  2. rank of each (token, choice) within its expert via one-hot-free
+     cumsum-by-sorted-segment,
+  3. scatter into (E, C, d) expert buffers (drop beyond capacity),
+  4. expert GLU FFN, batched einsum over the E axis (E sharded over "model"),
+  5. gather back + weighted combine.
+Aux load-balance loss (Switch-style) keeps routing trainable.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def init_moe(key, d_model, d_expert, n_experts, dtype, *, router_dtype=jnp.float32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "router": dense_init(k1, d_model, n_experts, router_dtype),
+        "w_gate": (jax.random.normal(k2, (n_experts, d_model, d_expert),
+                                     jnp.float32) / math.sqrt(d_model)).astype(dtype),
+        "w_up": (jax.random.normal(k3, (n_experts, d_model, d_expert),
+                                   jnp.float32) / math.sqrt(d_model)).astype(dtype),
+        "w_down": (jax.random.normal(k4, (n_experts, d_expert, d_model),
+                                     jnp.float32) / math.sqrt(d_expert)).astype(dtype),
+    }
+
+
+def moe_ffn(x, p, *, top_k: int, capacity_factor: float = 1.25,
+            act: str = "silu"):
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    e = p["router"].shape[1]
+
+    logits = (xt.astype(p["router"].dtype) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                   # (T, E)
+    gate_w, gate_e = jax.lax.top_k(probs, top_k)              # (T, k)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # Switch aux loss: fraction of tokens per expert x mean router prob
+    me = jnp.mean(probs, axis=0)
+    ce_frac = jnp.zeros((e,), jnp.float32).at[gate_e.reshape(-1)].add(
+        1.0 / (t * top_k))
+    aux = e * jnp.sum(me * ce_frac)
+
+    cap = max(1, int(capacity_factor * top_k * t / e))
+
+    # rank within expert: sort flat (expert, arrival) pairs
+    flat_e = gate_e.reshape(-1)                               # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    inv = jnp.argsort(order)                                  # undo perm
+    sorted_e = flat_e[order]
+    seg_start = jnp.concatenate([
+        jnp.zeros((1,), jnp.int32),
+        (sorted_e[1:] != sorted_e[:-1]).astype(jnp.int32)])
+    # position within segment = iota - index of segment start
+    idx = jnp.arange(flat_e.shape[0], dtype=jnp.int32)
+    start_idx = jnp.where(seg_start == 1, idx, 0)
+    start_idx = jax.lax.associative_scan(jnp.maximum, start_idx)
+    rank_sorted = idx - start_idx
+    rank = rank_sorted[inv].reshape(t, top_k)                 # (T, k)
+
+    keep = rank < cap
+    slot = flat_e.reshape(t, top_k) * cap + jnp.where(keep, rank, 0)
+    slot = jnp.where(keep, slot, e * cap)                     # OOB -> dropped
+
+    buf = jnp.zeros((e * cap + 1, d), x.dtype)
+    tok_idx = jnp.repeat(jnp.arange(t), top_k).reshape(t, top_k)
+    buf = buf.at[slot.reshape(-1)].set(xt[tok_idx.reshape(-1)], mode="drop")
+    expert_in = buf[:e * cap].reshape(e, cap, d)
+
+    # expert FFN (E-sharded batched einsum; GSPMD turns the reshard into a2a)
+    gate = jnp.einsum("ecd,edf->ecf", expert_in, p["w_gate"], optimize=True)
+    up = jnp.einsum("ecd,edf->ecf", expert_in, p["w_up"], optimize=True)
+    if act == "silu":
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    else:
+        h = jax.nn.gelu(gate.astype(jnp.float32),
+                        approximate=True).astype(x.dtype) * up
+    expert_out = jnp.einsum("ecf,efd->ecd", h, p["w_down"], optimize=True)
+
+    flat_out = expert_out.reshape(e * cap, d)
+    gathered = flat_out[jnp.clip(slot.reshape(-1), 0, e * cap - 1)]
+    gathered = jnp.where(keep.reshape(-1, 1), gathered, 0)
+    gathered = gathered.reshape(t, top_k, d)
+    out = jnp.sum(gathered * gate_w[..., None].astype(x.dtype), axis=1)
+    return out.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# explicit expert-parallel MoE: shard_map + all_to_all (§Perf A1)
+# ---------------------------------------------------------------------------
+def _rank_within(segment_ids, n_segments_hint=None):
+    """Arrival rank of each element within its segment id (sort-free)."""
+    n = segment_ids.shape[0]
+    order = jnp.argsort(segment_ids, stable=True)
+    inv = jnp.argsort(order)
+    sorted_ids = segment_ids[order]
+    seg_start = jnp.concatenate([
+        jnp.zeros((1,), jnp.int32),
+        (sorted_ids[1:] != sorted_ids[:-1]).astype(jnp.int32)])
+    idx = jnp.arange(n, dtype=jnp.int32)
+    start_idx = jnp.where(seg_start == 1, idx, 0)
+    start_idx = jax.lax.associative_scan(jnp.maximum, start_idx)
+    return (idx - start_idx)[inv]
+
+
+def moe_ffn_a2a(x, p, *, top_k: int, capacity_factor: float = 1.25,
+                act: str = "silu", mesh=None, ep_axis: str = "model",
+                dp_axes=("data",)):
+    """Expert-parallel MoE with EXPLICIT all_to_all dispatch (§Perf A1).
+
+    The dense formulation above is correct under GSPMD but the partitioner
+    moves the (E*cap, d) dispatch buffers with all-gathers — measured 70.2s
+    of collective time per train step on qwen3-moe (16-way EP, 256 chips).
+    This version is the Farview economics applied to MoE: tokens are
+    *selected* (top-k routing = a selectivity-k/E predicate) and ONLY the
+    selected copies cross the expert axis, as two all_to_alls per direction:
+
+      per device/layer  a2a bytes = T_loc * k * d * bytes  (+ id channel)
+      vs GSPMD-gather   ~ E*cap*d broadcast over the axis.
+
+    Semantics match moe_ffn up to capacity policy: capacity here is
+    per-destination-DEVICE (C = cf * T_loc * k / n_ep) then per-expert
+    locally, instead of one global per-expert capacity.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    b, s, d = x.shape
+    e = p["router"].shape[1]
+    dpa = tuple(dp_axes) if dp_axes else ()
+    all_axes = dpa + (ep_axis,)
+
+    def sm(xs, router, wg, wu, wd):
+        n_ep = jax.lax.axis_size(ep_axis)
+        e_loc = wg.shape[0]
+        bl, sl, _ = xs.shape
+        t = bl * sl
+        xt = xs.reshape(t, d)
+
+        logits = (xt.astype(router.dtype) @ router).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)               # (T_loc, E)
+        gate_w, gate_e = jax.lax.top_k(probs, top_k)
+        gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+        # Switch aux loss over the GLOBAL batch (pmean across the mesh)
+        me = jnp.mean(probs, axis=0)
+        ce_frac = jnp.zeros((e,), jnp.float32).at[gate_e.reshape(-1)].add(
+            1.0 / (t * top_k))
+        me = jax.lax.pmean(me, all_axes)
+        ce_frac = jax.lax.pmean(ce_frac, all_axes)
+        aux = e * jnp.sum(me * ce_frac)
+
+        # ---- dispatch: rank within destination DEVICE ----------------------
+        dest = (gate_e // e_loc).reshape(-1)                  # (T_loc*k,)
+        cap = max(8, int(capacity_factor * t * top_k / n_ep + 0.5))
+        rank = _rank_within(dest)
+        keep = rank < cap
+        slot = jnp.where(keep, dest * cap + rank, n_ep * cap)
+
+        # §Perf A2: payloads travel in the activation dtype (bf16), not
+        # f32 — the id channel stays exact (e_loc <= 256 in bf16).
+        pdt = xs.dtype
+        eid_local = (gate_e % e_loc).reshape(-1).astype(pdt)
+        tok_idx = jnp.repeat(jnp.arange(t), top_k)
+        payload = jnp.concatenate(
+            [xt[tok_idx].astype(pdt), eid_local[:, None]], axis=1)
+        send = jnp.zeros((n_ep * cap + 1, d + 1), pdt)
+        send = send.at[slot].set(payload, mode="drop")
+        send = send[:n_ep * cap].reshape(n_ep, cap, d + 1)
+
+        recv = jax.lax.all_to_all(send, ep_axis, split_axis=0,
+                                  concat_axis=0, tiled=False)
+        rt = recv.reshape(n_ep * cap, d + 1)
+        x_in = rt[:, :d]
+        eid = jnp.round(rt[:, d].astype(jnp.float32)).astype(jnp.int32)
+        # a zero row (dropped/padding slot) carries eid 0; mask by payload
+        live = jnp.any(rt[:, :d] != 0.0, axis=1)
+        eid = jnp.where(live, eid, e_loc)                     # park dead rows
+
+        # ---- local per-expert dispatch (within-device, no collectives) -----
+        n_recv = n_ep * cap
+        cap2 = max(8, int(capacity_factor * n_recv / e_loc + 0.5))
+        rank2 = _rank_within(eid)
+        keep2 = (rank2 < cap2) & live
+        slot2 = jnp.where(keep2, eid * cap2 + rank2, e_loc * cap2)
+        buf = jnp.zeros((e_loc * cap2 + 1, d), xs.dtype)
+        buf = buf.at[slot2].set(x_in, mode="drop")
+        expert_in = buf[:e_loc * cap2].reshape(e_loc, cap2, d)
+
+        gate = jnp.einsum("ecd,edf->ecf", expert_in, wg, optimize=True)
+        up = jnp.einsum("ecd,edf->ecf", expert_in, wu, optimize=True)
+        if act == "silu":
+            h = jax.nn.silu(gate.astype(jnp.float32)).astype(xs.dtype) * up
+        else:
+            h = jax.nn.gelu(gate.astype(jnp.float32),
+                            approximate=True).astype(xs.dtype) * up
+        expert_out = jnp.einsum("ecf,efd->ecd", h, wd, optimize=True)
+
+        out_rows = expert_out.reshape(e_loc * cap2, d)[
+            jnp.clip(slot2, 0, e_loc * cap2 - 1)]
+        out_rows = jnp.where(keep2[:, None], out_rows, 0)
+
+        # ---- return trip ----------------------------------------------------
+        back = out_rows.reshape(n_ep, cap, d).astype(pdt)
+        ret = jax.lax.all_to_all(back, ep_axis, split_axis=0,
+                                 concat_axis=0, tiled=False)
+        ret_flat = ret.reshape(n_ep * cap, d)
+        got = ret_flat[jnp.clip(slot, 0, n_ep * cap - 1)]
+        got = jnp.where(keep[:, None], got, 0).reshape(t, top_k, d)
+        out = jnp.sum(got * gate_w[..., None].astype(pdt),
+                      axis=1).astype(xs.dtype)
+        return out.reshape(bl, sl, d), aux
+
+    in_specs = (P(dpa or None, ep_axis, None),   # x: batch x seq-sharded
+                P(None, None),                   # router replicated
+                P(ep_axis, None, None),          # experts EP-sharded
+                P(ep_axis, None, None),
+                P(ep_axis, None, None))
+    out_specs = (P(dpa or None, ep_axis, None), P())
+    out, aux = jax.shard_map(sm, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)(
+        x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    return out, aux

@@ -1,0 +1,107 @@
+"""Jit-ready step functions: train_step / prefill_step / serve_step.
+
+These are the exact functions the multi-pod dry-run lowers and the train /
+serve loops execute. Factories close over the LM + static config so the
+jitted signature is pure arrays:
+
+  train_step(params, opt_state, batch)        -> (params, opt_state, metrics)
+  prefill_step(params, batch)                 -> (last_logits, cache)
+  serve_step(params, cache, batch, pos, len)  -> (next_tokens, cache)
+
+Gradient accumulation: microbatches > 1 splits the global batch on axis 0
+and scans, accumulating f32 gradients (keeps the activation working set
+1/M-th while the weights see the same effective batch).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.distributed import compress as C
+from repro.models.lm import LM
+from repro.optim import adamw
+
+
+def make_train_step(lm: LM, tcfg: TrainConfig, *, microbatches: int = 1,
+                    total_steps: int | None = None):
+    acfg = adamw.AdamWConfig(
+        learning_rate=tcfg.learning_rate, b1=tcfg.b1, b2=tcfg.b2,
+        weight_decay=tcfg.weight_decay, grad_clip=tcfg.grad_clip,
+        warmup_steps=tcfg.warmup_steps,
+        total_steps=total_steps or tcfg.total_steps)
+    use_ef = tcfg.grad_compression == "int8_ef"
+
+    def loss_fn(params, mb):
+        return lm.loss(params, mb)
+
+    def train_step(params, opt_state, batch):
+        if microbatches <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            m = microbatches
+
+            def split(leaf):
+                b = leaf.shape[0]
+                assert b % m == 0, (b, m)
+                return leaf.reshape((m, b // m) + leaf.shape[1:])
+
+            mbs = {k: split(v) for k, v in batch.items()}
+
+            def body(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(body, (g0, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / m, gsum)
+            loss = lsum / m
+
+        metrics = {"loss": loss}
+        if use_ef:
+            grads, new_err = C.compress_grads(grads, opt_state["err"])
+        new_params, new_opt, opt_metrics = adamw.update(
+            acfg, params, grads, opt_state["adam"])
+        metrics.update(opt_metrics)
+        out_state = {"adam": new_opt}
+        if use_ef:
+            out_state["err"] = new_err
+        return new_params, out_state, metrics
+
+    return train_step
+
+
+def init_train_state(lm: LM, tcfg: TrainConfig, params):
+    state = {"adam": adamw.init(params)}
+    if tcfg.grad_compression == "int8_ef":
+        state["err"] = C.init_error_state(params)
+    return state
+
+
+def make_prefill_step(lm: LM, *, max_seq: int | None = None):
+    def prefill_step(params, batch):
+        return lm.prefill(params, batch, max_seq=max_seq)
+    return prefill_step
+
+
+def make_serve_step(lm: LM, *, mode: str = "far", sample: str = "greedy"):
+    """One decode step: logits for the new token + greedy next-token ids."""
+    def serve_step(params, cache, batch, pos, length):
+        logits, new_cache = lm.decode_step(params, cache, batch, pos, length,
+                                           mode=mode)
+        next_tokens = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tokens, new_cache
+    return serve_step
+
+
+def make_eval_step(lm: LM):
+    def eval_step(params, batch):
+        return lm.loss(params, batch)
+    return eval_step

@@ -1,0 +1,243 @@
+"""Farview core (paper workload) integration tests: client API, pool,
+pipelines, offload engine, multi-client behaviour."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import operators as op
+from repro.core.client import (FViewNode, FarviewError, alloc_table_mem,
+                               close_connection, farview_request,
+                               free_table_mem, merge_group_partials,
+                               open_connection, table_read, table_write)
+from repro.core.pipeline import clear_cache, cache_info, compile_pipeline
+from repro.core.pool import FarPool
+from repro.core.table import FTable, Column, string_table
+
+
+def make_table(qp, n=2048, seed=0, card=0):
+    rng = np.random.default_rng(seed)
+    cols = tuple(Column(f"c{i}", "i32" if (i == 0 and card) else "f32")
+                 for i in range(8))
+    ft = FTable("t", cols, n_rows=n)
+    alloc_table_mem(qp, ft)
+    data = {}
+    for i in range(8):
+        if i == 0 and card:
+            data["c0"] = rng.integers(0, card, n).astype(np.int32)
+        else:
+            data[f"c{i}"] = rng.normal(size=n).astype(np.float32)
+    table_write(qp, ft, ft.encode(data))
+    return ft, data
+
+
+# ---------------------------------------------------------------------------
+# client API surface (paper §4.2)
+# ---------------------------------------------------------------------------
+class TestClientAPI:
+    def test_connection_region_binding(self):
+        node = FViewNode(16 * 2**20, n_regions=3)
+        qps = [open_connection(node) for _ in range(3)]
+        assert len({q.region for q in qps}) == 3
+        with pytest.raises(FarviewError):
+            open_connection(node)           # all regions bound
+        close_connection(qps[0])
+        q4 = open_connection(node)          # region reclaimed
+        assert q4.region == qps[0].region
+
+    def test_table_read_roundtrip(self):
+        node = FViewNode(16 * 2**20)
+        qp = open_connection(node)
+        ft, data = make_table(qp, n=500)
+        rows = np.asarray(table_read(qp, ft))
+        np.testing.assert_allclose(rows[:, 1], data["c1"], rtol=1e-6)
+        assert qp.bytes_shipped == ft.n_bytes
+
+    def test_alloc_free_reuse(self):
+        node = FViewNode(16 * 2**20)
+        qp = open_connection(node)
+        free0 = node.pool.free_pages
+        ft, _ = make_table(qp, n=4096)
+        assert node.pool.free_pages < free0
+        free_table_mem(qp, ft)
+        assert node.pool.free_pages == free0
+
+    def test_reconfiguration_counter(self):
+        """Swapping pipelines reconfigures the region (paper's ms-scale
+        partial reconfiguration -> jit-cache dispatch)."""
+        node = FViewNode(16 * 2**20)
+        qp = open_connection(node)
+        ft, _ = make_table(qp)
+        p1 = (op.Select((op.Predicate("c1", "<", 0.0),)),)
+        p2 = (op.Select((op.Predicate("c1", ">", 0.0),)),)
+        farview_request(qp, ft, p1)
+        farview_request(qp, ft, p1)   # same signature: no reconfig
+        farview_request(qp, ft, p2)
+        region = node.regions[qp.region]
+        assert region.reconfigurations == 2
+
+
+# ---------------------------------------------------------------------------
+# pipeline semantics (paper §5)
+# ---------------------------------------------------------------------------
+class TestPipelines:
+    def setup_method(self):
+        self.node = FViewNode(32 * 2**20)
+        self.qp = open_connection(self.node)
+
+    def test_projection_only(self):
+        ft, data = make_table(self.qp)
+        res = farview_request(self.qp, ft, (op.Project(("c2", "c5")),))
+        assert int(res.count) == ft.n_rows
+        got = np.asarray(res.rows[: int(res.count)])
+        np.testing.assert_allclose(got[:, 2], data["c2"], rtol=1e-6)
+        np.testing.assert_allclose(got[:, 5], data["c5"], rtol=1e-6)
+        assert np.all(got[:, 0] == 0)       # dropped columns zeroed
+        # shipped = only 2 columns worth
+        assert res.shipped_bytes == ft.n_rows * 2 * 4
+
+    def test_smart_addressing_byte_accounting(self):
+        """Smart addressing reads only projected columns from the pool
+        (Fig. 7: column-granular DRAM reads)."""
+        ft, data = make_table(self.qp)
+        res_std = farview_request(self.qp, ft, (op.Project(("c3",)),))
+        res_sa = farview_request(self.qp, ft, (op.SmartAddress(("c3",)),))
+        assert res_sa.read_bytes == ft.n_rows * 4          # 1 column
+        assert res_std.read_bytes == ft.n_rows * 8 * 4     # whole rows
+        got = np.asarray(res_sa.rows[: int(res_sa.count)])
+        np.testing.assert_allclose(got[:, 0], data["c3"], rtol=1e-6)
+
+    def test_multi_predicate_and(self):
+        ft, data = make_table(self.qp)
+        pipe = (op.Select((op.Predicate("c1", "<", 0.5),
+                           op.Predicate("c2", ">", -0.5),
+                           op.Predicate("c3", "<=", 1.0))),)
+        res = farview_request(self.qp, ft, pipe)
+        mask = ((data["c1"] < 0.5) & (data["c2"] > -0.5)
+                & (data["c3"] <= 1.0))
+        assert int(res.count) == int(mask.sum())
+
+    def test_selectivity_drives_shipped_bytes(self):
+        """Fig. 8 economics: shipped bytes proportional to selectivity."""
+        ft, data = make_table(self.qp, n=4096)
+        shipped = {}
+        for q, sel in [(100, 1e9), (50, 0.0), (25, -0.6745)]:
+            pipe = (op.Select((op.Predicate("c1", "<", sel),)),)
+            res = farview_request(self.qp, ft, pipe)
+            shipped[q] = res.shipped_bytes
+        assert shipped[100] > shipped[50] > shipped[25]
+        assert abs(shipped[50] / shipped[100] - 0.5) < 0.05
+        assert abs(shipped[25] / shipped[100] - 0.25) < 0.05
+
+    def test_distinct(self):
+        ft, data = make_table(self.qp, card=23)
+        res = farview_request(self.qp, ft, (op.Distinct(("c0",),
+                                                        n_buckets=256),))
+        merged = merge_group_partials(ft, (), [res]).groups
+        assert set(merged) == set(np.unique(data["c0"]).tolist())
+
+    def test_group_by_aggregates(self):
+        ft, data = make_table(self.qp, card=17)
+        pipe = (op.GroupBy("c0", ("c1", "c2"), n_buckets=256),)
+        res = farview_request(self.qp, ft, pipe)
+        merged = merge_group_partials(ft, pipe, [res]).groups
+        for k in np.unique(data["c0"]):
+            mask = data["c0"] == k
+            cnt, s, mn, mx = merged[int(k)]
+            assert cnt == int(mask.sum())
+            np.testing.assert_allclose(
+                np.asarray(s), [data["c1"][mask].sum(),
+                                data["c2"][mask].sum()], rtol=1e-3, atol=1e-3)
+            np.testing.assert_allclose(
+                np.asarray(mn), [data["c1"][mask].min(),
+                                 data["c2"][mask].min()], rtol=1e-5)
+            np.testing.assert_allclose(
+                np.asarray(mx), [data["c1"][mask].max(),
+                                 data["c2"][mask].max()], rtol=1e-5)
+
+    def test_crypt_pre_and_post(self):
+        from repro.kernels import ops as kops
+        ft, data = make_table(self.qp)
+        words = ft.encode(data)
+        # encrypt at rest
+        u32 = jnp.asarray(words.reshape(-1), jnp.float32).view(jnp.uint32)
+        enc = kops.crypt(u32, np.array([3, 5], np.uint32), 11)
+        table_write(self.qp, ft,
+                    np.asarray(enc.view(jnp.float32)).reshape(words.shape))
+        pipe = (op.Crypt(key=(3, 5), nonce=11, when="pre"),
+                op.Select((op.Predicate("c1", "<", 0.0),)))
+        res = farview_request(self.qp, ft, pipe)
+        assert int(res.count) == int((data["c1"] < 0).sum())
+        # post-encryption: response decrypts back to the projection
+        table_write(self.qp, ft, words)
+        pipe2 = (op.Project(("c0",)), op.Crypt(key=(9, 9), nonce=3,
+                                               when="post"))
+        res2 = farview_request(self.qp, ft, pipe2)
+        resp = jnp.asarray(np.asarray(res2.rows).reshape(-1)).view(jnp.uint32)
+        dec = kops.crypt(resp, np.array([9, 9], np.uint32), 3)
+        got = np.asarray(dec.view(jnp.float32)).reshape(res2.rows.shape)
+        np.testing.assert_allclose(got[: ft.n_rows, 0], data["c0"],
+                                   rtol=1e-6)
+
+    def test_regex_request(self):
+        import re as pyre
+        strs = [b"error: disk full", b"all fine", b"ERROR", b"warn: error",
+                b"errr"] * 40
+        ft, mat, lens = string_table("logs", strs, 32)
+        res = farview_request(self.qp, ft, (op.RegexMatch("error"),),
+                              strings=mat, lengths=lens)
+        expect = [bool(pyre.search(b"error", s)) for s in strs]
+        assert np.asarray(res.mask).tolist() == expect
+
+    def test_pipeline_order_validation(self):
+        ft, _ = make_table(self.qp)
+        bad = (op.GroupBy("c0", ("c1",)),
+               op.Select((op.Predicate("c1", "<", 0.0),)))
+        with pytest.raises(ValueError):
+            farview_request(self.qp, ft, bad)
+        with pytest.raises(ValueError):
+            op.validate_pipeline((op.Project(("c0",)),
+                                  op.SmartAddress(("c1",))))
+
+    def test_pipeline_cache(self):
+        clear_cache()
+        ft, _ = make_table(self.qp)
+        pipe = (op.Select((op.Predicate("c1", "<", 0.25),)),)
+        farview_request(self.qp, ft, pipe)
+        n1 = cache_info()
+        farview_request(self.qp, ft, pipe)
+        assert cache_info() == n1           # cached, not recompiled
+
+
+# ---------------------------------------------------------------------------
+# sharded offload engine (multi-node generalization)
+# ---------------------------------------------------------------------------
+class TestOffload:
+    def test_offload_matches_single_node(self):
+        import jax
+        from repro.core.offload import run_offloaded, shard_table
+        from repro.launch.mesh import make_test_mesh
+        if jax.device_count() < 1:
+            pytest.skip("no devices")
+        mesh = make_test_mesh((1, 1), ("data", "model"))
+        rng = np.random.default_rng(3)
+        n = 1024
+        ft = FTable("t", tuple(Column(f"c{i}") for i in range(8)), n_rows=n)
+        rows = rng.normal(size=(n, 8)).astype(np.float32)
+        pipe = (op.Select((op.Predicate("c1", "<", 0.0),)),)
+        sharded = shard_table(mesh, "model", jnp.asarray(rows))
+        res = run_offloaded(mesh, "model", ft, pipe, sharded, n)
+        assert res.result.count == int((rows[:, 1] < 0).sum())
+        assert res.shipped_fraction < 1.0
+
+    def test_multi_client_fair_accounting(self):
+        node = FViewNode(32 * 2**20, n_regions=6)
+        qps = [open_connection(node) for _ in range(6)]
+        fts = []
+        for i, qp in enumerate(qps):
+            ft, _ = make_table(qp, n=512, seed=i)
+            fts.append(ft)
+        pipe = (op.Select((op.Predicate("c1", "<", 0.0),)),)
+        for qp, ft in zip(qps, fts):
+            farview_request(qp, ft, pipe)
+        assert all(qp.requests == 1 for qp in qps)
+        assert node.pool.stats.requests == 6

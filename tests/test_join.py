@@ -1,0 +1,83 @@
+"""Small-table join (paper §Conclusions future work, implemented):
+kernel vs oracle sweeps + end-to-end pipeline + hypothesis property."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import operators as op
+from repro.core.client import (FViewNode, alloc_table_mem, farview_request,
+                               open_connection, table_write)
+from repro.core.table import FTable, Column
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+
+@pytest.mark.parametrize("n,k,v", [(100, 8, 1), (1000, 64, 3), (257, 37, 2),
+                                   (4096, 200, 4), (1, 1, 1)])
+def test_hash_join_vs_oracle(rng, n, k, v):
+    bk = rng.permutation(10 * k)[:k].astype(np.int32)
+    bv = rng.normal(size=(k, v)).astype(np.float32)
+    pk = rng.integers(0, 10 * k, n).astype(np.int32)
+    j, h = kops.hash_join(jnp.asarray(pk), jnp.asarray(bk), jnp.asarray(bv))
+    rj, rh = kref.hash_join(pk, bk, bv)
+    np.testing.assert_array_equal(np.asarray(h), rh)
+    np.testing.assert_allclose(np.asarray(j), rj, rtol=1e-6)
+
+
+def test_hash_join_rejects_duplicate_build_keys(rng):
+    bk = np.asarray([1, 2, 2], np.int32)
+    bv = np.ones((3, 1), np.float32)
+    with pytest.raises(ValueError):
+        kops.hash_join(jnp.asarray(np.ones(10, np.int32)), jnp.asarray(bk),
+                       jnp.asarray(bv))
+
+
+def test_join_pipeline_end_to_end(rng):
+    node = FViewNode(64 * 2**20)
+    qp = open_connection(node)
+    orders = FTable("orders", (Column("cust", "i32"), Column("amount")),
+                    n_rows=1024)
+    alloc_table_mem(qp, orders)
+    od = {"cust": rng.integers(0, 50, 1024).astype(np.int32),
+          "amount": rng.random(1024).astype(np.float32)}
+    table_write(qp, orders, orders.encode(od))
+    cust = FTable("customers", (Column("cust", "i32"),
+                                Column("discount")), n_rows=20)
+    alloc_table_mem(qp, cust)
+    ck = rng.permutation(50)[:20].astype(np.int32)
+    cd = {"cust": ck, "discount": rng.random(20).astype(np.float32)}
+    table_write(qp, cust, cust.encode(cd))
+
+    pipe = (op.Select((op.Predicate("amount", "<", 0.5),)),
+            op.JoinSmall(probe_key="cust", build_table="customers",
+                         build_key="cust", build_cols=("discount",)))
+    res = farview_request(qp, orders, pipe)
+    mask = (od["amount"] < 0.5) & np.isin(od["cust"], ck)
+    assert int(res.count) == int(mask.sum())
+    lut = {int(k): float(d) for k, d in zip(cd["cust"], cd["discount"])}
+    got = np.asarray(res.rows[: int(res.count)])
+    for row in got:
+        np.testing.assert_allclose(row[2], lut[int(round(row[0]))],
+                                   rtol=1e-5)
+
+
+def test_join_then_group_rejected(rng):
+    from repro.core.pipeline import compile_pipeline
+    ft = FTable("t", (Column("k", "i32"), Column("v")), n_rows=8)
+    bad = (op.JoinSmall("k", "b", "k", ("v",)), op.GroupBy("k", ("v",)))
+    with pytest.raises(ValueError):
+        compile_pipeline(ft, bad)
+
+
+@settings(deadline=None, max_examples=20)
+@given(n=st.integers(1, 500), k=st.integers(1, 60),
+       seed=st.integers(0, 2**31 - 1))
+def test_join_hit_count_property(n, k, seed):
+    """#survivors == |{probe keys} ∩ {build keys}| occurrences."""
+    rng = np.random.default_rng(seed)
+    bk = rng.permutation(200)[:k].astype(np.int32)
+    bv = rng.normal(size=(k, 1)).astype(np.float32)
+    pk = rng.integers(0, 200, n).astype(np.int32)
+    _, h = kops.hash_join(jnp.asarray(pk), jnp.asarray(bk), jnp.asarray(bv))
+    assert int(np.asarray(h).sum()) == int(np.isin(pk, bk).sum())

@@ -1,0 +1,90 @@
+"""Numerics regression tests: finite gradients everywhere.
+
+The masked-exp pattern `where(mask, exp(lw), 0)` overflows on the masked
+branch and produces inf*0=NaN in the BACKWARD (d exp = exp). This silently
+corrupted zamba2/xlstm training until the optimizer's non-finite guard
+exposed it; the fix masks the exponent before exp. These tests pin it.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.configs.base import smoke_config
+from repro.models.lm import LM
+from repro.models import frontends as F
+from repro.optim import adamw
+
+
+def tree_nonfinite(g):
+    return [jax.tree_util.keystr(path)
+            for path, leaf in jax.tree_util.tree_leaves_with_path(g)
+            if not bool(jnp.all(jnp.isfinite(leaf)))]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_finite_gradients_at_init(arch):
+    cfg = smoke_config(get_config(arch))
+    lm = LM(cfg)
+    key = jax.random.PRNGKey(1)
+    params = lm.init(key)
+    B, S = 2, 64
+    batch = {}
+    if cfg.embed_input:
+        batch["embeds"] = F.audio_frame_embeddings(cfg, B, S,
+                                                   dtype=jnp.float32)
+    else:
+        batch["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    if cfg.n_image_tokens:
+        batch["image_embeds"] = F.image_patch_embeddings(cfg, B,
+                                                         dtype=jnp.float32)
+    batch["labels"] = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    loss, g = jax.value_and_grad(lm.loss)(params, batch)
+    assert np.isfinite(float(loss))
+    bad = tree_nonfinite(g)
+    assert not bad, f"{arch}: non-finite grads in {bad}"
+
+
+def test_mamba2_long_decay_gradients():
+    """Steep decays (large a, long chunks) must not overflow the masked exp."""
+    from repro.models import mamba2 as M2
+    key = jax.random.PRNGKey(0)
+    p = M2.init_mamba2(key, 64, 4, 16, jnp.float32)
+    # bias dt up to make decays steep
+    p["dt_bias"] = jnp.full_like(p["dt_bias"], 3.0)
+    x = jax.random.normal(key, (2, 128, 64))
+    g = jax.grad(lambda p: jnp.sum(M2.mamba2_block(
+        x, p, n_heads=4, d_state=16, chunk=64) ** 2))(p)
+    assert not tree_nonfinite(g)
+
+
+def test_mlstm_extreme_gates_gradients():
+    from repro.models import xlstm as XL
+    key = jax.random.PRNGKey(0)
+    p = XL.init_mlstm(key, 64, 4, jnp.float32)
+    x = jax.random.normal(key, (2, 128, 64)) * 3.0   # large gate logits
+    g = jax.grad(lambda p: jnp.sum(XL.mlstm_block(
+        x, p, n_heads=4, chunk=32) ** 2))(p)
+    assert not tree_nonfinite(g)
+
+
+def test_optimizer_skips_nonfinite_update():
+    """inf/NaN grads must leave params AND moments untouched (in-graph)."""
+    cfg = adamw.AdamWConfig(learning_rate=0.1, warmup_steps=1)
+    params = {"w": jnp.asarray([1.0, 2.0])}
+    state = adamw.init(params)
+    good = {"w": jnp.asarray([0.1, 0.1])}
+    p1, s1, m1 = adamw.update(cfg, params, good, state)
+    assert float(m1["skipped"]) == 0.0
+    bad = {"w": jnp.asarray([jnp.inf, 0.1])}
+    p2, s2, m2 = adamw.update(cfg, p1, bad, s1)
+    assert float(m2["skipped"]) == 1.0
+    np.testing.assert_array_equal(np.asarray(p2["w"]), np.asarray(p1["w"]))
+    np.testing.assert_array_equal(np.asarray(s2["m"]["w"]),
+                                  np.asarray(s1["m"]["w"]))
+    assert int(s2["step"]) == int(s1["step"]) + 1
+    # and everything stays finite afterwards
+    p3, s3, m3 = adamw.update(cfg, p2, good, s2)
+    assert float(m3["skipped"]) == 0.0
+    assert bool(jnp.all(jnp.isfinite(p3["w"])))

@@ -1,0 +1,214 @@
+"""Hypothesis property tests on system invariants.
+
+Each property is an invariant the paper's contract depends on:
+  * pipeline results == numpy relational-algebra oracle for any table/query,
+  * CTR cipher is involutive and keystream-independent of the data,
+  * pool allocator never double-allocates and free fully reclaims,
+  * partial-softmax merge == full softmax for any split of the KV sequence,
+  * select-then-group == group of selected rows.
+"""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.core import operators as op
+from repro.core.table import FTable, Column
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+_settings = dict(deadline=None, max_examples=25,
+                 suppress_health_check=[HealthCheck.too_slow])
+
+
+# ---------------------------------------------------------------------------
+# selection pipeline == numpy oracle
+# ---------------------------------------------------------------------------
+@settings(**_settings)
+@given(
+    n=st.integers(1, 600),
+    seed=st.integers(0, 2**31 - 1),
+    opcode=st.sampled_from(["<", "<=", ">", ">=", "==", "!="]),
+    thresh=st.floats(-2, 2, allow_nan=False),
+)
+def test_selection_matches_numpy(n, seed, opcode, thresh):
+    rng = np.random.default_rng(seed)
+    a = 4
+    table = rng.normal(size=(n, a)).astype(np.float32)
+    sel_ops = np.zeros(a, np.int32)
+    sel_vals = np.zeros(a, np.float32)
+    sel_ops[1] = op.OPS[opcode]
+    sel_vals[1] = np.float32(thresh)
+    proj = np.ones(a, np.float32)
+    packed, count = kops.select_project(
+        jnp.asarray(table), jnp.asarray(sel_ops), jnp.asarray(sel_vals),
+        jnp.asarray(proj))
+    col = table[:, 1]
+    t = np.float32(thresh)
+    npmask = {"<": col < t, "<=": col <= t, ">": col > t, ">=": col >= t,
+              "==": col == t, "!=": col != t}[opcode]
+    assert int(count) == int(npmask.sum())
+    np.testing.assert_allclose(np.asarray(packed)[: int(count)],
+                               table[npmask], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# group-by == dict oracle, any key distribution / bucket count
+# ---------------------------------------------------------------------------
+@settings(**_settings)
+@given(
+    n=st.integers(1, 800),
+    card=st.integers(1, 300),
+    nb=st.sampled_from([16, 64, 256, 1024]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_group_matches_dict_oracle(n, card, nb, seed):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(-card, card, size=n).astype(np.int32)
+    vals = rng.normal(size=(n, 2)).astype(np.float32)
+    got = kops.group_aggregate_full(jnp.asarray(keys), jnp.asarray(vals),
+                                    n_buckets=nb)
+    exact = kref.group_aggregate_exact(keys, vals)
+    assert set(got) == set(exact)
+    for k in exact:
+        assert got[k][0] == exact[k][0]
+        np.testing.assert_allclose(got[k][1], exact[k][1],
+                                   rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# CTR cipher properties
+# ---------------------------------------------------------------------------
+@settings(**_settings)
+@given(
+    n=st.integers(1, 5000),
+    k0=st.integers(0, 2**32 - 1),
+    k1=st.integers(0, 2**32 - 1),
+    nonce=st.integers(0, 2**32 - 1),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_crypt_involutive(n, k0, k1, nonce, seed):
+    rng = np.random.default_rng(seed)
+    data = rng.integers(0, 1 << 32, size=n, dtype=np.uint32)
+    key = np.array([k0, k1], np.uint32)
+    enc = kops.crypt(jnp.asarray(data), key, nonce)
+    dec = kops.crypt(enc, key, nonce)
+    np.testing.assert_array_equal(np.asarray(dec), data)
+
+
+@settings(**_settings)
+@given(seed=st.integers(0, 2**31 - 1), nonce=st.integers(0, 2**32 - 1))
+def test_crypt_keystream_data_independent(seed, nonce):
+    """CTR mode: keystream = E(key, ctr) independent of plaintext."""
+    rng = np.random.default_rng(seed)
+    d1 = rng.integers(0, 1 << 32, size=256, dtype=np.uint32)
+    d2 = rng.integers(0, 1 << 32, size=256, dtype=np.uint32)
+    key = np.array([7, 9], np.uint32)
+    s1 = np.asarray(kops.crypt(jnp.asarray(d1), key, nonce)) ^ d1
+    s2 = np.asarray(kops.crypt(jnp.asarray(d2), key, nonce)) ^ d2
+    np.testing.assert_array_equal(s1, s2)
+
+
+# ---------------------------------------------------------------------------
+# pool allocator invariants
+# ---------------------------------------------------------------------------
+@settings(**_settings)
+@given(
+    ops_seq=st.lists(st.tuples(st.booleans(), st.integers(1, 40)),
+                     min_size=1, max_size=30),
+    n_shards=st.sampled_from([1, 2, 4]),
+)
+def test_pool_allocator_invariants(ops_seq, n_shards):
+    from repro.core.pool import FarPool
+    pool = FarPool(64 * 2**20, n_shards=n_shards)   # 32 pages
+    live: list = []
+    total_pages = pool.n_pages
+    for is_alloc, size_pages in ops_seq:
+        if is_alloc:
+            rows = size_pages * pool.page_words // 8
+            ft = FTable("t", tuple(Column(f"c{i}") for i in range(8)),
+                        n_rows=rows)
+            try:
+                pool.alloc_table(ft)
+                live.append(ft)
+            except MemoryError:
+                assert pool.free_pages < size_pages
+        elif live:
+            pool.free_table(live.pop())
+        # invariant: no page owned twice
+        owned = [p for f in live for p in f.pages]
+        assert len(owned) == len(set(owned))
+        assert len(owned) + pool.free_pages == total_pages
+    for f in live:
+        pool.free_table(f)
+    assert pool.free_pages == total_pages
+
+
+# ---------------------------------------------------------------------------
+# far-KV: any split of the sequence merges to the full softmax
+# ---------------------------------------------------------------------------
+@settings(**_settings)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_shards=st.integers(1, 6),
+    s=st.integers(8, 256),
+)
+def test_partial_merge_any_split(seed, n_shards, s):
+    rng = np.random.default_rng(seed)
+    b, hq, hkv, d = 2, 4, 2, 32
+    # align shard size upward so splits cover s
+    per = -(-s // n_shards)
+    s_pad = per * n_shards
+    q = rng.normal(size=(b, hq, d)).astype(np.float32)
+    k = rng.normal(size=(b, s_pad, hkv, d)).astype(np.float32)
+    v = rng.normal(size=(b, s_pad, hkv, d)).astype(np.float32)
+    lengths = rng.integers(1, s + 1, size=b).astype(np.int32)
+    parts = []
+    for i in range(n_shards):
+        loc = np.clip(lengths - i * per, 0, per).astype(np.int32)
+        parts.append(kref.decode_attention(
+            jnp.asarray(q), jnp.asarray(k[:, i * per:(i + 1) * per]),
+            jnp.asarray(v[:, i * per:(i + 1) * per]), jnp.asarray(loc)))
+    merged = kref.merge_partials(parts)
+    full = kref.full_attention_oracle(jnp.asarray(q), jnp.asarray(k),
+                                      jnp.asarray(v), jnp.asarray(lengths))
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(full),
+                               rtol=2e-4, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# operator-pipeline composition law
+# ---------------------------------------------------------------------------
+@settings(**_settings)
+@given(seed=st.integers(0, 2**31 - 1), card=st.integers(1, 30),
+       thresh=st.floats(0, 1, allow_nan=False))
+def test_select_then_group_equals_group_of_selected(seed, card, thresh):
+    """farview_request(Select+GroupBy) == oracle(group(select(rows)))."""
+    from repro.core.client import (FViewNode, open_connection,
+                                   alloc_table_mem, table_write,
+                                   farview_request, merge_group_partials)
+    rng = np.random.default_rng(seed)
+    n = 512
+    node = FViewNode(16 * 2**20)
+    qp = open_connection(node)
+    ft = FTable("t", (Column("k", "i32"), Column("v", "f32"),
+                      Column("w", "f32")), n_rows=n)
+    alloc_table_mem(qp, ft)
+    data = {"k": rng.integers(0, card, n).astype(np.int32),
+            "v": rng.random(n).astype(np.float32),
+            "w": rng.random(n).astype(np.float32)}
+    table_write(qp, ft, ft.encode(data))
+    pipe = (op.Select((op.Predicate("v", "<", float(thresh)),)),
+            op.GroupBy("k", ("w",), n_buckets=64))
+    res = farview_request(qp, ft, pipe)
+    merged = merge_group_partials(ft, pipe, [res]).groups
+    mask = data["v"] < np.float32(thresh)
+    exact: dict = {}
+    for kk, ww in zip(data["k"][mask], data["w"][mask]):
+        e = exact.setdefault(int(kk), [0, 0.0])
+        e[0] += 1
+        e[1] += float(ww)
+    assert set(merged) == set(exact)
+    for kk in exact:
+        assert merged[kk][0] == exact[kk][0]
+        np.testing.assert_allclose(np.asarray(merged[kk][1]).ravel()[0],
+                                   exact[kk][1], rtol=1e-3, atol=1e-3)

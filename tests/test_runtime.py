@@ -1,0 +1,102 @@
+"""Runtime fault-tolerance tests: restore-on-start, NaN containment,
+checkpoint cadence, elastic restart, loss actually decreases."""
+import tempfile
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import TrainConfig, smoke_config
+from repro.data.pipeline import TokenPipeline
+from repro.models.lm import LM
+from repro.runtime.train_loop import TrainLoop
+
+
+def make_loop(d, total=6, every=2, seed=0, vocab_seq=(128, 32), lr=1e-3,
+              batch=2):
+    cfg = smoke_config(get_config("xlstm-125m")).replace(
+        n_layers=4, d_model=64, n_heads=2, head_dim=32, vocab=vocab_seq[0])
+    tcfg = TrainConfig(learning_rate=lr, warmup_steps=2, total_steps=total,
+                       checkpoint_dir=d, checkpoint_every=every, seed=seed)
+    lm = LM(cfg)
+    pipe = TokenPipeline(vocab=cfg.vocab, seq_len=vocab_seq[1],
+                         global_batch=batch, seed=seed)
+    return TrainLoop(lm, tcfg, pipe)
+
+
+def test_loop_runs_and_checkpoints():
+    with tempfile.TemporaryDirectory() as d:
+        loop = make_loop(d, total=6, every=2)
+        stats = loop.run(6)
+        assert stats.steps_done == 6
+        assert loop.ckpt.latest_step() == 5
+        assert all(np.isfinite(l) for l in stats.losses)
+
+
+def test_restore_on_restart_continues():
+    with tempfile.TemporaryDirectory() as d:
+        loop1 = make_loop(d, total=4, every=2)
+        loop1.run(4)
+        # "crash" after step 4; a new loop object restarts from step 3+1
+        loop2 = make_loop(d, total=8, every=2)
+        stats2 = loop2.run(8)
+        assert stats2.restarts == 1
+        assert stats2.steps_done == 4          # only steps 4..7 re-run
+        assert loop2.ckpt.latest_step() == 7
+
+
+def test_nan_containment():
+    with tempfile.TemporaryDirectory() as d:
+        loop = make_loop(d, total=6, every=2)
+        stats = loop.run(6, fail_at_step=3)
+        assert stats.nan_events == 1
+        assert stats.steps_done >= 5           # recovered and finished
+        assert loop.ckpt.latest_step() == 5
+        assert all(np.isfinite(l) for l in stats.losses)
+
+
+class _BigramPipeline(TokenPipeline):
+    """Deterministic next = cur+1 (mod vocab) stream: learnable to ~0 CE."""
+
+    def batch_at(self, step):
+        rng = np.random.default_rng(step)
+        b, s = self.local_batch, self.seq_len
+        start = rng.integers(0, self.vocab, size=(b, 1))
+        toks = (start + np.arange(s + 1)[None, :]) % self.vocab
+        return {"tokens": toks[:, :-1].astype(np.int32),
+                "labels": toks[:, 1:].astype(np.int32)}
+
+
+def test_loss_decreases():
+    """The loop actually learns: deterministic bigram CE drops sharply."""
+    from repro.configs.base import TrainConfig
+    with tempfile.TemporaryDirectory() as d:
+        cfg = smoke_config(get_config("granite-3-2b")).replace(
+            n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+            d_ff=128, vocab=64)
+        tcfg = TrainConfig(learning_rate=3e-3, warmup_steps=5,
+                           total_steps=60, checkpoint_dir=d,
+                           checkpoint_every=999, seed=0)
+        pipe = _BigramPipeline(vocab=64, seq_len=16, global_batch=4, seed=0)
+        loop = TrainLoop(LM(cfg), tcfg, pipe)
+        stats = loop.run(60)
+        first = np.mean(stats.losses[:5])
+        last = np.mean(stats.losses[-5:])
+        assert stats.nan_events == 0
+        assert last < first - 1.0, (first, last)
+
+
+def test_elastic_restart_same_data_order():
+    """Restarted loop sees the same batches a continuous run would (the
+    elastic re-mesh contract needs only shardings to change, not data)."""
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        cont = make_loop(d1, total=8, every=100)
+        s_cont = cont.run(8)
+        part1 = make_loop(d2, total=4, every=2)
+        part1.run(4)
+        part2 = make_loop(d2, total=8, every=2)
+        s_part = part2.run(8)
+        # last-step losses must agree to float tolerance
+        assert abs(s_cont.losses[-1] - s_part.losses[-1]) < 5e-3
