@@ -1,8 +1,9 @@
 """Fig. 8: selection at 100% / 50% / 25% selectivity, FV vs LCPU vs RCPU.
 
-Measures per-query wall time (CPU-indicative) and the exact shipped-bytes
-fraction (the paper's actual claim: bytes over the wire ∝ selectivity, so
-FV wins whenever selectivity < 1)."""
+Measures per-query blocking p50 wall time (the FV closure's lazy result is
+finalized inside the timed region — completed work, not async dispatch)
+and the exact shipped-bytes fraction (the paper's actual claim: bytes over
+the wire ∝ selectivity, so FV wins whenever selectivity < 1)."""
 from __future__ import annotations
 
 import numpy as np

@@ -1,33 +1,58 @@
 """Shared benchmark utilities: timing, CSV rows, the LCPU/RCPU baselines.
 
 Baselines (paper §6.1):
-  FV    — Farview pipeline on the pool (kernels, interpret mode on CPU)
+  FV    — Farview pipeline on the pool (fused jitted request path)
   LCPU  — local buffer cache + numpy processing on the "client CPU"
   RCPU  — remote buffer cache: full table "shipped" (bytes accounted), then
           numpy processing client-side.
 On this container both baselines run on the same CPU, so wall-times are
 indicative; the byte accounting (shipped/read) is exact and is the number
 the paper's economics rest on. Each row reports both.
+
+Timing is BLOCKING: `timeit` materializes whatever the closure returns
+inside the timed region — lazy `PipelineResult`s are finalized and device
+arrays are `jax.block_until_ready`-ed — so FV rows measure completed work,
+never async dispatch. Reported value is the p50 (median) across repeats.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
 
+import jax
 import numpy as np
 
 ROWS: list[dict] = []
 
 
+def _materialize(x) -> None:
+    """Block on the timed closure's result: finalize lazy pipeline results,
+    wait for device arrays; plain python/numpy values pass through."""
+    if x is None:
+        return
+    if hasattr(x, "finalize"):
+        x.finalize()
+        return
+    if isinstance(x, (list, tuple)):
+        for e in x:
+            _materialize(e)
+        return
+    try:
+        jax.block_until_ready(x)
+    except Exception:
+        pass
+
+
 def timeit(fn, *, repeat: int = 5, warmup: int = 2) -> float:
+    """p50 wall time of `fn()` including result materialization (seconds)."""
     for _ in range(warmup):
-        fn()
-    best = float("inf")
+        _materialize(fn())
+    ts = []
     for _ in range(repeat):
         t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
-    return best
+        _materialize(fn())
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
 
 
 def row(bench: str, name: str, us: float, **derived):
@@ -35,6 +60,17 @@ def row(bench: str, name: str, us: float, **derived):
     r.update(derived)
     ROWS.append(r)
     return r
+
+
+def _plain(v):
+    """JSON/CSV-safe scalar (numpy ints/floats -> python)."""
+    if isinstance(v, (np.integer, np.floating)):
+        return v.item()
+    return v
+
+
+def rows_as_records() -> list[dict]:
+    return [{k: _plain(v) for k, v in r.items()} for r in ROWS]
 
 
 def print_csv():

@@ -6,17 +6,25 @@
   bench_grouping    Fig. 9   distinct / group-by+sum
   bench_regex       Fig. 10  regex matching
   bench_crypto      Fig. 11  encryption on the read path
-  bench_multiclient Fig. 12  6 concurrent clients
+  bench_multiclient Fig. 12  6 concurrent clients (stacked dispatch)
   bench_join        (§7 fut.) small-table in-memory join
   bench_resources   Table 1  per-operator resource budget
   bench_far_kv      (LM)     far-KV push-down economics
 
-Wall-times are CPU-indicative (kernels run interpret=True); shipped/read
-byte columns are exact and carry the paper's actual claims.
+FV rows time the fused jitted request path with BLOCKING p50 timing (see
+common.timeit); shipped/read byte columns are exact and carry the paper's
+actual claims.
+
+`--json PATH` additionally writes the rows as structured JSON records
+(bench, name, us_per_call, plus per-bench fields like shipped_frac/rows),
+so the perf trajectory is recorded PR over PR, e.g.:
+
+    python -m benchmarks.run --json BENCH_$(date +%Y%m%d_%H%M%S).json
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -24,7 +32,7 @@ from benchmarks import (bench_crypto, bench_far_kv, bench_grouping,
                         bench_join, bench_multiclient, bench_projection,
                         bench_rdma, bench_regex, bench_resources,
                         bench_selection)
-from benchmarks.common import print_csv
+from benchmarks.common import print_csv, rows_as_records
 
 ALL = {
     "rdma": bench_rdma.run,
@@ -43,6 +51,9 @@ ALL = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, choices=tuple(ALL))
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as a JSON record list "
+                         "(e.g. BENCH_20260728_120000.json)")
     args = ap.parse_args()
     for name, fn in ALL.items():
         if args.only and name != args.only:
@@ -51,6 +62,10 @@ def main() -> None:
         fn()
         print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
     print_csv()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows_as_records(), f, indent=2, default=str)
+        print(f"# wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

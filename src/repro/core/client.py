@@ -6,41 +6,70 @@ Mirrors the paper's API surface:
     alloc_table_mem / free_table_mem
     table_read / table_write                  (plain one-sided RDMA)
     farview_request(qp, pipeline)  -> result  (the Farview verb)
+    submit_request(qp, pipeline)   -> pending (async verb; node.flush() runs
+                                               the scheduler)
 
 A `FViewNode` owns a FarPool and a fixed set of dynamic regions (default 6,
 the paper's evaluation configuration; tested up to 10). Each open connection
 is bound to a region; a region runs one operator pipeline at a time and its
 compiled executable is swapped per request from the pipeline cache
-(pipeline.py). Requests from different QPairs are scheduled round-robin —
-the fair-share arbiter of §4.3.
+(pipeline.py).
+
+The request path is a batched scheduler: submitted requests queue on the
+node; each scheduling round serves at most one request per QPair in
+round-robin order (the fair-share arbiter of §4.3), and picked requests
+with the same pipeline signature + table layout are coalesced into ONE
+stacked executable dispatch (`CompiledPipeline.run_pages_batched`). The
+dispatch itself is asynchronous — the fused executable consumes pool pages
+directly (no separate read_table) and returns lazy `PipelineResult`s whose
+`finalize()` is the only synchronization point. Data-dependent byte
+accounting (response sizes) settles when results materialize; reading a
+QPair's counters settles its node first.
 """
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field
+from collections import deque
+from dataclasses import dataclass
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import operators as op_ir
 from repro.core.offload import _merge
 from repro.core.pipeline import PipelineResult, compile_pipeline
 from repro.core.pool import FarPool
-from repro.core.table import FTable, WORD_BYTES
+from repro.core.table import FTable
 
 
 class FarviewError(RuntimeError):
     pass
 
 
-@dataclass
 class QPair:
-    """Connection state: ids, region binding, transfer accounting."""
-    qp_id: int
-    node: "FViewNode"
-    region: int
-    bytes_shipped: int = 0
-    bytes_read_pool: int = 0
-    requests: int = 0
+    """Connection state: ids, region binding, transfer accounting.
+
+    Byte counters settle lazily: responses are materialized asynchronously,
+    so reading `bytes_shipped` / `bytes_read_pool` first finalizes any
+    in-flight responses on the owning node (the only sync point)."""
+
+    def __init__(self, qp_id: int, node: "FViewNode", region: int):
+        self.qp_id = qp_id
+        self.node = node
+        self.region = region
+        self.requests = 0
+        self._bytes_shipped = 0
+        self._bytes_read_pool = 0
+
+    @property
+    def bytes_shipped(self) -> int:
+        self.node.settle()
+        return self._bytes_shipped
+
+    @property
+    def bytes_read_pool(self) -> int:
+        self.node.settle()
+        return self._bytes_read_pool
 
 
 @dataclass
@@ -49,6 +78,31 @@ class DynamicRegion:
     loaded_signature: tuple | None = None   # which pipeline is "configured"
     reconfigurations: int = 0
     busy_qp: int | None = None
+
+
+@dataclass
+class PendingRequest:
+    """A submitted Farview verb awaiting a scheduling round."""
+    qp: QPair
+    ft: FTable
+    pipeline: tuple
+    lengths: np.ndarray | None = None
+    strings: np.ndarray | None = None
+    result: PipelineResult | None = None
+    error: Exception | None = None      # dispatch-time failure (this request)
+
+    def wait(self) -> PipelineResult:
+        """Dispatch (if still queued) and materialize the response."""
+        if self.result is None and self.error is None:
+            try:
+                self.qp.node.flush()
+            except Exception:
+                # a different request's dispatch failed; ours may be fine
+                if self.result is None and self.error is None:
+                    raise
+        if self.error is not None:
+            raise self.error
+        return self.result.finalize()
 
 
 class FViewNode:
@@ -63,6 +117,8 @@ class FViewNode:
         self._rr = 0
         self.interpret = interpret
         self.tables: dict[str, FTable] = {}     # name -> handle (catalog)
+        self._queue: deque[PendingRequest] = deque()
+        self._inflight: list[PipelineResult] = []
 
     # ----------------------------------------------------------- connections
     def open_connection(self) -> QPair:
@@ -70,7 +126,8 @@ class FViewNode:
         if not free:
             raise FarviewError("no free dynamic region (all regions bound)")
         region = free[0]
-        qp = QPair(qp_id=next(self._qp_counter), node=self, region=region.region_id)
+        qp = QPair(qp_id=next(self._qp_counter), node=self,
+                   region=region.region_id)
         region.busy_qp = qp.qp_id
         self._qpairs[qp.qp_id] = qp
         return qp
@@ -78,6 +135,147 @@ class FViewNode:
     def close_connection(self, qp: QPair) -> None:
         self.regions[qp.region].busy_qp = None
         self._qpairs.pop(qp.qp_id, None)
+
+    # -------------------------------------------------------------- scheduler
+    def submit(self, qp: QPair, ft: FTable, pipeline: tuple, *,
+               lengths: np.ndarray | None = None,
+               strings: np.ndarray | None = None) -> PendingRequest:
+        """Queue a Farview verb; dispatched at the next scheduling round."""
+        pipeline = op_ir.validate_pipeline(tuple(pipeline))
+        req = PendingRequest(qp, ft, pipeline, lengths, strings)
+        self._queue.append(req)
+        return req
+
+    def flush(self) -> None:
+        """Drain the queue in scheduling rounds.
+
+        Each round serves at most one request per QPair (§4.3 round-robin
+        fair share; the service order rotates across rounds), then coalesces
+        the round's picks by (signature, table layout) and dispatches every
+        group as ONE stacked executable. A group whose dispatch fails does
+        not take down the rest of the round: the error is attached to its
+        requests (raised by `wait()`) and the first one re-raised after the
+        queue drains."""
+        first_err: Exception | None = None
+        while self._queue:
+            picks: list[PendingRequest] = []
+            seen: set[int] = set()
+            rest: deque[PendingRequest] = deque()
+            for req in self._queue:
+                if req.qp.qp_id in seen:
+                    rest.append(req)
+                else:
+                    seen.add(req.qp.qp_id)
+                    picks.append(req)
+            self._queue = rest
+            k = self._rr % len(picks)
+            picks = picks[k:] + picks[:k]       # rotate the arbiter
+            self._rr += 1
+            groups: dict[tuple, list[PendingRequest]] = {}
+            for req in picks:
+                groups.setdefault(self._dispatch_key(req), []).append(req)
+            for reqs in groups.values():
+                try:
+                    self._dispatch(reqs)
+                except Exception as e:
+                    for req in reqs:
+                        req.error = e
+                    if first_err is None:
+                        first_err = e
+        if first_err is not None:
+            raise first_err
+
+    def settle(self) -> None:
+        """Dispatch everything queued and materialize in-flight responses
+        (fires the deferred byte accounting). Dispatch errors stay attached
+        to their own PendingRequest (raised by its `wait()`) — an innocent
+        counter read must not blow up on another client's bad request, and
+        successful responses still settle."""
+        try:
+            self.flush()
+        except Exception:
+            pass
+        inflight, self._inflight = self._inflight, []
+        for res in inflight:
+            res.finalize()
+
+    def _dispatch_key(self, req: PendingRequest) -> tuple:
+        # string payloads and joins dispatch solo; word-table requests with
+        # the same signature + layout stack into one executable. The layout
+        # part must match compile_pipeline's cache key (column names/dtypes,
+        # not just shape) — same-shaped tables with permuted columns compile
+        # to different programs.
+        if req.strings is not None or any(
+                isinstance(o, op_ir.JoinSmall) for o in req.pipeline):
+            return ("solo", id(req))
+        return ("batch", op_ir.signature(req.pipeline),
+                tuple((c.name, c.dtype) for c in req.ft.columns),
+                req.ft.str_width, req.ft.n_rows, req.ft.row_words,
+                len(req.ft.pages))
+
+    def _resolve_build(self, pipeline: tuple):
+        """The node reads the join build table into "on-chip memory"
+        (paper §Conclusions future work) and matches the stream against it."""
+        for o in pipeline:
+            if isinstance(o, op_ir.JoinSmall):
+                bft = self.tables[o.build_table]
+                brows = self.pool.read_table(bft)
+                bkeys = jnp.rint(brows[:, bft.col_index(o.build_key)]
+                                 ).astype(jnp.int32)
+                bcols = [bft.col_index(c) for c in o.build_cols]
+                # key uniqueness is validated by CompiledPipeline._as_build
+                return (bkeys, brows[:, np.asarray(bcols)])
+        return None
+
+    def _dispatch(self, reqs: list[PendingRequest]) -> None:
+        ft0 = reqs[0].ft
+        sig = op_ir.signature(reqs[0].pipeline)
+        pipe = compile_pipeline(ft0, reqs[0].pipeline,
+                                interpret=self.interpret)
+        for req in reqs:
+            region = self.regions[req.qp.region]
+            if region.loaded_signature != sig:
+                region.loaded_signature = sig   # "partial reconfiguration"
+                region.reconfigurations += 1
+
+        if len(reqs) == 1:
+            req = reqs[0]
+            if req.strings is not None:
+                res = pipe(jnp.asarray(req.strings),
+                           jnp.asarray(req.lengths))
+            else:
+                build = self._resolve_build(req.pipeline)
+                res = pipe.run_pages(self.pool.buf, req.ft.pages,
+                                     req.ft.n_rows, build=build,
+                                     n_rows=req.ft.n_rows,
+                                     row_words=req.ft.row_words)
+            results = [res]
+        else:
+            pages = jnp.asarray(np.stack(
+                [np.asarray(r.ft.pages, np.int32) for r in reqs]))
+            n_valid = jnp.asarray([r.ft.n_rows for r in reqs], jnp.int32)
+            results = pipe.run_pages_batched(self.pool.buf, pages, n_valid,
+                                             n_rows=ft0.n_rows,
+                                             row_words=ft0.row_words)
+
+        for req, res in zip(reqs, results):
+            req.result = res
+            qp = req.qp
+            qp.requests += 1
+            qp._bytes_read_pool += res.read_bytes       # static: settle now
+            self.pool.stats.bytes_read += res.read_bytes
+            self.pool.stats.requests += 1
+
+            def _credit(r, qp=qp):                      # data-dependent:
+                qp._bytes_shipped += r._shipped          # settle at finalize
+                self.pool.stats.bytes_shipped += r._shipped
+                try:                    # settled results stop pinning memory
+                    self._inflight.remove(r)
+                except ValueError:
+                    pass                # already drained by settle()
+
+            self._inflight.append(res)
+            res.on_finalize(_credit)
 
 
 def open_connection(node: FViewNode) -> QPair:
@@ -106,65 +304,45 @@ def table_write(qp: QPair, ft: FTable, words: np.ndarray) -> None:
 def table_read(qp: QPair, ft: FTable) -> jnp.ndarray:
     """Plain one-sided RDMA read: ships the whole table (no push-down)."""
     rows = qp.node.pool.read_table(ft)
-    qp.bytes_shipped += ft.n_bytes
-    qp.bytes_read_pool += ft.n_bytes
+    qp._bytes_shipped += ft.n_bytes
+    qp._bytes_read_pool += ft.n_bytes
     qp.requests += 1
     return rows
 
 
 # ------------------------------------------------------------- Farview verb
+def submit_request(qp: QPair, ft: FTable, pipeline: tuple, *,
+                   lengths: np.ndarray | None = None,
+                   strings: np.ndarray | None = None) -> PendingRequest:
+    """Async Farview verb: queue on the node. `node.flush()` dispatches;
+    requests from different QPairs sharing a signature coalesce into one
+    stacked executable per scheduling round."""
+    return qp.node.submit(qp, ft, pipeline, lengths=lengths, strings=strings)
+
+
 def farview_request(qp: QPair, ft: FTable, pipeline: tuple,
                     *, lengths: np.ndarray | None = None,
                     strings: np.ndarray | None = None) -> PipelineResult:
     """The paper's extra one-sided verb: read + operator pipeline push-down.
 
+    One fused executable per (signature, layout) does page gather +
+    operators + byte accounting; the returned result is lazy — touch
+    `.count` / `.shipped_bytes` / `.groups` or call `.finalize()` to sync.
+
     For word tables the rows come from the pool; string tables (regex) pass
     their byte matrix + lengths explicitly (string ingest keeps a byte-exact
     sideband since the pool stores f32 words).
     """
-    node = qp.node
-    region = node.regions[qp.region]
-    sig = tuple(pipeline)
-    if region.loaded_signature != sig:
-        region.loaded_signature = sig      # "partial reconfiguration"
-        region.reconfigurations += 1
-    pipe = compile_pipeline(ft, sig, interpret=node.interpret)
-
-    # small-table join: the node reads the build table into "on-chip
-    # memory" (paper §Conclusions future work) and matches the stream
-    from repro.core import operators as op_ir
-    build = None
-    for o in pipeline:
-        if isinstance(o, op_ir.JoinSmall):
-            bft = node.tables[o.build_table]
-            brows = node.pool.read_table(bft)
-            bkeys = jnp.rint(brows[:, bft.col_index(o.build_key)]
-                             ).astype(jnp.int32)
-            bcols = [bft.col_index(c) for c in o.build_cols]
-            bvals = brows[:, np.asarray(bcols)]
-            build = (bkeys, bvals)
-
-    if strings is not None:
-        res = pipe(jnp.asarray(strings), jnp.asarray(lengths))
-    else:
-        smart_cols = None
-        for op in pipeline:
-            if isinstance(op, op_ir.SmartAddress):
-                smart_cols = [ft.col_index(c) for c in op.cols]
-        if smart_cols is not None:
-            # smart addressing: column-granular pool reads (paper §5.2)
-            node.pool.read_columns(ft, smart_cols)  # accounting read path
-        rows = node.pool.read_table(ft) if smart_cols is None else \
-            node.pool.read_table(ft)  # kernel consumes rows; smart path
-            # narrows inside the pipeline with column-read byte accounting
-        res = pipe(rows, build=build) if build is not None else pipe(rows)
-
-    qp.requests += 1
-    qp.bytes_read_pool += res.read_bytes
-    qp.bytes_shipped += res.shipped_bytes or 0
-    node.pool.stats.bytes_shipped += res.shipped_bytes or 0
-    node.pool.stats.requests += 1
-    return res
+    req = submit_request(qp, ft, pipeline, lengths=lengths, strings=strings)
+    try:
+        qp.node.flush()
+    except Exception:
+        # a different queued request's dispatch failed; ours may be fine
+        if req.result is None and req.error is None:
+            raise
+    if req.error is not None:
+        raise req.error
+    return req.result
 
 
 def merge_group_partials(ft: FTable, pipeline: tuple,

@@ -1,19 +1,43 @@
-"""Pipeline compiler: operator IR -> fused near-data executable (paper §5.1).
+"""Pipeline compiler: operator IR -> ONE fused jitted executable (paper §5.1).
 
-`compile_pipeline(schema, pipeline)` lowers the operator list onto the Pallas
-kernels and returns a callable `(rows, n_valid) -> PipelineResult`. Compiled
-executables are cached by pipeline signature — the analogue of Farview's
-precompiled partial bitstreams: "reconfiguring a dynamic region" is a cache
-lookup + dispatch, and like the paper's ms-scale swap it never disturbs other
-clients' pipelines.
+`compile_pipeline(schema, pipeline)` returns a `CompiledPipeline` whose
+whole request path — pool-page gather, pre-decrypt, join probe, fused
+select/project/pack, group-aggregate, post-encrypt, and response byte
+accounting — is a single traced program per (layout, signature): the
+analogue of Farview's one RDMA verb triggering the full bump-in-the-wire
+pipeline with no CPU round-trips mid-stream.
 
-The executable also returns the response byte count (`shipped_bytes`), i.e.
-the paper's network traffic after push-down — benchmarks and the far-KV
-roofline both read it.
+Entry points:
+
+  pipe(rows[, lengths][, build])                  rows already materialized
+  pipe.run_pages(buf, pages, n_valid[, build])    fused gather: the
+      executable consumes pool pages directly (FarPool.gather_rows read
+      path); `n_valid` is a *traced* scalar masking the tail.
+  pipe.run_pages_batched(buf, pages, n_valid)     stacked multi-client
+      dispatch: pages (B, P), n_valid (B,) — one vmapped executable per
+      scheduling round, results split per client.
+
+All entry points return a lazy `PipelineResult`: device arrays plus traced
+count/byte scalars. `PipelineResult.finalize()` is the ONLY sync point —
+it materializes Python-int counts, extracts group-overflow rows, and fires
+accounting callbacks. Benchmarks call it inside the timed closure; the
+dispatch itself never blocks.
+
+Operator lowering is backend-aware: on TPU the Pallas kernels run inside
+the trace (their pad/layout glue becomes part of the traced program); off
+TPU — where Pallas would run in interpret mode, emulating the MXU datapath
+at ~50x cost — the same operators lower to the XLA-native `*_xla`/ref
+implementations, which tests assert byte-identical.
+
+Compiled executables are cached by (schema layout, pipeline signature) —
+the analogue of Farview's precompiled partial bitstreams: "reconfiguring a
+dynamic region" is a cache lookup + dispatch, and like the paper's
+ms-scale swap it never disturbs other clients' pipelines. A repeated
+signature at the same shape performs zero retraces (`CompiledPipeline
+.traces` counts them; tests/test_fused_path.py regression-checks it).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Callable
 
 import jax
@@ -21,137 +45,357 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import operators as op_ir
+from repro.core import pool as fpool
 from repro.core.regex import compile_regex
 from repro.core.table import FTable, WORD_BYTES
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 
+_DROP_KEY = int(kref.KEY_SENTINEL) + 1   # masked-row group key (never in data)
 
-@dataclass
+
 class PipelineResult:
-    kind: str                       # "rows" | "groups" | "mask"
-    rows: jnp.ndarray | None = None         # packed surviving rows
-    count: jnp.ndarray | int | None = None
-    groups: dict | None = None              # group-by / distinct output
-    mask: jnp.ndarray | None = None         # regex match mask
-    shipped_bytes: int = 0          # paper: bytes sent over the network
-    read_bytes: int = 0             # bytes pulled from pool DRAM
+    """Lazy response handle: device arrays + traced count/byte scalars.
 
+    `finalize()` is the only synchronization point — it converts traced
+    scalars to Python ints, extracts the group-overflow collision buffer
+    (the paper's client-side software merge input), and fires accounting
+    callbacks (QPair / pool byte counters). Scalar properties
+    (`count`, `groups`, `shipped_bytes`) finalize on first access so
+    existing callers keep working; `rows` / `mask` hand back the raw device
+    arrays without forcing a sync.
+    """
 
-_CACHE: dict = {}
+    def __init__(self, kind: str, *, rows=None, count=None, groups=None,
+                 mask=None, shipped_bytes=0, read_bytes=0,
+                 _raw: dict | None = None, _meta: dict | None = None):
+        self.kind = kind                # "rows" | "groups" | "mask"
+        self.read_bytes = read_bytes    # static: bytes pulled from pool DRAM
+        self._rows = rows
+        self._count = count
+        self._groups = groups
+        self._mask = mask
+        self._shipped = shipped_bytes
+        self._raw = _raw                # unfinalized executable payload
+        self._meta = _meta or {}
+        self._callbacks: list[Callable] = []
 
+    # ------------------------------------------------------- raw device views
+    @property
+    def rows(self):
+        if self._raw is not None and "rows" in self._raw:
+            return self._raw["rows"]
+        return self._rows
 
-def compile_pipeline(schema: FTable, pipeline: tuple,
-                     *, interpret: bool | None = None) -> Callable:
-    pipeline = op_ir.validate_pipeline(tuple(pipeline))
-    key = (schema.name, tuple(c.name for c in schema.columns),
-           op_ir.signature(pipeline), interpret)
-    if key in _CACHE:
-        return _CACHE[key]
+    @property
+    def mask(self):
+        if self._raw is not None and "mask" in self._raw:
+            return self._raw["mask"]
+        return self._mask
 
-    # --- resolve static plan -------------------------------------------------
-    sel_ops = np.zeros((schema.n_cols or 1,), np.int32)
-    sel_vals = np.zeros((schema.n_cols or 1,), np.float32)
-    proj_mask = np.ones((schema.n_cols or 1,), np.float32)
-    proj_cols: list[int] | None = None
-    smart = False
-    regex_tbl = None
-    group: op_ir.GroupBy | None = None
-    distinct: op_ir.Distinct | None = None
-    crypt_pre: op_ir.Crypt | None = None
-    crypt_post: op_ir.Crypt | None = None
-    join: op_ir.JoinSmall | None = None
-    has_select = False
+    # ----------------------------------------------------- sync-on-first-read
+    @property
+    def count(self):
+        self.finalize()
+        return self._count
 
-    for op in pipeline:
-        if isinstance(op, op_ir.Project):
-            proj_cols = [schema.col_index(c) for c in op.cols]
-            proj_mask = np.zeros((schema.n_cols,), np.float32)
-            proj_mask[proj_cols] = 1.0
-        elif isinstance(op, op_ir.SmartAddress):
-            proj_cols = [schema.col_index(c) for c in op.cols]
-            smart = True
-        elif isinstance(op, op_ir.Select):
-            has_select = True
-            for p in op.predicates:
-                i = schema.col_index(p.col)
-                sel_ops[i] = op_ir.OPS[p.op]
-                sel_vals[i] = p.value
-        elif isinstance(op, op_ir.RegexMatch):
-            regex_tbl = compile_regex(op.pattern)
-        elif isinstance(op, op_ir.JoinSmall):
-            join = op
-        elif isinstance(op, op_ir.GroupBy):
-            group = op
-        elif isinstance(op, op_ir.Distinct):
-            distinct = op
-        elif isinstance(op, op_ir.Crypt):
-            if op.when == "pre":
-                crypt_pre = op
+    @property
+    def groups(self):
+        self.finalize()
+        return self._groups
+
+    @property
+    def shipped_bytes(self):
+        self.finalize()
+        return self._shipped
+
+    def on_finalize(self, cb: Callable) -> None:
+        """Run `cb(self)` once the response is materialized (accounting)."""
+        if self._raw is None:
+            cb(self)
+        else:
+            self._callbacks.append(cb)
+
+    def finalize(self) -> "PipelineResult":
+        """Materialize the response — the request path's only sync point."""
+        if self._raw is not None:
+            raw, self._raw = self._raw, None
+            if self.kind == "rows":
+                self._rows = raw["rows"]
+                self._count = int(raw["count"])
+                self._shipped = int(raw["shipped"])
+            elif self.kind == "mask":
+                self._mask = raw["mask"]
+                self._shipped = int(raw["shipped"])
             else:
-                crypt_post = op
-        elif isinstance(op, op_ir.Pack):
-            pass
+                self._finalize_groups(raw)
+        if self._callbacks:
+            cbs, self._callbacks = self._callbacks, []
+            for cb in cbs:
+                cb(self)
+        return self
 
-    if join is not None and (group is not None or distinct is not None):
-        raise ValueError("JoinSmall composes with select/project only")
+    def _finalize_groups(self, raw: dict) -> None:
+        # the paper's collision buffer: overflow rows ship to the client
+        # for software post-aggregation
+        ovf = np.asarray(raw["overflow_mask"]).astype(bool)
+        keys = np.asarray(raw["keys"])
+        vals = np.asarray(raw["vals"])
+        ovf_keys = keys[ovf]
+        keep = ovf_keys != _DROP_KEY
+        self._groups = dict(
+            bucket_keys=raw["bucket_keys"], count=raw["count"],
+            sum=raw["sum"], min=raw["min"], max=raw["max"],
+            drop_key=self._meta.get("drop_key"),
+            ovf_keys=ovf_keys[keep], ovf_vals=vals[ovf][keep])
+        self._shipped = int(raw["shipped"])
 
-    def run(rows: jnp.ndarray, lengths: jnp.ndarray | None = None,
-            build: tuple | None = None) -> PipelineResult:
-        """rows: (N, row_words) f32 for word tables, or (N, W) uint8 strings.
-        build: (build_keys (K,), build_vals (K, Vb)) for JoinSmall —
-        resolved from the pool by the client (the memory node "reads the
-        small table into on-chip memory")."""
-        read_bytes = int(np.prod(rows.shape)) * (
-            1 if schema.str_width else WORD_BYTES)
+
+class CompiledPipeline:
+    """One fused jit executable per (schema layout, pipeline signature)."""
+
+    def __init__(self, schema: FTable, pipeline: tuple,
+                 interpret: bool | None):
+        pipeline = op_ir.validate_pipeline(tuple(pipeline))
+        self.signature = op_ir.signature(pipeline)
+        # interpret=True means "no real Pallas backend": lower the operators
+        # to XLA-native implementations instead of emulating the MXU.
+        self.interpret = (interpret if interpret is not None
+                          else jax.default_backend() != "tpu")
+        self.traces = 0          # trace-time counter (cache-regression tests)
+        self._cols = tuple(c.name for c in schema.columns)
+        self._n_cols = len(self._cols)
+        self._str_width = schema.str_width
+
+        # --- resolve static plan (one-time, off the hot path) ---------------
+        a = self._n_cols or 1
+        self.sel_ops = np.zeros((a,), np.int32)
+        self.sel_vals = np.zeros((a,), np.float32)
+        self.proj_mask = np.ones((a,), np.float32)
+        self.proj_cols: list[int] | None = None
+        self.smart = False
+        self.regex_tbl = None
+        self.group: op_ir.GroupBy | None = None
+        self.distinct: op_ir.Distinct | None = None
+        self.crypt_pre: op_ir.Crypt | None = None
+        self.crypt_post: op_ir.Crypt | None = None
+        self.join: op_ir.JoinSmall | None = None
+        self.has_select = False
+
+        for op in pipeline:
+            if isinstance(op, op_ir.Project):
+                self.proj_cols = [self._col(c) for c in op.cols]
+                self.proj_mask = np.zeros((self._n_cols,), np.float32)
+                self.proj_mask[self.proj_cols] = 1.0
+            elif isinstance(op, op_ir.SmartAddress):
+                self.proj_cols = [self._col(c) for c in op.cols]
+                self.smart = True
+            elif isinstance(op, op_ir.Select):
+                self.has_select = True
+                for p in op.predicates:
+                    i = self._col(p.col)
+                    self.sel_ops[i] = op_ir.OPS[p.op]
+                    self.sel_vals[i] = p.value
+            elif isinstance(op, op_ir.RegexMatch):
+                self.regex_tbl = compile_regex(op.pattern)
+            elif isinstance(op, op_ir.JoinSmall):
+                self.join = op
+            elif isinstance(op, op_ir.GroupBy):
+                self.group = op
+            elif isinstance(op, op_ir.Distinct):
+                self.distinct = op
+            elif isinstance(op, op_ir.Crypt):
+                if op.when == "pre":
+                    self.crypt_pre = op
+                else:
+                    self.crypt_post = op
+            elif isinstance(op, op_ir.Pack):
+                pass
+
+        if self.join is not None and (self.group is not None
+                                      or self.distinct is not None):
+            raise ValueError("JoinSmall composes with select/project only")
+
+        self.kind = ("mask" if self.regex_tbl is not None else
+                     "groups" if (self.group is not None
+                                  or self.distinct is not None) else "rows")
+
+        # --- the fused executables (shape-specialized lazily by jit) --------
+        self._jit_rows = jax.jit(self._rows_entry)
+        self._jit_pages = jax.jit(self._pages_entry,
+                                  static_argnames=("n_rows", "row_words"))
+
+    def _col(self, name: str) -> int:
+        try:
+            return self._cols.index(name)
+        except ValueError:
+            raise KeyError(f"no column {name!r}") from None
+
+    # ------------------------------------------------------------ public API
+    def __call__(self, rows, lengths=None, build=None) -> PipelineResult:
+        """Compatibility path: rows already materialized (offload engine,
+        string tables). Still one fused traced program."""
+        rows = jnp.asarray(rows)
+        n = int(rows.shape[0])
+        payload = self._jit_rows(
+            rows, None if lengths is None else jnp.asarray(lengths),
+            self._as_build(build))
+        if self._columnar_read():
+            read_bytes = n * len(self.proj_cols) * WORD_BYTES
+        else:
+            read_bytes = int(np.prod(rows.shape)) * (
+                1 if self._str_width else WORD_BYTES)
+        return self._wrap(payload, read_bytes)
+
+    def run_pages(self, buf, pages, n_valid, build=None, *,
+                  n_rows: int, row_words: int) -> PipelineResult:
+        """The fused request verb: ONE dispatch does page gather + pipeline.
+
+        buf: pool buffer (n_pages, page_words); pages: (P,) page ids;
+        n_valid: traced row-validity scalar (rows >= n_valid are masked).
+        """
+        payload = self._jit_pages(
+            buf, jnp.asarray(pages, jnp.int32),
+            jnp.asarray(n_valid, jnp.int32), self._as_build(build),
+            n_rows=n_rows, row_words=row_words)
+        return self._wrap(payload, self._pages_read_bytes(n_rows, row_words))
+
+    def run_pages_batched(self, buf, pages, n_valid, *,
+                          n_rows: int, row_words: int) -> list[PipelineResult]:
+        """Stacked multi-client dispatch: pages (B, P), n_valid (B,).
+
+        One vmapped executable serves the whole scheduling round; the
+        payload is split back into per-client lazy results.
+        """
+        pages = jnp.asarray(pages, jnp.int32)
+        payload = self._jit_pages(
+            buf, pages, jnp.asarray(n_valid, jnp.int32), None,
+            n_rows=n_rows, row_words=row_words)
+        rb = self._pages_read_bytes(n_rows, row_words)
+        return [self._wrap({k: v[b] for k, v in payload.items()}, rb)
+                for b in range(int(pages.shape[0]))]
+
+    # -------------------------------------------------------------- internals
+    @staticmethod
+    def _as_build(build):
+        if build is None:
+            return None
+        bkeys = jnp.asarray(build[0], jnp.int32)
+        # the uniqueness contract is checked here, eagerly, because inside
+        # the traced body the keys are Tracers and the check would be a
+        # silent no-op (hash_join_xla picks an arbitrary duplicate)
+        if not isinstance(bkeys, jax.core.Tracer):
+            bknp = np.asarray(bkeys)
+            if len(np.unique(bknp)) != len(bknp):
+                raise ValueError(
+                    "build keys must be unique for a small-table join")
+        return (bkeys, jnp.asarray(build[1], jnp.float32))
+
+    def _columnar_read(self) -> bool:
+        """True when the plan actually gathers column-granular (a
+        pre-decrypt forces full-row reads: the CTR keystream is positional
+        over the row) — the read accounting must match the gather."""
+        return (self.smart and self.proj_cols is not None
+                and self.crypt_pre is None and self.regex_tbl is None)
+
+    def _pages_read_bytes(self, n_rows: int, row_words: int) -> int:
+        if self._columnar_read():
+            # column-granular DRAM reads (paper §5.2, Fig. 7)
+            return n_rows * len(self.proj_cols) * WORD_BYTES
+        return n_rows * row_words * WORD_BYTES
+
+    def _wrap(self, payload: dict, read_bytes: int) -> PipelineResult:
+        # drop_key is always published: select masking AND n_valid tail
+        # masking both remap dropped rows to _DROP_KEY, and real keys can
+        # never collide with it (ingest enforces |key| < 2^24).
+        meta = ({"drop_key": _DROP_KEY} if self.kind == "groups" else None)
+        return PipelineResult(self.kind, read_bytes=read_bytes,
+                              _raw=payload, _meta=meta)
+
+    def _rows_entry(self, rows, lengths, build):
+        return self._body(rows, lengths, None, build, narrowed=False)
+
+    def _pages_entry(self, buf, pages, n_valid, build, *, n_rows, row_words):
+        if pages.ndim == 2:                     # stacked multi-client round
+            def one(pg, nv):
+                return self._gather_run(buf, pg, nv, None, n_rows, row_words)
+            return jax.vmap(one)(pages, n_valid)
+        return self._gather_run(buf, pages, n_valid, build, n_rows, row_words)
+
+    def _gather_run(self, buf, pages, n_valid, build, n_rows, row_words):
+        if self._columnar_read():
+            work = fpool.gather_columns(buf, pages, n_rows, row_words,
+                                        tuple(self.proj_cols))
+            return self._body(work, None, n_valid, build, narrowed=True)
+        rows = fpool.gather_rows(buf, pages, n_rows, row_words)
+        return self._body(rows, None, n_valid, build, narrowed=False)
+
+    def _body(self, work, lengths, n_valid, build, *, narrowed: bool):
+        """The whole request pipeline as one traced program."""
+        self.traces += 1                         # trace-time side effect only
+        xla = self.interpret                     # lowering choice (static)
+        n = work.shape[0]
+        valid = (None if n_valid is None
+                 else jnp.arange(n, dtype=jnp.int32) < n_valid)
 
         # -- pre-decrypt (data at rest is encrypted; cipher on read stream) --
-        if crypt_pre is not None:
-            flat = rows.reshape(-1)
-            if schema.str_width:
+        if self.crypt_pre is not None:
+            key = np.asarray(self.crypt_pre.key, np.uint32)
+            nonce = self.crypt_pre.nonce
+            flat = work.reshape(-1)
+            if self._str_width:
                 u32 = flat.astype(jnp.uint32)
             else:
                 u32 = jnp.asarray(flat, jnp.float32).view(jnp.uint32)
-            dec = kops.crypt(u32, np.array(crypt_pre.key, np.uint32),
-                             crypt_pre.nonce, interpret=interpret)
-            rows = (dec.view(jnp.float32).reshape(rows.shape)
-                    if not schema.str_width
-                    else dec.astype(jnp.uint8).reshape(rows.shape))
+            if xla:
+                dec = kref.ctr_crypt(u32, jnp.asarray(key), nonce)
+            else:
+                dec = kops.crypt(u32, key, nonce, interpret=False)
+            work = (dec.view(jnp.float32).reshape(work.shape)
+                    if not self._str_width
+                    else dec.astype(jnp.uint8).reshape(work.shape))
 
         # -- regex path (string tables) --------------------------------------
-        if regex_tbl is not None:
-            table, accept = regex_tbl
-            mask = kops.regex_match(rows, lengths, jnp.asarray(table),
-                                    jnp.asarray(accept), interpret=interpret)
-            shipped = int(mask.shape[0])  # 1 byte/row decision + matched rows
-            return PipelineResult(kind="mask", mask=mask,
-                                  shipped_bytes=shipped,
-                                  read_bytes=read_bytes)
+        if self.regex_tbl is not None:
+            table, accept = self.regex_tbl
+            if xla:
+                mask = kref.dfa_match(work, lengths, jnp.asarray(table),
+                                      jnp.asarray(accept))
+            else:
+                mask = kops.regex_match(work, lengths, jnp.asarray(table),
+                                        jnp.asarray(accept), interpret=False)
+            if valid is not None:
+                mask = mask & valid
+            # 1 byte/row decision + matched rows
+            return {"mask": mask, "shipped": jnp.int32(n)}
 
-        # -- smart addressing already narrowed columns ------------------------
-        work = rows
-        if smart and proj_cols is not None:
-            # caller passed full rows; emulate column-granular DRAM reads
-            work = rows[:, np.asarray(proj_cols)]
-            read_bytes = work.shape[0] * len(proj_cols) * WORD_BYTES
-            eff_sel_ops = sel_ops[np.asarray(proj_cols)]
-            eff_sel_vals = sel_vals[np.asarray(proj_cols)]
-            eff_proj = np.ones((len(proj_cols),), np.float32)
+        # -- smart addressing narrows columns (unless gathered narrowed) -----
+        if self.smart and self.proj_cols is not None:
+            if not narrowed:
+                work = work[:, np.asarray(self.proj_cols)]
+            eff_sel_ops = self.sel_ops[np.asarray(self.proj_cols)]
+            eff_sel_vals = self.sel_vals[np.asarray(self.proj_cols)]
+            eff_proj = np.ones((len(self.proj_cols),), np.float32)
         else:
-            eff_sel_ops, eff_sel_vals, eff_proj = sel_ops, sel_vals, proj_mask
+            eff_sel_ops = self.sel_ops
+            eff_sel_vals = self.sel_vals
+            eff_proj = self.proj_mask
 
-        # -- small-table join (paper future work): append matched build
-        # values + a hit column, expressed as extra predicate/projection
-        # columns so the fused select_project kernel does the packing ------
-        if join is not None:
+        # -- small-table join: matched build values + a hit column,
+        # expressed as extra predicate/projection columns so the fused
+        # select/project does the packing ------------------------------------
+        has_join = self.join is not None
+        if has_join:
             if build is None:
                 raise ValueError("JoinSmall needs build=(keys, vals)")
             bkeys, bvals = build
-            pkeys = jnp.rint(work[:, schema.col_index(join.probe_key)]
+            pkeys = jnp.rint(work[:, self._col(self.join.probe_key)]
                              ).astype(jnp.int32)
-            joined, hit = kops.hash_join(pkeys, jnp.asarray(bkeys),
-                                         jnp.asarray(bvals),
-                                         interpret=interpret)
+            if xla:
+                joined, hit = kops.hash_join_xla(pkeys, bkeys, bvals)
+            else:
+                joined, hit = kops.hash_join(pkeys, bkeys, bvals,
+                                             interpret=False)
             nb = joined.shape[1]
             work = jnp.concatenate(
                 [work, joined, hit[:, None].astype(jnp.float32)], axis=1)
@@ -164,70 +408,107 @@ def compile_pipeline(schema: FTable, pipeline: tuple,
             eff_proj = np.concatenate(
                 [eff_proj, np.ones(nb, np.float32),
                  np.zeros(1, np.float32)])      # keep build cols, drop hit
-            has_join = True
-        else:
-            has_join = False
 
-        # -- selection + projection + packing (fused kernel) ------------------
-        if has_select or has_join or proj_cols is not None or (
-                group is None and distinct is None):
-            packed, count = kops.select_project(
-                work, jnp.asarray(eff_sel_ops), jnp.asarray(eff_sel_vals),
-                jnp.asarray(eff_proj), interpret=interpret)
-        else:
-            packed, count = work, work.shape[0]
+        # -- grouping ---------------------------------------------------------
+        if self.group is not None or self.distinct is not None:
+            return self._group_body(work, eff_sel_ops, eff_sel_vals, valid,
+                                    xla)
 
-        # -- grouping ----------------------------------------------------------
-        if group is not None or distinct is not None:
-            if group is not None:
-                kcol = schema.col_index(group.key)
-                vcols = [schema.col_index(c) for c in group.values]
-                nb = group.n_buckets
+        # -- selection + projection + packing (fused) -------------------------
+        if xla:
+            packed, count = kops.select_project_xla(
+                work, eff_sel_ops, eff_sel_vals, eff_proj, valid)
+        else:
+            if valid is not None:
+                # validity as an extra ==1 predicate column through the kernel
+                work_v = jnp.concatenate(
+                    [work, valid.astype(jnp.float32)[:, None]], axis=1)
+                ops_v = np.concatenate(
+                    [eff_sel_ops, np.asarray([op_ir.OPS["=="]], np.int32)])
+                vals_v = np.concatenate(
+                    [eff_sel_vals, np.asarray([1.0], np.float32)])
+                proj_v = np.concatenate([eff_proj, np.zeros(1, np.float32)])
+                packed, count = kops.select_project(
+                    work_v, jnp.asarray(ops_v), jnp.asarray(vals_v),
+                    jnp.asarray(proj_v), interpret=False)
+                packed = packed[:, :-1]
             else:
-                kcol = schema.col_index(distinct.cols[0])
-                vcols = [kcol]
-                nb = distinct.n_buckets
-            keys = jnp.rint(work[:, kcol]).astype(jnp.int32)
-            vals = work[:, np.asarray(vcols)]
-            if has_select:
-                # grouping consumes only selected rows: mask via +sentinel key
-                m = kref.eval_predicate(work, jnp.asarray(eff_sel_ops),
-                                        jnp.asarray(eff_sel_vals))
-                keys = jnp.where(m, keys, kref.KEY_SENTINEL + 1)
-                vals = jnp.where(m[:, None], vals, 0)
-            res = kops.group_aggregate(keys, vals, n_buckets=nb,
-                                       interpret=interpret)
-            res["drop_key"] = kref.KEY_SENTINEL + 1 if has_select else None
-            # the paper's collision buffer: overflow rows ship to the client
-            # for software post-aggregation
-            ovf = np.asarray(res.pop("overflow_mask"))
-            ovf_keys = np.asarray(keys)[ovf]
-            keep = ovf_keys != kref.KEY_SENTINEL + 1
-            res["ovf_keys"] = ovf_keys[keep]
-            res["ovf_vals"] = np.asarray(vals)[ovf][keep]
-            ship = (nb * (2 + 4 * len(vcols)) * WORD_BYTES
-                    + int(keep.sum()) * (1 + len(vcols)) * WORD_BYTES)
-            return PipelineResult(kind="groups", groups=res,
-                                  shipped_bytes=ship, read_bytes=read_bytes)
+                packed, count = kops.select_project(
+                    work, jnp.asarray(eff_sel_ops),
+                    jnp.asarray(eff_sel_vals), jnp.asarray(eff_proj),
+                    interpret=False)
 
         # -- post-encrypt + pack ----------------------------------------------
-        if crypt_post is not None:
+        if self.crypt_post is not None:
+            key = np.asarray(self.crypt_post.key, np.uint32)
             u32 = packed.reshape(-1).view(jnp.uint32)
-            enc = kops.crypt(u32, np.array(crypt_post.key, np.uint32),
-                             crypt_post.nonce, interpret=interpret)
+            if xla:
+                enc = kref.ctr_crypt(u32, jnp.asarray(key),
+                                     self.crypt_post.nonce)
+            else:
+                enc = kops.crypt(u32, key, self.crypt_post.nonce,
+                                 interpret=False)
             packed = enc.view(jnp.float32).reshape(packed.shape)
 
-        ncols_out = (len(proj_cols) if (proj_cols is not None and smart)
+        ncols_out = (len(self.proj_cols)
+                     if (self.proj_cols is not None and self.smart)
                      else int(np.sum(eff_proj)))
-        try:
-            shipped = int(count) * ncols_out * WORD_BYTES
-        except (jax.errors.TracerArrayConversionError, TypeError):
-            shipped = None      # traced under jit; caller accounts post-hoc
-        return PipelineResult(kind="rows", rows=packed, count=count,
-                              shipped_bytes=shipped, read_bytes=read_bytes)
+        shipped = count.astype(jnp.int32) * np.int32(ncols_out * WORD_BYTES)
+        return {"rows": packed, "count": count, "shipped": shipped}
 
-    _CACHE[key] = run
-    return run
+    def _group_body(self, work, eff_sel_ops, eff_sel_vals, valid, xla):
+        if self.group is not None:
+            kcol = self._col(self.group.key)
+            vcols = [self._col(c) for c in self.group.values]
+            nb = self.group.n_buckets
+        else:
+            kcol = self._col(self.distinct.cols[0])
+            vcols = [kcol]
+            nb = self.distinct.n_buckets
+        keys = jnp.rint(work[:, kcol]).astype(jnp.int32)
+        vals = work[:, np.asarray(vcols)]
+        # grouping consumes only selected+valid rows: mask via sentinel key
+        m = None
+        if self.has_select:
+            m = kref.eval_predicate(work, jnp.asarray(eff_sel_ops),
+                                    jnp.asarray(eff_sel_vals))
+        if valid is not None:
+            m = valid if m is None else (m & valid)
+        if m is not None:
+            keys = jnp.where(m, keys, _DROP_KEY)
+            vals = jnp.where(m[:, None], vals, 0)
+        if xla:
+            res = kref.group_aggregate(keys, vals, nb)
+        else:
+            res = kops.group_aggregate(keys, vals, n_buckets=nb,
+                                       interpret=False)
+        ovf = res["overflow_mask"]
+        keep_cnt = jnp.sum((ovf & (keys != _DROP_KEY)).astype(jnp.int32))
+        shipped = (np.int32(nb * (2 + 4 * len(vcols)) * WORD_BYTES)
+                   + keep_cnt * np.int32((1 + len(vcols)) * WORD_BYTES))
+        return {"bucket_keys": res["bucket_keys"], "count": res["count"],
+                "sum": res["sum"], "min": res["min"], "max": res["max"],
+                "overflow_mask": ovf, "keys": keys, "vals": vals,
+                "shipped": shipped}
+
+
+_CACHE: dict = {}
+
+
+def compile_pipeline(schema: FTable, pipeline: tuple,
+                     *, interpret: bool | None = None) -> CompiledPipeline:
+    """Fetch (or build) the fused executable for (schema layout, signature).
+
+    The key deliberately excludes the table *name*: two clients running the
+    same pipeline over same-layout tables share one executable, which is
+    what lets the node's scheduler coalesce them into a stacked dispatch.
+    """
+    pipeline = op_ir.validate_pipeline(tuple(pipeline))
+    key = (tuple((c.name, c.dtype) for c in schema.columns),
+           schema.str_width, op_ir.signature(pipeline), interpret)
+    if key not in _CACHE:
+        _CACHE[key] = CompiledPipeline(schema, pipeline, interpret)
+    return _CACHE[key]
 
 
 def cache_info() -> int:

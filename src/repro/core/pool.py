@@ -9,6 +9,12 @@ A paged, device-resident u32/f32 word buffer with:
     smart addressing (Fig. 7) pay off,
   * capacity accounting + quota per client.
 
+The read path is device-resident: `gather_rows` / `gather_columns` are pure
+functions of `(buf, pages)` that are safe to call *inside* a jitted
+program, so the fused request executable (core/pipeline.py) consumes pages
+directly — one compiled program does gather + operators, with no separate
+`read_table` dispatch on the hot path.
+
 On a multi-device mesh the page axis is sharded over the pool axis
 (`NamedSharding(mesh, P("model"))`), so page p lives on device
 p // (n_pages / n_shards); the round-robin-across-chunks allocator below
@@ -17,7 +23,9 @@ stripes consecutive addresses across DRAM channels.
 """
 from __future__ import annotations
 
+import functools
 import math
+from collections import deque
 from dataclasses import dataclass, field
 
 import jax
@@ -27,6 +35,38 @@ import numpy as np
 from repro.core.table import FTable, WORD_BYTES
 
 PAGE_BYTES = 2 * 1024 * 1024
+
+
+# ---------------------------------------------------------------- read path
+def gather_rows(buf: jnp.ndarray, pages: jnp.ndarray, n_rows: int,
+                row_words: int) -> jnp.ndarray:
+    """Device-resident page gather -> (n_rows, row_words) f32.
+
+    Pure in (buf, pages); n_rows/row_words are static shapes. Safe inside a
+    traced program — the fused pipeline executable calls this directly so
+    the pool read is part of the same compiled dispatch.
+    """
+    flat = buf[pages].reshape(-1)
+    return flat[: n_rows * row_words].reshape(n_rows, row_words)
+
+
+def gather_columns(buf: jnp.ndarray, pages: jnp.ndarray, n_rows: int,
+                   row_words: int, col_idx: tuple[int, ...]) -> jnp.ndarray:
+    """Smart addressing (paper §5.2) as a device-resident strided gather:
+    only the projected columns' words leave DRAM. Returns (n_rows, k)."""
+    flat = buf[pages].reshape(-1)
+    base = jnp.arange(n_rows, dtype=jnp.int32) * row_words
+    return jnp.stack([flat[base + c] for c in col_idx], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("n_rows", "row_words"))
+def _gather_rows_jit(buf, pages, *, n_rows, row_words):
+    return gather_rows(buf, pages, n_rows, row_words)
+
+
+@functools.partial(jax.jit, static_argnames=("n_rows", "row_words", "col_idx"))
+def _gather_columns_jit(buf, pages, *, n_rows, row_words, col_idx):
+    return gather_columns(buf, pages, n_rows, row_words, col_idx)
 
 
 @dataclass
@@ -55,9 +95,11 @@ class FarPool:
         if sharding is not None:
             buf = jax.device_put(buf, sharding)
         self.buf = buf
-        # free lists per shard chunk — striping allocates round-robin chunks
-        self._free: list[list[int]] = [
-            list(range(s * self.chunk, (s + 1) * self.chunk))
+        # free lists per shard chunk — striping allocates round-robin chunks.
+        # deques: alloc pops left, free appends right — O(1) either end
+        # (a plain list.pop(0) is O(n) and quadratic over an alloc storm).
+        self._free: list[deque[int]] = [
+            deque(range(s * self.chunk, (s + 1) * self.chunk))
             for s in range(n_shards)]
         self._next_table_id = 0
         self.page_table: dict[int, tuple[int, ...]] = {}  # the "TLB"
@@ -73,18 +115,15 @@ class FarPool:
         if n_pages > self.free_pages:
             raise MemoryError(
                 f"pool exhausted: need {n_pages} pages, have {self.free_pages}")
-        pages = []
+        # round-robin striping across shards, skipping exhausted shards
+        # (shard-exhaustion fallback: remaining shards keep serving).
+        pages: list[int] = []
         s = 0
         while len(pages) < n_pages:
-            if self._free[s % self.n_shards]:
-                pages.append(self._free[s % self.n_shards].pop(0))
+            free = self._free[s % self.n_shards]
+            if free:
+                pages.append(free.popleft())
             s += 1
-            if s > n_pages * self.n_shards + self.n_shards:
-                # some shards exhausted; drain any remaining
-                for f in self._free:
-                    while f and len(pages) < n_pages:
-                        pages.append(f.pop(0))
-                break
         ft.table_id = self._next_table_id
         self._next_table_id += 1
         ft.pages = tuple(pages)
@@ -109,24 +148,25 @@ class FarPool:
             padded.reshape(n_pages, self.page_words))
         self.stats.bytes_written += int(flat.shape[0]) * WORD_BYTES
 
+    def gather_rows(self, pages, n_rows: int, row_words: int) -> jnp.ndarray:
+        """Device-resident read path (no accounting): one jitted gather."""
+        return _gather_rows_jit(self.buf, jnp.asarray(pages, jnp.int32),
+                                n_rows=n_rows, row_words=row_words)
+
     def read_table(self, ft: FTable) -> jnp.ndarray:
         """Full-table RDMA read -> (n_rows, row_words) f32."""
-        pages = jnp.asarray(ft.pages, jnp.int32)
-        flat = self.buf[pages].reshape(-1)[:ft.n_words]
+        rows = self.gather_rows(ft.pages, ft.n_rows, ft.row_words)
         self.stats.bytes_read += ft.n_bytes
-        return flat.reshape(ft.n_rows, ft.row_words)
+        return rows
 
     def read_columns(self, ft: FTable, col_idx: list[int]) -> jnp.ndarray:
-        """Smart addressing (paper §5.2): issue per-column strided reads so
-        only the projected columns' words leave DRAM. Returns (n_rows, k)."""
-        pages = jnp.asarray(ft.pages, jnp.int32)
-        flat = self.buf[pages].reshape(-1)
-        rows = jnp.arange(ft.n_rows) * ft.row_words
-        cols = []
-        for c in col_idx:
-            cols.append(flat[rows + c])
+        """Smart addressing (paper §5.2): per-column strided reads so only
+        the projected columns' words leave DRAM. Returns (n_rows, k)."""
+        out = _gather_columns_jit(self.buf, jnp.asarray(ft.pages, jnp.int32),
+                                  n_rows=ft.n_rows, row_words=ft.row_words,
+                                  col_idx=tuple(col_idx))
         self.stats.bytes_read += ft.n_rows * len(col_idx) * WORD_BYTES
-        return jnp.stack(cols, axis=1)
+        return out
 
     def local_rows(self, ft: FTable, shard: int) -> jnp.ndarray:
         """Rows whose pages live on `shard` (for near-data offload)."""

@@ -255,9 +255,11 @@ def hash_join(probe_keys, build_keys, build_vals, *, block_rows: int = 256,
     """
     if interpret is None:
         interpret = _interpret_default()
-    bk = np.asarray(build_keys)
-    if len(np.unique(bk)) != len(bk):
-        raise ValueError("build keys must be unique for a small-table join")
+    if not isinstance(build_keys, jax.core.Tracer):
+        bk = np.asarray(build_keys)
+        if len(np.unique(bk)) != len(bk):
+            raise ValueError(
+                "build keys must be unique for a small-table join")
     n = probe_keys.shape[0]
     k, v = build_vals.shape
     pk = _pad_to(probe_keys.astype(jnp.int32)[:, None], 0, block_rows,
@@ -268,3 +270,47 @@ def hash_join(probe_keys, build_keys, build_vals, *, block_rows: int = 256,
     joined, hit = _hj.hash_join(pk, bkp, bvp, block_rows=block_rows,
                                 interpret=interpret)
     return joined[:n, :v], hit[:n, 0].astype(bool)
+
+
+# ---------------------------------------------------------------------------
+# XLA-native lowerings (fused request path off-TPU)
+# ---------------------------------------------------------------------------
+# The fused pipeline executable (core/pipeline.py) uses these when the
+# Pallas kernels would run in interpret mode: same operator contracts as the
+# kernels above (asserted against kernels/ref.py by tests/test_fused_path.py)
+# but lowered to plain XLA ops, which on CPU are ~50x faster than emulating
+# the MXU datapath. No tile padding or layout transforms are needed, so the
+# traced program stays glue-free.
+
+def select_project_xla(table, sel_ops, sel_vals, proj_mask, valid=None):
+    """ref.select_project semantics + an optional row-validity mask.
+
+    table (N, A) f32; sel_ops (A,) i32; sel_vals/proj_mask (A,) f32;
+    valid (N,) bool or None. Returns (packed (N, A), count scalar i32):
+    surviving valid rows stably compacted to the front, dropped columns
+    zeroed, tail zero-filled.
+    """
+    mask = ref.eval_predicate(table, jnp.asarray(sel_ops),
+                              jnp.asarray(sel_vals))
+    if valid is not None:
+        mask = mask & valid
+    projected = jnp.where(jnp.asarray(proj_mask)[None, :].astype(bool),
+                          table, 0)
+    order = jnp.argsort(~mask, stable=True)
+    packed = jnp.where(mask[order][:, None], projected[order], 0)
+    return packed, jnp.sum(mask.astype(jnp.int32))
+
+
+def hash_join_xla(probe_keys, build_keys, build_vals):
+    """kernels.hash_join contract via sorted lookup (no VMEM hash table).
+
+    probe_keys (N,) i32; build_keys (K,) i32 unique; build_vals (K, V) f32.
+    Returns (joined (N, V) — matched build row or zeros, hit (N,) bool).
+    """
+    order = jnp.argsort(build_keys)
+    sk = build_keys[order]
+    sv = build_vals[order]
+    idx = jnp.clip(jnp.searchsorted(sk, probe_keys), 0, sk.shape[0] - 1)
+    hit = sk[idx] == probe_keys
+    joined = jnp.where(hit[:, None], sv[idx], 0.0)
+    return joined.astype(jnp.float32), hit

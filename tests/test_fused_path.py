@@ -1,0 +1,409 @@
+"""The fused request path (core/pipeline.py CompiledPipeline).
+
+(a) the single jitted executable's results are byte-identical to the
+    kernels/ref.py reference for select/project, group-by, crypt and join
+    pipelines;
+(b) cache regression: a repeated pipeline signature performs exactly one
+    trace (CompiledPipeline.traces counts trace-time entries);
+(c) batched multi-QP dispatch (one stacked executable per scheduling
+    round) preserves per-client results and fair accounting;
+(d) results are lazy: finalize() is the sync point and settles byte
+    accounting.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import operators as op
+from repro.core.client import (FViewNode, alloc_table_mem, farview_request,
+                               open_connection, submit_request, table_write)
+from repro.core.pipeline import clear_cache, compile_pipeline
+from repro.core.table import FTable, Column
+from repro.kernels import ref
+
+
+def word_table(qp, name, n=1024, seed=0, card=0):
+    rng = np.random.default_rng(seed)
+    cols = tuple(Column(f"c{i}", "i32" if (i == 0 and card) else "f32")
+                 for i in range(8))
+    ft = FTable(name, cols, n_rows=n)
+    alloc_table_mem(qp, ft)
+    data = {}
+    for i in range(8):
+        if i == 0 and card:
+            data["c0"] = rng.integers(0, card, n).astype(np.int32)
+        else:
+            data[f"c{i}"] = rng.normal(size=n).astype(np.float32)
+    words = ft.encode(data)
+    table_write(qp, ft, words)
+    return ft, data, words
+
+
+class TestRefParity:
+    """Fused executable output == kernels/ref.py oracle, byte for byte."""
+
+    def setup_method(self):
+        self.node = FViewNode(32 * 2**20)
+        self.qp = open_connection(self.node)
+
+    def test_select_project(self):
+        ft, data, words = word_table(self.qp, "sp")
+        pipe = (op.Project(("c1", "c4")),
+                op.Select((op.Predicate("c2", "<", 0.3),
+                           op.Predicate("c5", ">", -0.8))))
+        res = farview_request(self.qp, ft, pipe).finalize()
+        sel_ops = np.zeros(8, np.int32)
+        sel_vals = np.zeros(8, np.float32)
+        sel_ops[2], sel_vals[2] = op.OPS["<"], 0.3
+        sel_ops[5], sel_vals[5] = op.OPS[">"], -0.8
+        proj = np.zeros(8, np.float32)
+        proj[[1, 4]] = 1.0
+        exp_rows, exp_count = ref.select_project(
+            jnp.asarray(words), jnp.asarray(sel_ops), jnp.asarray(sel_vals),
+            jnp.asarray(proj))
+        assert res.count == int(exp_count)
+        np.testing.assert_array_equal(np.asarray(res.rows),
+                                      np.asarray(exp_rows))
+        assert res.shipped_bytes == res.count * 2 * 4
+
+    def test_group_by(self):
+        ft, data, words = word_table(self.qp, "gb", card=19)
+        pipe = (op.Select((op.Predicate("c1", "<", 0.0),)),
+                op.GroupBy("c0", ("c1", "c2"), n_buckets=256))
+        res = farview_request(self.qp, ft, pipe).finalize()
+        # oracle: same masking contract, then the ref kernel
+        keys = np.rint(words[:, 0]).astype(np.int32)
+        vals = words[:, [1, 2]].astype(np.float32)
+        m = data["c1"] < 0.0
+        keys = np.where(m, keys, ref.KEY_SENTINEL + 1)
+        vals = np.where(m[:, None], vals, 0)
+        exp = ref.group_aggregate(jnp.asarray(keys), jnp.asarray(vals), 256)
+        for k in ("bucket_keys", "count", "sum", "min", "max"):
+            np.testing.assert_array_equal(np.asarray(res.groups[k]),
+                                          np.asarray(exp[k]))
+        ovf = np.asarray(exp["overflow_mask"]).astype(bool)
+        exp_ovf_keys = keys[ovf]
+        keep = exp_ovf_keys != ref.KEY_SENTINEL + 1
+        np.testing.assert_array_equal(res.groups["ovf_keys"],
+                                      exp_ovf_keys[keep])
+        np.testing.assert_array_equal(res.groups["ovf_vals"],
+                                      vals[ovf][keep])
+
+    def test_crypt_pre_and_post(self):
+        ft, data, words = word_table(self.qp, "cr")
+        key, nonce = (7, 13), 21
+        plain_u32 = words.astype(np.float32).reshape(-1).view(np.uint32)
+        enc = np.asarray(ref.ctr_crypt(jnp.asarray(plain_u32),
+                                       jnp.asarray(key, jnp.uint32), nonce))
+        table_write(self.qp, ft,
+                    enc.view(np.float32).reshape(words.shape))
+        pipe = (op.Crypt(key=key, nonce=nonce, when="pre"),
+                op.Select((op.Predicate("c3", ">=", 0.1),)))
+        res = farview_request(self.qp, ft, pipe).finalize()
+        sel_ops = np.zeros(8, np.int32)
+        sel_vals = np.zeros(8, np.float32)
+        sel_ops[3], sel_vals[3] = op.OPS[">="], 0.1
+        exp_rows, exp_count = ref.select_project(
+            jnp.asarray(words), jnp.asarray(sel_ops), jnp.asarray(sel_vals),
+            jnp.ones(8, jnp.float32))
+        assert res.count == int(exp_count)
+        np.testing.assert_array_equal(np.asarray(res.rows),
+                                      np.asarray(exp_rows))
+        # post-encrypt: response must decrypt back to the plain projection
+        table_write(self.qp, ft, words)
+        pipe2 = (op.Project(("c0",)),
+                 op.Crypt(key=(9, 9), nonce=3, when="post"))
+        res2 = farview_request(self.qp, ft, pipe2).finalize()
+        resp = np.asarray(res2.rows).reshape(-1).view(np.uint32)
+        dec = np.asarray(ref.ctr_crypt(jnp.asarray(resp),
+                                       jnp.asarray((9, 9), jnp.uint32), 3))
+        got = dec.view(np.float32).reshape(np.asarray(res2.rows).shape)
+        proj = np.zeros(8, np.float32)
+        proj[0] = 1.0
+        exp_rows2, _ = ref.select_project(
+            jnp.asarray(words), jnp.zeros(8, jnp.int32),
+            jnp.zeros(8, jnp.float32), jnp.asarray(proj))
+        np.testing.assert_array_equal(got, np.asarray(exp_rows2))
+
+    def test_n_valid_tail_masking_groups(self):
+        """run_pages with n_valid < n_rows: masked tail rows must not leak
+        a phantom group (drop_key filters them at merge)."""
+        from repro.core.offload import _merge
+        ft, data, words = word_table(self.qp, "nv", n=64, card=8)
+        pipe = (op.Distinct(("c0",), n_buckets=32),)
+        cp = compile_pipeline(ft, pipe)
+        res = cp.run_pages(self.node.pool.buf, ft.pages, 40,
+                           n_rows=ft.n_rows, row_words=ft.row_words)
+        res.finalize()
+        assert res.groups["drop_key"] is not None
+        merged = _merge(ft, pipe, [res]).groups
+        assert set(merged) == set(np.unique(data["c0"][:40]).tolist())
+
+    def test_duplicate_build_keys_rejected(self):
+        """The uniqueness contract must hold on the jitted path too (the
+        traced hash_join cannot check it; _as_build does, eagerly)."""
+        ft, _, _ = word_table(self.qp, "p", n=256, card=8)
+        pipe = (op.JoinSmall(probe_key="c0", build_table="b",
+                             build_key="k", build_cols=("v",)),)
+        cp = compile_pipeline(ft, pipe)
+        dup = (np.asarray([1, 1, 2], np.int32),
+               np.ones((3, 1), np.float32))
+        with pytest.raises(ValueError, match="unique"):
+            cp.run_pages(self.node.pool.buf, ft.pages, ft.n_rows,
+                         build=dup, n_rows=ft.n_rows,
+                         row_words=ft.row_words)
+
+    def test_join(self):
+        ft, data, words = word_table(self.qp, "probe", card=64)
+        build = FTable("build", (Column("k", "i32"), Column("v")), n_rows=40)
+        alloc_table_mem(self.qp, build)
+        rng = np.random.default_rng(9)
+        bk = rng.permutation(64)[:40].astype(np.int32)
+        bv = rng.random(40).astype(np.float32)
+        table_write(self.qp, build, build.encode({"k": bk, "v": bv}))
+        pipe = (op.JoinSmall(probe_key="c0", build_table="build",
+                             build_key="k", build_cols=("v",)),)
+        res = farview_request(self.qp, ft, pipe).finalize()
+        # oracle: ref.hash_join + the pipeline's join-as-extra-columns
+        # contract through ref.select_project
+        pk = np.rint(words[:, 0]).astype(np.int32)
+        joined, hit = ref.hash_join(pk, bk, bv[:, None])
+        work = np.concatenate(
+            [words, joined, hit[:, None].astype(np.float32)], axis=1)
+        sel_ops = np.concatenate([np.zeros(9, np.int32),
+                                  [op.OPS["=="]]]).astype(np.int32)
+        sel_vals = np.concatenate([np.zeros(9, np.float32),
+                                   [1.0]]).astype(np.float32)
+        proj = np.concatenate([np.ones(9, np.float32),
+                               [0.0]]).astype(np.float32)
+        exp_rows, exp_count = ref.select_project(
+            jnp.asarray(work), jnp.asarray(sel_ops), jnp.asarray(sel_vals),
+            jnp.asarray(proj))
+        assert res.count == int(exp_count) == int(hit.sum())
+        np.testing.assert_array_equal(np.asarray(res.rows),
+                                      np.asarray(exp_rows))
+
+
+class TestCacheRegression:
+    def test_repeated_signature_single_trace(self):
+        clear_cache()
+        node = FViewNode(32 * 2**20)
+        qp = open_connection(node)
+        ft, _, _ = word_table(qp, "t", n=512)
+        pipe = (op.Select((op.Predicate("c1", "<", 0.0),)),)
+        farview_request(qp, ft, pipe).finalize()
+        cp = compile_pipeline(ft, pipe)
+        assert cp.traces == 1            # exactly one trace for the warm-up
+        for _ in range(4):
+            farview_request(qp, ft, pipe).finalize()
+        assert cp.traces == 1            # zero retraces on repeats
+
+    def test_same_layout_shares_executable(self):
+        """Two same-layout tables (different names) share one executable —
+        the property the batched scheduler relies on."""
+        clear_cache()
+        node = FViewNode(32 * 2**20)
+        qp = open_connection(node)
+        ft1, _, _ = word_table(qp, "a", n=512, seed=1)
+        ft2, _, _ = word_table(qp, "b", n=512, seed=2)
+        pipe = (op.Select((op.Predicate("c2", ">", 0.0),)),)
+        p1 = compile_pipeline(ft1, pipe)
+        p2 = compile_pipeline(ft2, pipe)
+        assert p1 is p2
+
+
+class TestBatchedDispatch:
+    def test_batched_preserves_per_client_results(self):
+        clear_cache()
+        node = FViewNode(64 * 2**20, n_regions=4)
+        qps, fts, wordss = [], [], []
+        for i in range(4):
+            qp = open_connection(node)
+            ft, _, words = word_table(qp, f"t{i}", n=768, seed=10 + i)
+            qps.append(qp)
+            fts.append(ft)
+            wordss.append(words)
+        pipe = (op.Select((op.Predicate("c1", "<", 0.25),)),)
+        pends = [submit_request(qp, ft, pipe)
+                 for qp, ft in zip(qps, fts)]
+        assert all(p.result is None for p in pends)   # queued, not dispatched
+        node.flush()
+        sel_ops = np.zeros(8, np.int32)
+        sel_vals = np.zeros(8, np.float32)
+        sel_ops[1], sel_vals[1] = op.OPS["<"], 0.25
+        for p, words in zip(pends, wordss):
+            res = p.wait()
+            exp_rows, exp_count = ref.select_project(
+                jnp.asarray(words), jnp.asarray(sel_ops),
+                jnp.asarray(sel_vals), jnp.ones(8, jnp.float32))
+            assert res.count == int(exp_count)
+            np.testing.assert_array_equal(np.asarray(res.rows),
+                                          np.asarray(exp_rows))
+        assert all(qp.requests == 1 for qp in qps)
+        assert node.pool.stats.requests == 4
+
+    def test_batched_rounds_do_not_retrace(self):
+        clear_cache()
+        node = FViewNode(64 * 2**20, n_regions=3)
+        qps, fts = [], []
+        for i in range(3):
+            qp = open_connection(node)
+            ft, _, _ = word_table(qp, f"t{i}", n=512, seed=i)
+            qps.append(qp)
+            fts.append(ft)
+        pipe = (op.Distinct(("c0",), n_buckets=64),)
+        for qp, ft in zip(qps, fts):
+            submit_request(qp, ft, pipe)
+        node.settle()
+        cp = compile_pipeline(fts[0], pipe)
+        warm = cp.traces
+        for _ in range(3):
+            for qp, ft in zip(qps, fts):
+                submit_request(qp, ft, pipe)
+            node.settle()
+        assert cp.traces == warm         # stacked dispatch fully cached
+
+    def test_permuted_layouts_do_not_coalesce(self):
+        """Same-shaped tables with different column orders compile to
+        different programs — they must not share a stacked dispatch."""
+        node = FViewNode(64 * 2**20, n_regions=2)
+        qp1, qp2 = open_connection(node), open_connection(node)
+        rng = np.random.default_rng(7)
+        k = rng.integers(0, 8, 256).astype(np.int32)
+        v = rng.normal(size=256).astype(np.float32)
+        ft1 = FTable("kv", (Column("k", "i32"), Column("v")), n_rows=256)
+        ft2 = FTable("vk", (Column("v"), Column("k", "i32")), n_rows=256)
+        alloc_table_mem(qp1, ft1)
+        alloc_table_mem(qp2, ft2)
+        table_write(qp1, ft1, ft1.encode({"k": k, "v": v}))
+        table_write(qp2, ft2, ft2.encode({"k": k, "v": v}))
+        pipe = (op.Select((op.Predicate("k", "==", 3.0),)),)
+        p1 = submit_request(qp1, ft1, pipe)
+        p2 = submit_request(qp2, ft2, pipe)
+        node.flush()
+        exp = int((k == 3).sum())
+        assert p1.wait().count == exp
+        assert p2.wait().count == exp
+
+    def test_dispatch_error_isolated_per_group(self):
+        """One group's dispatch failure must not discard the round's other
+        requests; the error surfaces on the failing request only."""
+        node = FViewNode(64 * 2**20, n_regions=2)
+        qp1, qp2 = open_connection(node), open_connection(node)
+        ft1, d1, _ = word_table(qp1, "ok", n=512, seed=1)
+        probe, _, _ = word_table(qp2, "probe", n=512, seed=2, card=16)
+        bad_build = FTable("dup", (Column("k", "i32"), Column("v")),
+                           n_rows=4)
+        alloc_table_mem(qp2, bad_build)
+        table_write(qp2, bad_build, bad_build.encode(
+            {"k": np.asarray([1, 1, 2, 3], np.int32),
+             "v": np.ones(4, np.float32)}))
+        good = submit_request(qp1, ft1,
+                              (op.Select((op.Predicate("c1", "<", 0.0),)),))
+        bad = submit_request(qp2, probe,
+                             (op.JoinSmall(probe_key="c0",
+                                           build_table="dup",
+                                           build_key="k",
+                                           build_cols=("v",)),))
+        with pytest.raises(ValueError, match="unique"):
+            node.flush()
+        assert good.wait().count == int((d1["c1"] < 0).sum())
+        with pytest.raises(ValueError, match="unique"):
+            bad.wait()
+
+    def test_counter_read_survives_foreign_dispatch_error(self):
+        """An innocent QPair counter read must not raise another client's
+        dispatch error; successful responses still settle."""
+        node = FViewNode(64 * 2**20, n_regions=2)
+        qp1, qp2 = open_connection(node), open_connection(node)
+        ft1, _, _ = word_table(qp1, "ok", n=512, seed=1)
+        probe, _, _ = word_table(qp2, "probe", n=512, seed=2, card=16)
+        dup = FTable("dup2", (Column("k", "i32"), Column("v")), n_rows=4)
+        alloc_table_mem(qp2, dup)
+        table_write(qp2, dup, dup.encode(
+            {"k": np.asarray([5, 5, 6, 7], np.int32),
+             "v": np.ones(4, np.float32)}))
+        submit_request(qp1, ft1, (op.Project(("c2",)),))
+        bad = submit_request(qp2, probe,
+                             (op.JoinSmall(probe_key="c0",
+                                           build_table="dup2",
+                                           build_key="k",
+                                           build_cols=("v",)),))
+        assert qp1.bytes_shipped == ft1.n_rows * 4     # no raise, settled
+        with pytest.raises(ValueError, match="unique"):
+            bad.wait()
+
+    def test_round_robin_fair_share(self):
+        """Two queued requests from one QPair are served in different
+        scheduling rounds; one from each QPair coalesces per round."""
+        node = FViewNode(64 * 2**20, n_regions=2)
+        qp1, qp2 = open_connection(node), open_connection(node)
+        ft1, d1, _ = word_table(qp1, "x", n=512, seed=3)
+        ft2, d2, _ = word_table(qp2, "y", n=512, seed=4)
+        pipe = (op.Select((op.Predicate("c1", "<", 0.0),)),)
+        a1 = submit_request(qp1, ft1, pipe)
+        a2 = submit_request(qp1, ft1, pipe)   # same client, second round
+        b1 = submit_request(qp2, ft2, pipe)
+        node.flush()
+        for pend, d in ((a1, d1), (a2, d1), (b1, d2)):
+            assert pend.result.finalize().count == int((d["c1"] < 0).sum())
+        assert qp1.requests == 2 and qp2.requests == 1
+
+
+class TestLazyResults:
+    def test_finalize_is_the_sync_point(self):
+        node = FViewNode(32 * 2**20)
+        qp = open_connection(node)
+        ft, data, _ = word_table(qp, "t", n=512)
+        pipe = (op.Select((op.Predicate("c1", "<", 0.0),)),)
+        res = farview_request(qp, ft, pipe)
+        assert res._raw is not None           # nothing materialized yet
+        assert qp._bytes_shipped == 0          # shipped accounting deferred
+        n = res.count                          # first scalar access syncs
+        assert res._raw is None
+        assert n == int((data["c1"] < 0).sum())
+        assert qp.bytes_shipped == res.shipped_bytes
+        res.finalize()                         # idempotent
+        assert node.pool.stats.bytes_shipped == res.shipped_bytes
+
+    def test_settle_via_qpair_counters(self):
+        node = FViewNode(32 * 2**20)
+        qp = open_connection(node)
+        ft, data, _ = word_table(qp, "t", n=512)
+        pipe = (op.Project(("c2",)),)
+        submit_request(qp, ft, pipe)           # queued only
+        assert qp.bytes_shipped == ft.n_rows * 4   # settles queue + inflight
+        assert qp.bytes_read_pool == ft.n_bytes
+
+    def test_finalized_results_leave_inflight(self):
+        """Caller-finalized responses must not pin device memory on the
+        node forever."""
+        node = FViewNode(32 * 2**20)
+        qp = open_connection(node)
+        ft, _, _ = word_table(qp, "t", n=512)
+        pipe = (op.Select((op.Predicate("c1", "<", 0.0),)),)
+        for _ in range(10):
+            farview_request(qp, ft, pipe).finalize()
+        assert node._inflight == []
+
+    def test_smart_addressing_crypt_read_accounting(self):
+        """A pre-decrypt forces full-row gathers; read accounting must
+        match (plain smart addressing stays column-granular)."""
+        from repro.kernels import ops as kops
+        node = FViewNode(32 * 2**20)
+        qp = open_connection(node)
+        ft, data, words = word_table(qp, "t", n=512)
+        sa = farview_request(qp, ft, (op.SmartAddress(("c3",)),)).finalize()
+        assert sa.read_bytes == ft.n_rows * 4            # 1 column
+        key, nonce = (3, 5), 11
+        u32 = words.astype(np.float32).reshape(-1).view(np.uint32)
+        enc = np.asarray(kops.crypt(jnp.asarray(u32),
+                                    np.asarray(key, np.uint32), nonce))
+        table_write(qp, ft, enc.view(np.uint32).astype(np.uint32)
+                    .view(np.float32).reshape(words.shape))
+        pipe = (op.Crypt(key=key, nonce=nonce, when="pre"),
+                op.SmartAddress(("c3",)))
+        res = farview_request(qp, ft, pipe).finalize()
+        assert res.read_bytes == ft.n_bytes              # full rows read
+        got = np.asarray(res.rows)[: res.count, 0]
+        np.testing.assert_array_equal(got, data["c3"])

@@ -1,0 +1,87 @@
+"""FarPool allocator: deque free lists, striping order, shard exhaustion
+fallback, alloc/free/realloc cycles, and the device-resident gather path."""
+from collections import deque
+
+import numpy as np
+import pytest
+
+from repro.core.pool import FarPool
+from repro.core.table import FTable, Column
+
+PB = 4096                      # small pages keep the test pool tiny
+COLS = tuple(Column(f"c{i}") for i in range(8))
+
+
+def tbl(name, n_pages):
+    # 8 f32 cols -> 32 B/row -> PB/32 rows fill exactly one page
+    return FTable(name, COLS, n_rows=n_pages * PB // 32)
+
+
+def test_free_lists_are_deques():
+    pool = FarPool(8 * PB, page_bytes=PB, n_shards=2)
+    assert all(isinstance(f, deque) for f in pool._free)
+
+
+def test_striping_order_round_robin():
+    pool = FarPool(8 * PB, page_bytes=PB, n_shards=2)   # chunks [0..3],[4..7]
+    ft = pool.alloc_table(tbl("t", 4))
+    assert ft.pages == (0, 4, 1, 5)     # alternating shards, FIFO per shard
+
+
+def test_shard_exhaustion_fallback():
+    pool = FarPool(8 * PB, page_bytes=PB, n_shards=2)
+    t1 = pool.alloc_table(tbl("a", 6))
+    assert t1.pages == (0, 4, 1, 5, 2, 6)
+    # shard 0 has one page left; allocation continues across what remains
+    t2 = pool.alloc_table(tbl("b", 2))
+    assert t2.pages == (3, 7)
+    assert pool.free_pages == 0
+    with pytest.raises(MemoryError):
+        pool.alloc_table(tbl("c", 1))
+
+
+def test_alloc_free_realloc_cycles():
+    pool = FarPool(8 * PB, page_bytes=PB, n_shards=2)
+    free0 = pool.free_pages
+    for _ in range(5):
+        t1 = pool.alloc_table(tbl("a", 3))
+        t2 = pool.alloc_table(tbl("b", 3))
+        assert pool.free_pages == free0 - 6
+        assert set(t1.pages).isdisjoint(t2.pages)
+        pool.free_table(t1)
+        pool.free_table(t2)
+        assert pool.free_pages == free0
+    # freed pages recycle FIFO within their shard: a fresh alloc starts
+    # from the lowest-numbered still-striped pages again
+    t3 = pool.alloc_table(tbl("c", 2))
+    assert {p // pool.chunk for p in t3.pages} == {0, 1}
+    pool.free_table(t3)
+    assert pool.page_table == {}
+
+
+def test_realloc_data_integrity_across_shards():
+    pool = FarPool(8 * PB, page_bytes=PB, n_shards=2)
+    rng = np.random.default_rng(0)
+    t1 = pool.alloc_table(tbl("a", 3))
+    w1 = rng.normal(size=(t1.n_rows, 8)).astype(np.float32)
+    pool.write_table(t1, w1)
+    np.testing.assert_array_equal(np.asarray(pool.read_table(t1)), w1)
+    pool.free_table(t1)
+    t2 = pool.alloc_table(tbl("b", 5))      # reuses + extends the pages
+    w2 = rng.normal(size=(t2.n_rows, 8)).astype(np.float32)
+    pool.write_table(t2, w2)
+    np.testing.assert_array_equal(np.asarray(pool.read_table(t2)), w2)
+
+
+def test_gather_rows_matches_read_table():
+    pool = FarPool(8 * PB, page_bytes=PB, n_shards=2)
+    rng = np.random.default_rng(1)
+    ft = pool.alloc_table(tbl("a", 4))
+    w = rng.normal(size=(ft.n_rows, 8)).astype(np.float32)
+    pool.write_table(ft, w)
+    before = pool.stats.bytes_read
+    got = pool.gather_rows(ft.pages, ft.n_rows, ft.row_words)
+    np.testing.assert_array_equal(np.asarray(got), w)
+    assert pool.stats.bytes_read == before      # pure read path, no stats
+    np.testing.assert_array_equal(np.asarray(pool.read_table(ft)), w)
+    assert pool.stats.bytes_read == before + ft.n_bytes
