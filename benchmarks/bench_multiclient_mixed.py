@@ -1,0 +1,113 @@
+"""Mixed-size + mixed-kind multiclient round (PR 2 bucket-batched scheduler).
+
+Eight clients on one node submit in the same scheduling round:
+  * 3 selection requests over SAME-layout tables of DIFFERENT sizes that
+    share one power-of-two bucket (5k/6k/8k rows -> 8192 bucket),
+  * 3 regex requests over string tables of different row counts/widths,
+  * 2 join probes sharing one small build table.
+
+The round must cost exactly THREE stacked executable launches — one per
+(signature, layout, bucket) group, however many clients stacked — which is
+asserted via the node's dispatch counter, not just timed. Rows compare the
+stacked round against the sum of solo dispatches (what PR 1's
+exact-shape coalescing would have paid for the mixed sizes: everything
+solo) and the LCPU/RCPU baselines.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core import operators as op
+from repro.core.client import (FViewNode, alloc_table_mem, farview_request,
+                               open_connection, submit_request, table_write)
+from repro.core.table import FTable, Column, string_table
+
+WORD_SIZES = (5 << 10, 6 << 10, 8 << 10)          # one 8192 bucket
+STR_ROWS = (3 << 10, 4 << 10, 3 << 10)            # one 4096 bucket
+JOIN_SIZES = (6 << 10, 8 << 10)                   # one 8192 bucket
+SEL_PIPE = (op.Select((op.Predicate("c1", "<", 0.2),)),)
+RE_PIPE = (op.RegexMatch("error"),)
+
+
+def _setup(node):
+    rng = np.random.default_rng(11)
+    word, strs, joins = [], [], []
+    for i, n in enumerate(WORD_SIZES):
+        qp = open_connection(node)
+        cols = tuple(Column(f"c{i}") for i in range(8))
+        ft = FTable(f"w{i}", cols, n_rows=n)
+        alloc_table_mem(qp, ft)
+        table_write(qp, ft, rng.normal(size=(n, 8)).astype(np.float32))
+        word.append((qp, ft))
+    samples = [b"error: disk full", b"all fine", b"warn: error", b"ok"]
+    for i, (n, w) in enumerate(zip(STR_ROWS, (24, 32, 20))):
+        qp = open_connection(node)
+        picks = [samples[j] for j in rng.integers(0, len(samples), n)]
+        ft, mat, lens = string_table(f"s{i}", picks, w)
+        strs.append((qp, ft, mat, lens))
+    qb = open_connection(node)
+    build = FTable("dim", (Column("k", "i32"), Column("v")), n_rows=64)
+    alloc_table_mem(qb, build)
+    table_write(qb, build, build.encode(
+        {"k": rng.permutation(128)[:64].astype(np.int32),
+         "v": rng.random(64).astype(np.float32)}))
+    jpipe = (op.JoinSmall(probe_key="c0", build_table="dim",
+                          build_key="k", build_cols=("v",)),)
+    for i, n in enumerate(JOIN_SIZES):
+        qp = open_connection(node)
+        cols = (Column("c0", "i32"),) + tuple(
+            Column(f"c{j}") for j in range(1, 8))
+        ft = FTable(f"j{i}", cols, n_rows=n)
+        alloc_table_mem(qp, ft)
+        data = {"c0": rng.integers(0, 128, n).astype(np.int32)}
+        data.update({f"c{j}": rng.normal(size=n).astype(np.float32)
+                     for j in range(1, 8)})
+        table_write(qp, ft, ft.encode(data))
+        joins.append((qp, ft, jpipe))
+    return word, strs, joins
+
+
+def run() -> None:
+    node = FViewNode(1 << 30, n_regions=9)
+    word, strs, joins = _setup(node)
+    n_clients = len(word) + len(strs) + len(joins)
+
+    def one_round():
+        pend = [submit_request(qp, ft, SEL_PIPE) for qp, ft in word]
+        pend += [submit_request(qp, ft, RE_PIPE, strings=m, lengths=l)
+                 for qp, ft, m, l in strs]
+        pend += [submit_request(qp, ft, p) for qp, ft, p in joins]
+        node.flush()
+        return [p.result for p in pend]
+
+    def all_solo():
+        out = [farview_request(qp, ft, SEL_PIPE) for qp, ft in word]
+        out += [farview_request(qp, ft, RE_PIPE, strings=m, lengths=l)
+                for qp, ft, m, l in strs]
+        out += [farview_request(qp, ft, p) for qp, ft, p in joins]
+        return out
+
+    before = node.dispatches
+    one_round()                                    # warm the stacked paths
+    stacked_dispatches = node.dispatches - before
+    assert stacked_dispatches == 3, stacked_dispatches   # the SLO itself
+    all_solo()                                     # warm the solo paths
+
+    us_round = timeit(one_round, repeat=3) * 1e6
+    us_solo = timeit(all_solo, repeat=3) * 1e6
+    row("multiclient_mixed", f"FV_{n_clients}clients_3groups", us_round,
+        dispatches=stacked_dispatches)
+    row("multiclient_mixed", f"FV_{n_clients}solo_sum", us_solo,
+        dispatches=n_clients)
+
+    def lcpu():
+        for qp, ft in word:
+            rows = np.asarray(qp.node.pool.read_table(ft))
+            rows[rows[:, 1] < 0.2]
+        for _, _, m, l in strs:
+            [bytes(r[:n]).find(b"error") >= 0 for r, n in zip(m, l)]
+
+    us_lcpu = timeit(lcpu, repeat=3) * 1e6
+    row("multiclient_mixed", "LCPU_wordstr", us_lcpu,
+        shipped_bytes=sum(ft.n_bytes for _, ft in word))

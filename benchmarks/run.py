@@ -7,6 +7,8 @@
   bench_regex       Fig. 10  regex matching
   bench_crypto      Fig. 11  encryption on the read path
   bench_multiclient Fig. 12  6 concurrent clients (stacked dispatch)
+  bench_multiclient_mixed    mixed-size/kind round: 3 stacked dispatches
+                             serve 8 clients (bucketing + string/join stacks)
   bench_join        (§7 fut.) small-table in-memory join
   bench_resources   Table 1  per-operator resource budget
   bench_far_kv      (LM)     far-KV push-down economics
@@ -29,7 +31,8 @@ import sys
 import time
 
 from benchmarks import (bench_crypto, bench_far_kv, bench_grouping,
-                        bench_join, bench_multiclient, bench_projection,
+                        bench_join, bench_multiclient,
+                        bench_multiclient_mixed, bench_projection,
                         bench_rdma, bench_regex, bench_resources,
                         bench_selection)
 from benchmarks.common import print_csv, rows_as_records
@@ -42,6 +45,7 @@ ALL = {
     "regex": bench_regex.run,
     "crypto": bench_crypto.run,
     "multiclient": bench_multiclient.run,
+    "multiclient_mixed": bench_multiclient_mixed.run,
     "join": bench_join.run,
     "resources": bench_resources.run,
     "far_kv": bench_far_kv.run,

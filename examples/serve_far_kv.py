@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.configs.base import smoke_config
 from repro.core.far_kv import shipped_bytes_per_layer
-from repro.launch.mesh import make_test_mesh
+from repro.launch.mesh import make_test_mesh, set_mesh
 from repro.models.lm import LM
 
 mesh = make_test_mesh((2, 4), ("data", "model"))
@@ -34,7 +34,7 @@ prompt = jax.random.randint(key, (B, 8), 0, cfg.vocab)
 print(f"mesh {dict(mesh.shape)}; cache (B={B}, S={MAX_S}) seq-sharded "
       f"over 'model' = the disaggregated pool axis")
 outs = {}
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     for mode, lm in [("far", lm_pool), ("naive", lm_pool),
                      ("local", lm_local)]:
         cache = lm.init_cache(B, MAX_S, jnp.float32)

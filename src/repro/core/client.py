@@ -19,16 +19,32 @@ The request path is a batched scheduler: submitted requests queue on the
 node; each scheduling round serves at most one request per QPair in
 round-robin order (the fair-share arbiter of §4.3), and picked requests
 with the same pipeline signature + table layout are coalesced into ONE
-stacked executable dispatch (`CompiledPipeline.run_pages_batched`). The
-dispatch itself is asynchronous — the fused executable consumes pool pages
+stacked executable dispatch (`CompiledPipeline.run_pages_batched` /
+`run_strings_batched`). Every request kind rides the stack:
+
+  * word tables shape-bucket: requests whose row counts share a
+    power-of-two bucket run at the bucket shape — page lists are padded
+    with the pool's pinned null page and the traced `n_valid` masks each
+    tail — so K different-sized same-layout tables cost ONE executable;
+  * string/regex requests stack as a (B, n, w) byte tensor, row- and
+    width-bucketed (exact width when a pre-crypt makes the keystream
+    position-sensitive);
+  * join probes coalesce when they share a build table (the build is
+    named in the signature, so same-signature implies same build): the
+    build operand is broadcast across the stacked probes, not vmapped.
+
+The dispatch itself is asynchronous — the fused executable consumes pool pages
 directly (no separate read_table) and returns lazy `PipelineResult`s whose
 `finalize()` is the only synchronization point. Data-dependent byte
 accounting (response sizes) settles when results materialize; reading a
-QPair's counters settles its node first.
+QPair's counters settles its node first. Padded rows are invisible to accounting:
+read bytes bill each request's own rows, shipped bytes come from traced
+counts that already exclude masked tails.
 """
 from __future__ import annotations
 
 import itertools
+import math
 from collections import deque
 from dataclasses import dataclass
 
@@ -39,7 +55,7 @@ from repro.core import operators as op_ir
 from repro.core.offload import _merge
 from repro.core.pipeline import PipelineResult, compile_pipeline
 from repro.core.pool import FarPool
-from repro.core.table import FTable
+from repro.core.table import FTable, WORD_BYTES
 
 
 class FarviewError(RuntimeError):
@@ -119,6 +135,9 @@ class FViewNode:
         self.tables: dict[str, FTable] = {}     # name -> handle (catalog)
         self._queue: deque[PendingRequest] = deque()
         self._inflight: list[PipelineResult] = []
+        self.dispatches = 0     # stacked-executable launches (scheduler SLO:
+        #                         one per (signature, layout, bucket) group
+        #                         per round, however many clients stacked)
 
     # ----------------------------------------------------------- connections
     def open_connection(self) -> QPair:
@@ -133,6 +152,21 @@ class FViewNode:
         return qp
 
     def close_connection(self, qp: QPair) -> None:
+        """Unbind the region and fail the QPair's still-queued requests.
+
+        A request left in `_queue` past its connection's close would be
+        dispatched by a later `flush()` against a region that may then be
+        bound to a *different* connection — misattributing reconfigurations
+        and counters to the new tenant. Cancel them now; their `wait()`
+        raises."""
+        still: deque[PendingRequest] = deque()
+        for req in self._queue:
+            if req.qp is qp:
+                req.error = FarviewError(
+                    f"connection qp{qp.qp_id} closed with request pending")
+            else:
+                still.append(req)
+        self._queue = still
         self.regions[qp.region].busy_qp = None
         self._qpairs.pop(qp.qp_id, None)
 
@@ -141,6 +175,10 @@ class FViewNode:
                lengths: np.ndarray | None = None,
                strings: np.ndarray | None = None) -> PendingRequest:
         """Queue a Farview verb; dispatched at the next scheduling round."""
+        if qp.qp_id not in self._qpairs:
+            # a closed QPair's region may already be bound to a new tenant;
+            # accepting the verb would ghost-dispatch against it
+            raise FarviewError(f"connection qp{qp.qp_id} is closed")
         pipeline = op_ir.validate_pipeline(tuple(pipeline))
         req = PendingRequest(qp, ft, pipeline, lengths, strings)
         self._queue.append(req)
@@ -200,18 +238,30 @@ class FViewNode:
             res.finalize()
 
     def _dispatch_key(self, req: PendingRequest) -> tuple:
-        # string payloads and joins dispatch solo; word-table requests with
-        # the same signature + layout stack into one executable. The layout
-        # part must match compile_pipeline's cache key (column names/dtypes,
-        # not just shape) — same-shaped tables with permuted columns compile
-        # to different programs.
-        if req.strings is not None or any(
-                isinstance(o, op_ir.JoinSmall) for o in req.pipeline):
-            return ("solo", id(req))
-        return ("batch", op_ir.signature(req.pipeline),
-                tuple((c.name, c.dtype) for c in req.ft.columns),
-                req.ft.str_width, req.ft.n_rows, req.ft.row_words,
-                len(req.ft.pages))
+        """The coalescing key: requests with equal keys ride one stacked
+        executable this round.
+
+        The layout part must match compile_pipeline's cache key (column
+        names/dtypes, not just shape) — same-shaped tables with permuted
+        columns compile to different programs. Sizes enter only as
+        power-of-two buckets: different-sized tables in one bucket share
+        the executable (page lists padded with the pool null page, tails
+        masked by the traced n_valid). Joins need no special casing — the
+        build table is named in the signature, so one group always shares
+        one build. String requests bucket on (rows, width); a pre-crypt
+        pins the width exactly because the CTR keystream is positional
+        over the row-major byte flattening (row padding appends whole
+        rows and never shifts it)."""
+        sig = op_ir.signature(req.pipeline)
+        layout = (tuple((c.name, c.dtype) for c in req.ft.columns),
+                  bool(req.ft.str_width))
+        if req.strings is not None:
+            n, w = np.asarray(req.strings).shape
+            wkey = (int(w) if op_ir.has_crypt_pre(req.pipeline)
+                    else op_ir.pow2_bucket(w))
+            return ("str", sig, layout, op_ir.pow2_bucket(n), wkey)
+        return ("word", sig, layout, req.ft.row_words,
+                op_ir.pow2_bucket(req.ft.n_rows))
 
     def _resolve_build(self, pipeline: tuple):
         """The node reads the join build table into "on-chip memory"
@@ -250,32 +300,70 @@ class FViewNode:
                                      n_rows=req.ft.n_rows,
                                      row_words=req.ft.row_words)
             results = [res]
+        elif reqs[0].strings is not None:
+            results = self._dispatch_strings_batched(pipe, reqs)
         else:
-            pages = jnp.asarray(np.stack(
-                [np.asarray(r.ft.pages, np.int32) for r in reqs]))
-            n_valid = jnp.asarray([r.ft.n_rows for r in reqs], jnp.int32)
-            results = pipe.run_pages_batched(self.pool.buf, pages, n_valid,
-                                             n_rows=ft0.n_rows,
-                                             row_words=ft0.row_words)
+            results = self._dispatch_pages_batched(pipe, reqs)
+        self.dispatches += 1        # counted only once the launch succeeded
 
         for req, res in zip(reqs, results):
             req.result = res
-            qp = req.qp
-            qp.requests += 1
-            qp._bytes_read_pool += res.read_bytes       # static: settle now
-            self.pool.stats.bytes_read += res.read_bytes
-            self.pool.stats.requests += 1
+            self._account(req, res)
 
-            def _credit(r, qp=qp):                      # data-dependent:
-                qp._bytes_shipped += r._shipped          # settle at finalize
-                self.pool.stats.bytes_shipped += r._shipped
-                try:                    # settled results stop pinning memory
-                    self._inflight.remove(r)
-                except ValueError:
-                    pass                # already drained by settle()
+    def _dispatch_pages_batched(self, pipe, reqs) -> list[PipelineResult]:
+        """Stacked word-table round: pad every page list to the shape
+        bucket with the pool's pinned null page; the bucket executable
+        reads zeros past each table's extent and n_valid masks them."""
+        row_words = reqs[0].ft.row_words
+        bucket = op_ir.pow2_bucket(max(r.ft.n_rows for r in reqs))
+        n_pages = max(1, math.ceil(bucket * row_words * WORD_BYTES
+                                   / self.pool.page_bytes))
+        pages = np.full((len(reqs), n_pages), self.pool.null_page, np.int32)
+        for b, r in enumerate(reqs):
+            pages[b, : len(r.ft.pages)] = r.ft.pages
+        n_valid = np.asarray([r.ft.n_rows for r in reqs], np.int32)
+        build = self._resolve_build(reqs[0].pipeline)
+        return pipe.run_pages_batched(self.pool.buf, pages, n_valid,
+                                      build=build, n_rows=bucket,
+                                      row_words=row_words)
 
-            self._inflight.append(res)
-            res.on_finalize(_credit)
+    def _dispatch_strings_batched(self, pipe, reqs) -> list[PipelineResult]:
+        """Stacked string/regex round: zero-pad each request's byte matrix
+        to the (rows, width) bucket and stack. Padded rows carry length 0
+        and are masked via n_valid; widths stay exact when the key pinned
+        them (pre-crypt keystream)."""
+        mats = [np.asarray(r.strings, np.uint8) for r in reqs]
+        bucket_n = op_ir.pow2_bucket(max(m.shape[0] for m in mats))
+        bucket_w = max(op_ir.pow2_bucket(m.shape[1]) for m in mats) \
+            if not op_ir.has_crypt_pre(reqs[0].pipeline) \
+            else mats[0].shape[1]
+        stacked = np.zeros((len(reqs), bucket_n, bucket_w), np.uint8)
+        lengths = np.zeros((len(reqs), bucket_n), np.int32)
+        for b, (m, r) in enumerate(zip(mats, reqs)):
+            stacked[b, : m.shape[0], : m.shape[1]] = m
+            lengths[b, : m.shape[0]] = np.asarray(r.lengths, np.int32)
+        n_valid = np.asarray([m.shape[0] for m in mats], np.int32)
+        widths = np.asarray([m.shape[1] for m in mats], np.int32)
+        return pipe.run_strings_batched(stacked, lengths, n_valid,
+                                        widths=widths)
+
+    def _account(self, req: PendingRequest, res: PipelineResult) -> None:
+        qp = req.qp
+        qp.requests += 1
+        qp._bytes_read_pool += res.read_bytes           # static: settle now
+        self.pool.stats.bytes_read += res.read_bytes
+        self.pool.stats.requests += 1
+
+        def _credit(r, qp=qp):                          # data-dependent:
+            qp._bytes_shipped += r._shipped              # settle at finalize
+            self.pool.stats.bytes_shipped += r._shipped
+            try:                        # settled results stop pinning memory
+                self._inflight.remove(r)
+            except ValueError:
+                pass                    # already drained by settle()
+
+        self._inflight.append(res)
+        res.on_finalize(_credit)
 
 
 def open_connection(node: FViewNode) -> QPair:

@@ -132,3 +132,20 @@ def validate_pipeline(pipeline: tuple) -> tuple:
 def signature(pipeline: tuple) -> tuple:
     """Hashable pipeline identity (the 'bitstream id' of a dynamic region)."""
     return tuple(pipeline)
+
+
+# ------------------------------------------------------- scheduler helpers
+def pow2_bucket(n: int) -> int:
+    """Smallest power of two >= n (>= 1): the shape bucket a request lands
+    in. Bucketing trades <2x padded work for executable reuse — every
+    request in a bucket runs at the bucket's shape, so K different-sized
+    tables cost ONE trace instead of K."""
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
+def has_crypt_pre(pipeline: tuple) -> bool:
+    """True if the pipeline decrypts the read stream. The CTR keystream is
+    positional over the row-major flattening, so width padding would shift
+    byte positions — string requests with a pre-crypt bucket on exact
+    width (row padding appends whole rows and is keystream-safe)."""
+    return any(isinstance(o, Crypt) and o.when == "pre" for o in pipeline)

@@ -13,9 +13,14 @@ Entry points:
   pipe.run_pages(buf, pages, n_valid[, build])    fused gather: the
       executable consumes pool pages directly (FarPool.gather_rows read
       path); `n_valid` is a *traced* scalar masking the tail.
-  pipe.run_pages_batched(buf, pages, n_valid)     stacked multi-client
-      dispatch: pages (B, P), n_valid (B,) — one vmapped executable per
-      scheduling round, results split per client.
+  pipe.run_pages_batched(buf, pages, n_valid[, build])   stacked
+      multi-client dispatch: pages (B, P), n_valid (B,) — one vmapped
+      executable per scheduling round, results split per client. Page
+      lists may be bucket-padded with the pool null page (n_valid masks
+      each request's tail); a shared join build table is broadcast.
+  pipe.run_strings_batched(strings, lengths, n_valid)    stacked string /
+      regex dispatch over a (B, n, w) byte tensor with per-request
+      lengths — the DFA/crypt body vmapped over the round's clients.
 
 All entry points return a lazy `PipelineResult`: device arrays plus traced
 count/byte scalars. `PipelineResult.finalize()` is the ONLY sync point —
@@ -224,6 +229,7 @@ class CompiledPipeline:
         self._jit_rows = jax.jit(self._rows_entry)
         self._jit_pages = jax.jit(self._pages_entry,
                                   static_argnames=("n_rows", "row_words"))
+        self._jit_strings = jax.jit(self._strings_entry)
 
     def _col(self, name: str) -> int:
         try:
@@ -260,20 +266,66 @@ class CompiledPipeline:
             n_rows=n_rows, row_words=row_words)
         return self._wrap(payload, self._pages_read_bytes(n_rows, row_words))
 
-    def run_pages_batched(self, buf, pages, n_valid, *,
+    def run_pages_batched(self, buf, pages, n_valid, build=None, *,
                           n_rows: int, row_words: int) -> list[PipelineResult]:
         """Stacked multi-client dispatch: pages (B, P), n_valid (B,).
 
         One vmapped executable serves the whole scheduling round; the
-        payload is split back into per-client lazy results.
+        payload is split back into per-client lazy results. `n_rows` is the
+        round's shape bucket — per-request tables may be smaller; their page
+        lists are padded (pool null page) and their tails masked by
+        `n_valid`. A shared join `build=(keys, vals)` operand is broadcast
+        (closed over, not vmapped) across the stack. Read/shipped byte
+        accounting is per-request: padded rows are never billed (read bytes
+        come from each request's `n_valid`, shipped bytes from traced
+        counts that already exclude masked rows), and each request's row /
+        mask arrays are sliced back to its own length.
         """
         pages = jnp.asarray(pages, jnp.int32)
+        nv = np.asarray(n_valid, np.int64)
         payload = self._jit_pages(
-            buf, pages, jnp.asarray(n_valid, jnp.int32), None,
-            n_rows=n_rows, row_words=row_words)
-        rb = self._pages_read_bytes(n_rows, row_words)
-        return [self._wrap({k: v[b] for k, v in payload.items()}, rb)
+            buf, pages, jnp.asarray(n_valid, jnp.int32),
+            self._as_build(build), n_rows=n_rows, row_words=row_words)
+        return [self._wrap(self._split(payload, b, int(nv[b])),
+                           self._pages_read_bytes(int(nv[b]), row_words))
                 for b in range(int(pages.shape[0]))]
+
+    def run_strings_batched(self, strings, lengths, n_valid, *,
+                            widths=None) -> list[PipelineResult]:
+        """Stacked string/regex dispatch: strings (B, n, w) uint8 bytes,
+        lengths (B, n) int32, n_valid (B,) valid-row counts.
+
+        The DFA/crypt body is vmapped over the stack — one executable per
+        scheduling round regardless of how many clients submitted. Rows
+        past a request's `n_valid` (bucket padding) are masked out of the
+        match mask and excluded from shipped/read accounting; `widths`
+        (per-request pre-padding byte widths) keeps read accounting exact
+        under width bucketing.
+        """
+        strings = jnp.asarray(strings, jnp.uint8)
+        nv = np.asarray(n_valid, np.int64)
+        payload = self._jit_strings(
+            strings, jnp.asarray(lengths, jnp.int32),
+            jnp.asarray(n_valid, jnp.int32))
+        w = int(strings.shape[2])
+        ws = (np.full((strings.shape[0],), w, np.int64) if widths is None
+              else np.asarray(widths, np.int64))
+        return [self._wrap(self._split(payload, b, int(nv[b])),
+                           int(nv[b]) * int(ws[b]))
+                for b in range(int(strings.shape[0]))]
+
+    @staticmethod
+    def _split(payload: dict, b: int, nv: int) -> dict:
+        """Request b's slice of a stacked payload. Row-shaped arrays are cut
+        back to the request's own length so bucket padding is invisible to
+        the client (packed survivors always fit: count <= nv)."""
+        out = {}
+        for k, v in payload.items():
+            v = v[b]
+            if k in ("rows", "mask", "keys", "vals", "overflow_mask"):
+                v = v[:nv]
+            out[k] = v
+        return out
 
     # -------------------------------------------------------------- internals
     @staticmethod
@@ -315,10 +367,18 @@ class CompiledPipeline:
     def _rows_entry(self, rows, lengths, build):
         return self._body(rows, lengths, None, build, narrowed=False)
 
+    def _strings_entry(self, strings, lengths, n_valid):
+        # stacked (B, n, w) byte tensor: vmap the whole DFA/crypt body
+        def one(s, l, nv):
+            return self._body(s, l, nv, None, narrowed=False)
+        return jax.vmap(one)(strings, lengths, n_valid)
+
     def _pages_entry(self, buf, pages, n_valid, build, *, n_rows, row_words):
         if pages.ndim == 2:                     # stacked multi-client round
+            # `build` is closed over, not vmapped: the round shares ONE
+            # join build table, broadcast across the stacked probes.
             def one(pg, nv):
-                return self._gather_run(buf, pg, nv, None, n_rows, row_words)
+                return self._gather_run(buf, pg, nv, build, n_rows, row_words)
             return jax.vmap(one)(pages, n_valid)
         return self._gather_run(buf, pages, n_valid, build, n_rows, row_words)
 
@@ -366,6 +426,10 @@ class CompiledPipeline:
                                         jnp.asarray(accept), interpret=False)
             if valid is not None:
                 mask = mask & valid
+                # 1 byte/row decision for *valid* rows only (bucket padding
+                # must not inflate the response accounting)
+                return {"mask": mask,
+                        "shipped": jnp.sum(valid.astype(jnp.int32))}
             # 1 byte/row decision + matched rows
             return {"mask": mask, "shipped": jnp.int32(n)}
 
@@ -502,10 +566,18 @@ def compile_pipeline(schema: FTable, pipeline: tuple,
     The key deliberately excludes the table *name*: two clients running the
     same pipeline over same-layout tables share one executable, which is
     what lets the node's scheduler coalesce them into a stacked dispatch.
+    `interpret` is normalized to its resolved boolean before keying, so
+    `interpret=None` (auto) and an explicit matching bool share the entry.
     """
     pipeline = op_ir.validate_pipeline(tuple(pipeline))
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    # str_width enters the key only as string-vs-word: the traced program
+    # never bakes the width in (shapes are jit-specialized per call), so
+    # different-width string tables share one executable — which is what
+    # lets the scheduler width-bucket stacked regex rounds.
     key = (tuple((c.name, c.dtype) for c in schema.columns),
-           schema.str_width, op_ir.signature(pipeline), interpret)
+           bool(schema.str_width), op_ir.signature(pipeline), interpret)
     if key not in _CACHE:
         _CACHE[key] = CompiledPipeline(schema, pipeline, interpret)
     return _CACHE[key]

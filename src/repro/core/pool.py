@@ -91,7 +91,19 @@ class FarPool:
             raise ValueError("pages must divide shards")
         self.n_shards = n_shards
         self.chunk = self.n_pages // n_shards     # pages per shard
-        buf = jnp.zeros((self.n_pages, self.page_words), jnp.float32)
+        # pinned all-zeros pages past the allocatable range: the scheduler
+        # pads bucketed page lists with `null_page` so different-sized
+        # tables can share a stacked executable (tail rows read zeros and
+        # are masked by n_valid). Never allocated, never written. n_shards
+        # extra pages keep the page axis divisible by the shard count for
+        # device_put with a page-axis sharding; note the pad rows sit at
+        # the buffer tail, so under a real multi-shard sharding each
+        # device boundary shifts by up to n_shards-1 pages relative to
+        # the allocator's p // chunk map (no sharded multi-shard caller
+        # exists yet; revisit placement before wiring one up).
+        self.null_page = self.n_pages
+        buf = jnp.zeros((self.n_pages + n_shards, self.page_words),
+                        jnp.float32)
         if sharding is not None:
             buf = jax.device_put(buf, sharding)
         self.buf = buf

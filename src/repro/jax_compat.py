@@ -1,0 +1,71 @@
+"""Version shims for jax APIs that moved between 0.4.x and current jax.
+
+The repo targets current jax (`jax.shard_map`, `jax.set_mesh`,
+`jax.sharding.AxisType`) but must run on the 0.4.x line too, where those
+live under `jax.experimental.shard_map` / don't exist yet. Every call site
+imports from here instead of feature-testing jax inline, so the support
+matrix is defined in exactly one place.
+
+Covered:
+  make_mesh(shape, axes)      — `axis_types=(AxisType.Auto, ...)` when the
+                                installed jax has AxisType, plain otherwise
+                                (Auto is the 0.4.x implicit behaviour).
+  shard_map(f, mesh=..., in_specs=..., out_specs=..., check_vma=...)
+                              — `jax.shard_map` when present, else the
+                                experimental one with check_vma mapped onto
+                                its old name `check_rep`.
+  set_mesh(mesh)              — context manager; `jax.set_mesh` /
+                                `jax.sharding.use_mesh` when present, else a
+                                no-op (on 0.4.x every sharded entry point in
+                                this repo passes its mesh explicitly).
+  cost_analysis(compiled)     — normalizes the pre-0.5 list-of-dicts return
+                                of `Compiled.cost_analysis()` to one dict.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+try:  # jax >= 0.5: explicit axis types on mesh creation
+    _AXIS_TYPE = jax.sharding.AxisType
+except AttributeError:  # 0.4.x: meshes are implicitly Auto
+    _AXIS_TYPE = None
+
+
+def make_mesh(shape, axes):
+    """`jax.make_mesh` with Auto axis types where the kwarg exists."""
+    if _AXIS_TYPE is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(_AXIS_TYPE.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_exp
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+        # pre-0.5 spelling: the replication check is `check_rep`
+        return _shard_map_exp(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_vma)
+
+
+def set_mesh(mesh):
+    """Context manager installing `mesh` as the ambient mesh (best effort)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return contextlib.nullcontext(mesh)
+
+
+def cost_analysis(compiled) -> dict:
+    """`Compiled.cost_analysis()` as a single dict on every jax version."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return ca

@@ -141,12 +141,11 @@ def _mem_dict(compiled) -> dict:
 
 
 def _cost_dict(compiled) -> dict:
+    from repro.jax_compat import cost_analysis
     try:
-        ca = compiled.cost_analysis()
+        ca = cost_analysis(compiled)
     except Exception:
         return {}
-    if isinstance(ca, (list, tuple)):
-        ca = ca[0]
     keep = ("flops", "bytes accessed", "transcendentals", "optimal_seconds")
     return {k: float(v) for k, v in ca.items() if k in keep}
 

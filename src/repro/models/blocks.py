@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.jax_compat import shard_map
 from repro.models import layers as L
 from repro.models import mamba2 as M2
 from repro.models import moe as MOE
@@ -332,7 +333,7 @@ def _attn_decode(x, p, cfg: ModelConfig, cache_k, cache_v, pos, length, *,
         vn = v_row if append else kn
         # check_vma=False: the naive path's all_gather output is replicated
         # over "model" mathematically but not statically inferable.
-        attn, cache_k, cache_v = jax.shard_map(
+        attn, cache_k, cache_v = shard_map(
             sm, mesh=mesh,
             in_specs=(P(dp_axes), P(dp_axes), P(dp_axes),
                       P(dp_axes, None, "model"), P(dp_axes, None, "model"),

@@ -23,6 +23,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.jax_compat import shard_map
 from repro.models.layers import dense_init
 
 
@@ -233,7 +234,7 @@ def moe_ffn_a2a(x, p, *, top_k: int, capacity_factor: float = 1.25,
                 P(ep_axis, None, None),
                 P(ep_axis, None, None))
     out_specs = (P(dpa or None, ep_axis, None), P())
-    out, aux = jax.shard_map(sm, mesh=mesh, in_specs=in_specs,
+    out, aux = shard_map(sm, mesh=mesh, in_specs=in_specs,
                              out_specs=out_specs, check_vma=False)(
         x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
     return out, aux

@@ -20,6 +20,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.jax_compat import shard_map
 from repro.models.layers import dense_init, init_rmsnorm, rms_norm
 
 
@@ -296,7 +297,7 @@ def slstm_block(x, p, *, n_heads: int, return_state: bool = False,
 
     args = [pre[g] for g in ("i", "f", "z", "o")]
     args += [p[f"r_{g}"] for g in ("i", "f", "z", "o")]
-    h_loc, final = jax.shard_map(
+    h_loc, final = shard_map(
         sm, mesh=mesh,
         in_specs=(P(dpa or None, "model", None),) * 4
         + (P(None, None, None),) * 4,

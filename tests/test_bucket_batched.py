@@ -1,0 +1,338 @@
+"""The generalized bucket-batched scheduler (PR 2 tentpole).
+
+Every request kind rides ONE stacked executable per scheduling round:
+
+(a) shape-bucketing — same-layout tables with *different* row counts in one
+    power-of-two bucket coalesce (page lists padded with the pool null
+    page, tails masked by n_valid), per-request results byte-identical to
+    solo dispatch and padded rows excluded from byte accounting;
+(b) zero-retrace — K different-sized tables in one bucket cost one trace,
+    and later rounds with other sizes in the same bucket cost zero more;
+(c) stacked string/regex dispatch — (B, n, w) byte tensor, row/width
+    bucketed, masks equal to solo, pre-crypt pins the width (keystream);
+(d) stacked join-probe dispatch — same-build probes share one broadcast
+    build operand;
+(e) close_connection cancels still-queued requests (no ghost dispatch
+    against a re-bound region);
+(f) the compile cache treats interpret=None and its resolved bool as one
+    entry.
+"""
+import numpy as np
+import pytest
+
+from repro.core import operators as op
+from repro.core.client import (FarviewError, FViewNode, alloc_table_mem,
+                               close_connection, farview_request,
+                               merge_group_partials, open_connection,
+                               submit_request, table_write)
+from repro.core.pipeline import cache_info, clear_cache, compile_pipeline
+from repro.core.table import FTable, Column, string_table
+
+
+def word_table(qp, name, n, seed=0, card=0):
+    rng = np.random.default_rng(seed)
+    cols = tuple(Column(f"c{i}", "i32" if (i == 0 and card) else "f32")
+                 for i in range(8))
+    ft = FTable(name, cols, n_rows=n)
+    alloc_table_mem(qp, ft)
+    data = {}
+    for i in range(8):
+        if i == 0 and card:
+            data["c0"] = rng.integers(0, card, n).astype(np.int32)
+        else:
+            data[f"c{i}"] = rng.normal(size=n).astype(np.float32)
+    table_write(qp, ft, ft.encode(data))
+    return ft, data
+
+
+SIZES = (300, 512, 400)          # all in the 512 bucket, none equal
+PIPE = (op.Select((op.Predicate("c1", "<", 0.2),)),)
+
+
+def solo_refs(sizes, pipe, *, card=0):
+    """Reference results from solo dispatch on an independent node."""
+    node = FViewNode(64 * 2**20, n_regions=len(sizes))
+    out = []
+    for i, n in enumerate(sizes):
+        qp = open_connection(node)
+        ft, data = word_table(qp, f"r{i}", n, seed=100 + i, card=card)
+        out.append((farview_request(qp, ft, pipe).finalize(), data))
+    return out
+
+
+class TestShapeBucketing:
+    def test_mixed_sizes_one_dispatch_byte_identical(self):
+        node = FViewNode(64 * 2**20, n_regions=len(SIZES))
+        qps, fts = [], []
+        for i, n in enumerate(SIZES):
+            qp = open_connection(node)
+            ft, _ = word_table(qp, f"t{i}", n, seed=100 + i)
+            qps.append(qp)
+            fts.append(ft)
+        pends = [submit_request(qp, ft, PIPE) for qp, ft in zip(qps, fts)]
+        before = node.dispatches
+        node.flush()
+        assert node.dispatches == before + 1      # ONE stacked executable
+        for pend, (ref, _), ft, qp in zip(pends, solo_refs(SIZES, PIPE),
+                                          fts, qps):
+            res = pend.wait()
+            assert res.count == ref.count
+            np.testing.assert_array_equal(np.asarray(res.rows),
+                                          np.asarray(ref.rows))
+            assert res.shipped_bytes == ref.shipped_bytes
+            # padded rows are NOT billed: each request pays its own bytes
+            assert res.read_bytes == ft.n_bytes
+            assert qp.bytes_read_pool == ft.n_bytes
+
+    def test_mixed_sizes_groupby_merge_parity(self):
+        pipe = (op.GroupBy("c0", ("c1", "c2"), n_buckets=128),)
+        node = FViewNode(64 * 2**20, n_regions=len(SIZES))
+        pends, fts = [], []
+        for i, n in enumerate(SIZES):
+            qp = open_connection(node)
+            ft, _ = word_table(qp, f"g{i}", n, seed=100 + i, card=13)
+            fts.append(ft)
+            pends.append(submit_request(qp, ft, pipe))
+        before = node.dispatches
+        node.flush()
+        assert node.dispatches == before + 1
+        refs = solo_refs(SIZES, pipe, card=13)
+        for pend, ft, (ref, data) in zip(pends, fts, refs):
+            merged = merge_group_partials(ft, pipe, [pend.wait()]).groups
+            for k in np.unique(data["c0"]):
+                m = data["c0"] == k
+                cnt, s, _, _ = merged[int(k)]
+                assert cnt == int(m.sum())
+                np.testing.assert_allclose(
+                    np.asarray(s), [data["c1"][m].sum(),
+                                    data["c2"][m].sum()],
+                    rtol=1e-3, atol=1e-3)
+
+    def test_different_buckets_do_not_coalesce(self):
+        node = FViewNode(64 * 2**20, n_regions=2)
+        qp1, qp2 = open_connection(node), open_connection(node)
+        ft1, _ = word_table(qp1, "small", 200, seed=1)    # bucket 256
+        ft2, _ = word_table(qp2, "big", 700, seed=2)      # bucket 1024
+        submit_request(qp1, ft1, PIPE)
+        submit_request(qp2, ft2, PIPE)
+        before = node.dispatches
+        node.flush()
+        assert node.dispatches == before + 2
+
+    def test_zero_retrace_across_sizes_in_bucket(self):
+        """K different-sized tables in one bucket cost ONE trace, and a
+        later round with *other* sizes in the same bucket costs zero."""
+        clear_cache()
+        node = FViewNode(64 * 2**20, n_regions=3)
+        qps = [open_connection(node) for _ in range(3)]
+
+        def round_of(sizes, tag):
+            fts = [word_table(qp, f"{tag}{i}", n, seed=i)[0]
+                   for i, (qp, n) in enumerate(zip(qps, sizes))]
+            for qp, ft in zip(qps, fts):
+                submit_request(qp, ft, PIPE)
+            node.settle()
+
+        round_of((300, 512, 400), "a")
+        cp = compile_pipeline(FTable("x", tuple(Column(f"c{i}")
+                                                for i in range(8))), PIPE)
+        warm = cp.traces
+        round_of((260, 510, 384), "b")       # same bucket, new sizes
+        round_of((511, 257, 303), "c")
+        assert cp.traces == warm             # stacked executable fully cached
+
+
+class TestStackedStrings:
+    STRS = [b"error: disk full", b"all fine", b"ERROR", b"warn: error",
+            b"errr", b"the error is late here"]
+
+    def _req(self, n, width, seed):
+        rng = np.random.default_rng(seed)
+        strs = [self.STRS[j] for j in rng.integers(0, len(self.STRS), n)]
+        return string_table(f"s{seed}", strs, width), strs
+
+    def test_batched_regex_matches_solo(self):
+        import re as pyre
+        pipe = (op.RegexMatch("error"),)
+        node = FViewNode(64 * 2**20, n_regions=3)
+        reqs = []
+        # different row counts (one 128 bucket) AND widths (one 32 bucket)
+        for i, (n, w) in enumerate([(100, 24), (128, 32), (77, 17)]):
+            qp = open_connection(node)
+            (ft, mat, lens), strs = self._req(n, w, seed=i)
+            pend = submit_request(qp, ft, pipe, strings=mat, lengths=lens)
+            reqs.append((pend, qp, strs, mat, w))
+        before = node.dispatches
+        node.flush()
+        assert node.dispatches == before + 1      # ONE vmapped DFA dispatch
+        for pend, qp, strs, mat, w in reqs:
+            res = pend.wait()
+            expect = [bool(pyre.search(b"error", s[:w])) for s in strs]
+            assert np.asarray(res.mask).tolist() == expect
+            assert res.shipped_bytes == len(strs)     # 1 byte/row, no pad
+            assert res.read_bytes == mat.shape[0] * mat.shape[1]
+
+    def test_crypt_strings_pin_width_and_stay_correct(self):
+        """Pre-crypt string requests batch only at identical widths (the
+        CTR keystream is positional over the byte flattening); stacked
+        results still decrypt/match exactly."""
+        import re as pyre
+        from repro.kernels import ref as kref
+        import jax.numpy as jnp
+        key, nonce = (5, 7), 9
+        pipe = (op.Crypt(key=key, nonce=nonce, when="pre"),
+                op.RegexMatch("error"))
+        node = FViewNode(64 * 2**20, n_regions=3)
+        reqs = []
+        for i, n in enumerate([60, 64, 41]):       # same width, mixed rows
+            qp = open_connection(node)
+            (ft, mat, lens), strs = self._req(n, 32, seed=10 + i)
+            enc = np.asarray(kref.ctr_crypt(
+                jnp.asarray(mat.reshape(-1).astype(np.uint32)),
+                jnp.asarray(key, jnp.uint32), nonce)
+            ).astype(np.uint8).reshape(mat.shape)
+            pend = submit_request(qp, ft, pipe, strings=enc, lengths=lens)
+            reqs.append((pend, strs))
+        before = node.dispatches
+        node.flush()
+        assert node.dispatches == before + 1
+        for pend, strs in reqs:
+            got = np.asarray(pend.wait().mask).tolist()
+            assert got == [bool(pyre.search(b"error", s[:32])) for s in strs]
+
+    def test_crypt_width_mismatch_dispatches_separately(self):
+        pipe = (op.Crypt(key=(1, 2), nonce=3, when="pre"),
+                op.RegexMatch("fine"),)
+        node = FViewNode(64 * 2**20, n_regions=2)
+        for i, w in enumerate((24, 32)):           # same 32-bucket widths
+            qp = open_connection(node)
+            (ft, mat, lens), _ = self._req(50, w, seed=20 + i)
+            submit_request(qp, ft, pipe, strings=mat, lengths=lens)
+        before = node.dispatches
+        node.flush()
+        assert node.dispatches == before + 2       # width pinned by crypt
+
+
+class TestStackedJoin:
+    def test_batched_join_matches_solo(self):
+        pipe = (op.JoinSmall(probe_key="c0", build_table="cust",
+                             build_key="k", build_cols=("v",)),)
+        sizes = (300, 512, 400)
+
+        def setup(node):
+            rng = np.random.default_rng(7)
+            qp0 = open_connection(node)
+            build = FTable("cust", (Column("k", "i32"), Column("v")),
+                           n_rows=40)
+            alloc_table_mem(qp0, build)
+            bk = rng.permutation(64)[:40].astype(np.int32)
+            bv = rng.random(40).astype(np.float32)
+            table_write(qp0, build, build.encode({"k": bk, "v": bv}))
+            return qp0
+
+        node = FViewNode(64 * 2**20, n_regions=4)
+        setup(node)
+        pends = []
+        for i, n in enumerate(sizes):
+            qp = open_connection(node)
+            ft, _ = word_table(qp, f"p{i}", n, seed=200 + i, card=64)
+            pends.append(submit_request(qp, ft, pipe))
+        before = node.dispatches
+        node.flush()
+        assert node.dispatches == before + 1       # ONE broadcast-build stack
+
+        ref_node = FViewNode(64 * 2**20, n_regions=4)
+        setup(ref_node)
+        for pend, (i, n) in zip(pends, enumerate(sizes)):
+            qp = open_connection(ref_node)
+            ft, _ = word_table(qp, f"p{i}", n, seed=200 + i, card=64)
+            ref = farview_request(qp, ft, pipe).finalize()
+            res = pend.wait()
+            assert res.count == ref.count
+            np.testing.assert_array_equal(np.asarray(res.rows),
+                                          np.asarray(ref.rows))
+
+
+class TestMixedKindRound:
+    def test_one_dispatch_per_group(self):
+        """A round mixing word selects (3 sizes), regex strings (2) and
+        join probes (2) costs exactly three stacked dispatches."""
+        node = FViewNode(128 * 2**20, n_regions=8)
+        qp0 = open_connection(node)
+        build = FTable("b", (Column("k", "i32"), Column("v")), n_rows=16)
+        alloc_table_mem(qp0, build)
+        rng = np.random.default_rng(0)
+        table_write(qp0, build, build.encode(
+            {"k": rng.permutation(32)[:16].astype(np.int32),
+             "v": rng.random(16).astype(np.float32)}))
+        jpipe = (op.JoinSmall(probe_key="c0", build_table="b",
+                              build_key="k", build_cols=("v",)),)
+        for i, n in enumerate((300, 512, 400)):
+            qp = open_connection(node)
+            ft, _ = word_table(qp, f"w{i}", n, seed=i)
+            submit_request(qp, ft, PIPE)
+        for i, n in enumerate((50, 64)):
+            qp = open_connection(node)
+            ft, mat, lens = string_table(
+                f"s{i}", [b"x error y", b"ok"] * (n // 2), 16)
+            submit_request(qp, ft, (op.RegexMatch("error"),),
+                           strings=mat, lengths=lens)
+        for i, n in enumerate((200, 256)):
+            qp = open_connection(node)
+            ft, _ = word_table(qp, f"j{i}", n, seed=50 + i, card=32)
+            submit_request(qp, ft, jpipe)
+        before = node.dispatches
+        node.flush()
+        assert node.dispatches == before + 3
+
+
+class TestCloseConnection:
+    def test_close_cancels_queued_requests(self):
+        node = FViewNode(64 * 2**20, n_regions=2)
+        qp1, qp2 = open_connection(node), open_connection(node)
+        ft1, _ = word_table(qp1, "a", 256, seed=1)
+        ft2, d2 = word_table(qp2, "b", 256, seed=2)
+        doomed = submit_request(qp1, ft1, PIPE)
+        alive = submit_request(qp2, ft2, PIPE)
+        close_connection(qp1)
+        with pytest.raises(FarviewError, match="closed"):
+            doomed.wait()
+        # the survivor still dispatches and the freed region's new tenant
+        # sees no ghost traffic
+        qp3 = open_connection(node)
+        assert qp3.region == qp1.region
+        node.flush()
+        assert alive.wait().count == int((d2["c1"] < 0.2).sum())
+        assert qp3.requests == 0
+        assert node.regions[qp3.region].reconfigurations == 0
+        # new verbs on the closed QPair are refused outright, not queued
+        with pytest.raises(FarviewError, match="closed"):
+            submit_request(qp1, ft1, PIPE)
+
+    def test_failed_dispatch_not_counted(self):
+        """node.dispatches is a launch counter: an error round (unknown
+        join build table) must not inflate it."""
+        node = FViewNode(64 * 2**20, n_regions=1)
+        qp = open_connection(node)
+        ft, _ = word_table(qp, "p", 128, seed=3, card=8)
+        bad = (op.JoinSmall(probe_key="c0", build_table="nope",
+                            build_key="k", build_cols=("v",)),)
+        pend = submit_request(qp, ft, bad)
+        before = node.dispatches
+        with pytest.raises(KeyError):
+            node.flush()
+        assert node.dispatches == before
+        with pytest.raises(KeyError):
+            pend.wait()
+
+
+class TestCacheKeyNormalization:
+    def test_interpret_none_and_resolved_share_entry(self):
+        import jax
+        clear_cache()
+        ft = FTable("x", tuple(Column(f"c{i}") for i in range(8)))
+        resolved = jax.default_backend() != "tpu"
+        p_auto = compile_pipeline(ft, PIPE)                    # interpret=None
+        p_expl = compile_pipeline(ft, PIPE, interpret=resolved)
+        assert p_auto is p_expl
+        assert cache_info() == 1

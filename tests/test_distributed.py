@@ -40,7 +40,7 @@ def test_far_naive_local_equivalence():
     from repro.configs import get_config
     from repro.configs.base import smoke_config
     from repro.models.lm import LM
-    from repro.launch.mesh import make_test_mesh
+    from repro.launch.mesh import make_test_mesh, set_mesh
 
     key = jax.random.PRNGKey(0)
     mesh = make_test_mesh((2, 4), ("data", "model"))
@@ -51,7 +51,7 @@ def test_far_naive_local_equivalence():
     B, MAX_S = 4, 128
     toks = jax.random.randint(key, (B, 1), 0, cfg.vocab)
     outs = {}
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         for mode, lm in [("far", lm_far), ("naive", lm_far),
                          ("local", lm_loc)]:
             c = lm.init_cache(B, MAX_S, jnp.float32)
@@ -77,7 +77,7 @@ def test_sharded_train_step_matches_single_device():
     from repro.configs import get_config
     from repro.configs.base import TrainConfig, smoke_config
     from repro.models.lm import LM
-    from repro.launch.mesh import make_test_mesh
+    from repro.launch.mesh import make_test_mesh, set_mesh
     from repro.distributed import sharding as S
     from repro.runtime import steps as R
 
@@ -107,7 +107,7 @@ def test_sharded_train_step_matches_single_device():
     bsh = {k: NamedSharding(mesh, v) for k, v in bspecs.items()}
     batch_sh = {k: jax.device_put(v, bsh[k]) for k, v in batch.items()}
     step = jax.jit(R.make_train_step(lm, tcfg))
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         p1, o1, m1 = step(params, opt, batch_sh)
 
     dloss = abs(float(m0["loss"]) - float(m1["loss"]))
@@ -181,6 +181,7 @@ def test_hlo_analyzer_trip_scaling():
     res = run_in_subprocess("""
     import json
     import jax, jax.numpy as jnp
+    from repro.jax_compat import cost_analysis
     from repro.launch.hlo_analysis import analyze
     def scanned(x, ws):
         return jax.lax.scan(lambda c, w: (c @ w, None), x, ws)[0]
@@ -188,7 +189,7 @@ def test_hlo_analyzer_trip_scaling():
     w = jax.ShapeDtypeStruct((10, 256, 256), jnp.float32)
     compiled = jax.jit(scanned).lower(x, w).compile()
     a = analyze(compiled.as_text())
-    raw = compiled.cost_analysis()["flops"]
+    raw = cost_analysis(compiled)["flops"]
     print("RESULT:" + json.dumps({"scaled": a["flops"], "raw": raw}))
     """)
     expect = 10 * 2 * 256 ** 3

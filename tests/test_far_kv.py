@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import far_kv
+from repro.jax_compat import make_mesh, shard_map
 from repro.kernels import ref as kref
 
 
@@ -59,8 +60,7 @@ def test_append_seq_sharded_semantics(rng):
     # a 1-device mesh is overkill; test the index math directly
     b, s_loc, hkv, d = 2, 16, 2, 8
     import functools
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("model",))
     from jax.sharding import PartitionSpec as P
     k_cache = jnp.zeros((b, s_loc, hkv, d))
     v_cache = jnp.zeros((b, s_loc, hkv, d))
@@ -68,7 +68,7 @@ def test_append_seq_sharded_semantics(rng):
     v_new = jnp.asarray(rng.normal(size=(b, hkv, d)), jnp.float32)
 
     def run(pos):
-        f = jax.shard_map(
+        f = shard_map(
             functools.partial(far_kv.append_seq_sharded, axis="model"),
             mesh=mesh, in_specs=(P(), P(), P(), P(), P()),
             out_specs=(P(), P()), check_vma=False)
@@ -90,10 +90,9 @@ def test_merge_partials_named_single_axis(rng):
     o = jnp.asarray(rng.normal(size=(b, hq, d)), jnp.float32)
     m = jnp.asarray(rng.normal(size=(b, hq)), jnp.float32)
     l = jnp.abs(jnp.asarray(rng.normal(size=(b, hq)), jnp.float32)) + 0.1
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("model",))
     from jax.sharding import PartitionSpec as P
-    out = jax.shard_map(
+    out = shard_map(
         lambda o, m, l: far_kv.merge_partials_named(o, m, l, "model"),
         mesh=mesh, in_specs=(P(), P(), P()), out_specs=P(),
         check_vma=False)(o, m, l)

@@ -9,6 +9,10 @@ Each property is an invariant the paper's contract depends on:
 """
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dep: pip install hypothesis")
 from hypothesis import given, settings, strategies as st, HealthCheck
 
 from repro.core import operators as op

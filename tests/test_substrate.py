@@ -105,8 +105,8 @@ class TestCheckpoint:
         """Saved unsharded -> restored with explicit shardings (new mesh)."""
         from repro.checkpoint.manager import CheckpointManager
         from jax.sharding import NamedSharding, PartitionSpec as P
-        mesh = jax.make_mesh((1,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.jax_compat import make_mesh
+        mesh = make_mesh((1,), ("model",))
         with tempfile.TemporaryDirectory() as d:
             cm = CheckpointManager(d)
             cm.save(1, self._tree())
