@@ -1,0 +1,145 @@
+"""Cluster scale-out: aggregate throughput vs FViewNode count (PR 3).
+
+A mixed workload — per client one selection, one group-aggregate, one regex
+and one join-probe request — is scattered over a FarCluster of 1/2/4 nodes
+holding the same logical tables (range-partitioned; the join build
+replicated). The timed region is the full scatter-gather verb: submit,
+per-node bucket-batched flush (nodes drain in parallel threads), client
+merge, finalize.
+
+Throughput = total input rows pushed through operator pipelines per second
+of wall time. On this container every "node" shares one CPU, so the
+scale-out win comes from overlapping the nodes' dispatch + executable
+streams rather than from extra silicon; byte accounting stays exact and
+identical across node counts (asserted in tests/test_cluster.py).
+
+Standalone:  python -m benchmarks.bench_cluster_scaleout --json BENCH.json
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import operators as op
+from repro.core.cluster import FarCluster
+from repro.core.table import Column, FTable, string_table
+
+STRS = [b"error: disk full", b"all fine here", b"ERROR", b"warn: error",
+        b"errr", b"the error is late", b"nothing to see", b"ok ok ok"]
+
+
+def _word_data(rng, n, card):
+    d = {"c0": rng.integers(0, card, n).astype(np.int32)}
+    for i in range(1, 8):
+        d[f"c{i}"] = rng.normal(size=n).astype(np.float32)
+    return d
+
+
+def _setup(k, n_clients, n_word, n_str, str_w):
+    """One cluster + per-client tables; returns (cluster, request list)."""
+    cols = tuple(Column(f"c{i}", "i32" if i == 0 else "f32")
+                 for i in range(8))
+    cl = FarCluster(k, 256 * 2**20)
+    rng = np.random.default_rng(0)
+    requests = []
+    cqp0 = cl.open_connection()
+    build = FTable("dim", (Column("k", "i32"), Column("v")), n_rows=64)
+    cb = cl.alloc_table_mem(cqp0, build, replicate=True)
+    cl.table_write(cqp0, cb, build.encode(
+        {"k": rng.permutation(128)[:64].astype(np.int32),
+         "v": rng.random(64).astype(np.float32)}))
+    sel = (op.Select((op.Predicate("c1", "<", 0.2),)),)
+    grp = (op.GroupBy("c0", ("c1", "c2"), n_buckets=256),)
+    rgx = (op.RegexMatch("error"),)
+    joi = (op.JoinSmall(probe_key="c0", build_table="dim",
+                        build_key="k", build_cols=("v",)),)
+    for c in range(n_clients):
+        cqp = cl.open_connection()
+        wft = cl.alloc_table_mem(cqp, FTable(f"w{c}", cols, n_rows=n_word))
+        cl.table_write(cqp, wft, FTable(f"w{c}", cols, n_rows=n_word)
+                       .encode(_word_data(rng, n_word, 64)))
+        gft = cl.alloc_table_mem(cqp, FTable(f"g{c}", cols, n_rows=n_word))
+        cl.table_write(cqp, gft, FTable(f"g{c}", cols, n_rows=n_word)
+                       .encode(_word_data(rng, n_word, 128)))
+        strs = [STRS[j] for j in rng.integers(0, len(STRS), n_str)]
+        sft, mat, lens = string_table(f"s{c}", strs, str_w)
+        cst = cl.alloc_table_mem(
+            cqp, FTable(f"s{c}", sft.columns, n_rows=n_str, str_width=str_w))
+        requests += [
+            (cqp, wft, sel, None, None),
+            (cqp, gft, grp, None, None),
+            (cqp, cst, rgx, mat, lens),
+            (cqp, wft, joi, None, None),
+        ]
+    return cl, requests
+
+
+def run() -> None:
+    q = common.quick()
+    # sizes where compute dominates per-dispatch overhead: a 2-core host
+    # shows real overlap only once each node's executable runs for long
+    # enough that the nodes' streams actually interleave
+    n_word = 1 << (13 if q else 19)
+    n_str = 1 << (10 if q else 14)
+    n_clients = 2 if q else 4
+    node_counts = (1, 2) if q else (1, 2, 4)
+    str_w = 32
+    repeat = 1 if q else 5
+    rows_per_round = n_clients * (3 * n_word + n_str)
+
+    def make_round(cl, requests):
+        def one_round():
+            pends = [cl.submit_request(cqp, ct, pipe,
+                                       strings=mat, lengths=lens)
+                     for cqp, ct, pipe, mat, lens in requests]
+            return [p.wait() for p in pends]
+        return one_round
+
+    # all clusters up front, then INTERLEAVED rounds: sample k=1,2,4,
+    # 1,2,4, ... so host-load drift hits every node count equally instead
+    # of whichever happened to run last
+    rounds = {}
+    for k in node_counts:
+        rounds[k] = make_round(*_setup(k, n_clients, n_word, n_str, str_w))
+        for res in rounds[k]():                 # warmup: trace + caches
+            res.finalize()
+    samples = {k: [] for k in node_counts}
+    for _ in range(repeat):
+        for k in node_counts:
+            t0 = time.perf_counter()
+            for res in rounds[k]():
+                res.finalize()
+            samples[k].append(time.perf_counter() - t0)
+    base = None
+    for k in node_counts:
+        sec = sorted(samples[k])[len(samples[k]) // 2]          # p50
+        thru = rows_per_round / sec
+        base = base or thru
+        common.row("cluster_scaleout", f"{k}nodes", sec * 1e6,
+                   nodes=k, clients=n_clients,
+                   rows_per_round=rows_per_round,
+                   mrows_per_s=round(thru / 1e6, 2),
+                   speedup=round(thru / base, 2))
+
+
+def main() -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    if args.quick:
+        common.QUICK = True
+    run()
+    common.print_csv()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(common.rows_as_records(), f, indent=2, default=str)
+
+
+if __name__ == "__main__":
+    main()

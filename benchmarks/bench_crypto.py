@@ -13,7 +13,7 @@ import jax.numpy as jnp
 from benchmarks.common import row, timeit
 from repro.core import operators as op
 from repro.core.client import (FViewNode, alloc_table_mem, farview_request,
-                               open_connection, table_read, table_write)
+                               open_connection, table_write)
 from repro.core.table import FTable, Column
 from repro.data.pipeline import db_table_columns
 from repro.kernels import ops as kops

@@ -8,15 +8,13 @@ shipped bytes exact)."""
 from __future__ import annotations
 
 import numpy as np
-import jax.numpy as jnp
 
 from benchmarks.common import row, timeit
 from repro.core import operators as op
 from repro.core.client import (FViewNode, alloc_table_mem, farview_request,
-                               merge_group_partials, open_connection,
+                               open_connection,
                                table_write)
 from repro.core.table import FTable, Column
-from repro.kernels import ref as kref
 
 
 def run() -> None:

@@ -4,7 +4,6 @@ the build values appended; RCPU ships the whole probe table."""
 from __future__ import annotations
 
 import numpy as np
-import jax.numpy as jnp
 
 from benchmarks.common import row, timeit
 from repro.core import operators as op

@@ -6,7 +6,6 @@ VMEM-per-core class budget), plus flops/bytes per call from the jnp
 reference (exact op counts)."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import row
 

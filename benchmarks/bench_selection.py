@@ -7,7 +7,6 @@ the wire ∝ selectivity, so FV wins whenever selectivity < 1)."""
 from __future__ import annotations
 
 import numpy as np
-import jax.numpy as jnp
 
 from benchmarks.common import row, timeit
 from repro.core import operators as op

@@ -16,12 +16,24 @@ never async dispatch. Reported value is the p50 (median) across repeats.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import jax
 import numpy as np
 
 ROWS: list[dict] = []
+
+# Quick/smoke mode (CI benchmark job): single warmup + single repeat and
+# reduced problem sizes where a bench opts in via `quick()`. Enabled by
+# `benchmarks.run --quick` or the FARVIEW_BENCH_QUICK env var. Timings in
+# this mode are indicative only — the JSON artifact tracks that the bench
+# *runs* and its exact byte accounting, not p50 stability.
+QUICK = os.environ.get("FARVIEW_BENCH_QUICK", "") not in ("", "0")
+
+
+def quick() -> bool:
+    return QUICK
 
 
 def _materialize(x) -> None:
@@ -44,6 +56,8 @@ def _materialize(x) -> None:
 
 def timeit(fn, *, repeat: int = 5, warmup: int = 2) -> float:
     """p50 wall time of `fn()` including result materialization (seconds)."""
+    if QUICK:
+        repeat, warmup = 1, 1
     for _ in range(warmup):
         _materialize(fn())
     ts = []

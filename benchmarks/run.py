@@ -30,11 +30,11 @@ import json
 import sys
 import time
 
-from benchmarks import (bench_crypto, bench_far_kv, bench_grouping,
-                        bench_join, bench_multiclient,
+from benchmarks import (bench_cluster_scaleout, bench_crypto, bench_far_kv,
+                        bench_grouping, bench_join, bench_multiclient,
                         bench_multiclient_mixed, bench_projection,
                         bench_rdma, bench_regex, bench_resources,
-                        bench_selection)
+                        bench_selection, common)
 from benchmarks.common import print_csv, rows_as_records
 
 ALL = {
@@ -49,6 +49,7 @@ ALL = {
     "join": bench_join.run,
     "resources": bench_resources.run,
     "far_kv": bench_far_kv.run,
+    "cluster_scaleout": bench_cluster_scaleout.run,
 }
 
 
@@ -58,7 +59,12 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as a JSON record list "
                          "(e.g. BENCH_20260728_120000.json)")
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke mode (CI): 1 warmup + 1 repeat, reduced "
+                         "sizes — indicative timings, exact byte columns")
     args = ap.parse_args()
+    if args.quick:
+        common.QUICK = True
     for name, fn in ALL.items():
         if args.only and name != args.only:
             continue

@@ -104,6 +104,8 @@ class PendingRequest:
     pipeline: tuple
     lengths: np.ndarray | None = None
     strings: np.ndarray | None = None
+    row_ids: np.ndarray | None = None   # original-table row indices (cluster
+    #                                     partition dispatch; None = solo)
     result: PipelineResult | None = None
     error: Exception | None = None      # dispatch-time failure (this request)
 
@@ -171,16 +173,23 @@ class FViewNode:
         self._qpairs.pop(qp.qp_id, None)
 
     # -------------------------------------------------------------- scheduler
+    @property
+    def has_queued(self) -> bool:
+        """Whether any submitted request awaits a scheduling round (the
+        cluster's scatter uses this to decide which nodes need a drain)."""
+        return bool(self._queue)
+
     def submit(self, qp: QPair, ft: FTable, pipeline: tuple, *,
                lengths: np.ndarray | None = None,
-               strings: np.ndarray | None = None) -> PendingRequest:
+               strings: np.ndarray | None = None,
+               row_ids: np.ndarray | None = None) -> PendingRequest:
         """Queue a Farview verb; dispatched at the next scheduling round."""
         if qp.qp_id not in self._qpairs:
             # a closed QPair's region may already be bound to a new tenant;
             # accepting the verb would ghost-dispatch against it
             raise FarviewError(f"connection qp{qp.qp_id} is closed")
         pipeline = op_ir.validate_pipeline(tuple(pipeline))
-        req = PendingRequest(qp, ft, pipeline, lengths, strings)
+        req = PendingRequest(qp, ft, pipeline, lengths, strings, row_ids)
         self._queue.append(req)
         return req
 
@@ -253,15 +262,19 @@ class FViewNode:
         over the row-major byte flattening (row padding appends whole
         rows and never shifts it)."""
         sig = op_ir.signature(req.pipeline)
+        # partitioned requests (row_ids) ride their own stacks: the traced
+        # program takes an extra ids operand, so mixing them with solo
+        # requests would be a different executable signature anyway
+        ids = req.row_ids is not None
         layout = (tuple((c.name, c.dtype) for c in req.ft.columns),
                   bool(req.ft.str_width))
         if req.strings is not None:
             n, w = np.asarray(req.strings).shape
             wkey = (int(w) if op_ir.has_crypt_pre(req.pipeline)
                     else op_ir.pow2_bucket(w))
-            return ("str", sig, layout, op_ir.pow2_bucket(n), wkey)
+            return ("str", sig, layout, op_ir.pow2_bucket(n), wkey, ids)
         return ("word", sig, layout, req.ft.row_words,
-                op_ir.pow2_bucket(req.ft.n_rows))
+                op_ir.pow2_bucket(req.ft.n_rows), ids)
 
     def _resolve_build(self, pipeline: tuple):
         """The node reads the join build table into "on-chip memory"
@@ -292,13 +305,15 @@ class FViewNode:
             req = reqs[0]
             if req.strings is not None:
                 res = pipe(jnp.asarray(req.strings),
-                           jnp.asarray(req.lengths))
+                           jnp.asarray(req.lengths),
+                           row_ids=req.row_ids)
             else:
                 build = self._resolve_build(req.pipeline)
                 res = pipe.run_pages(self.pool.buf, req.ft.pages,
                                      req.ft.n_rows, build=build,
                                      n_rows=req.ft.n_rows,
-                                     row_words=req.ft.row_words)
+                                     row_words=req.ft.row_words,
+                                     row_ids=req.row_ids)
             results = [res]
         elif reqs[0].strings is not None:
             results = self._dispatch_strings_batched(pipe, reqs)
@@ -322,10 +337,15 @@ class FViewNode:
         for b, r in enumerate(reqs):
             pages[b, : len(r.ft.pages)] = r.ft.pages
         n_valid = np.asarray([r.ft.n_rows for r in reqs], np.int32)
+        row_ids = None
+        if reqs[0].row_ids is not None:     # homogeneous by dispatch key
+            row_ids = np.zeros((len(reqs), bucket), np.int32)
+            for b, r in enumerate(reqs):
+                row_ids[b, : r.ft.n_rows] = r.row_ids    # tails masked
         build = self._resolve_build(reqs[0].pipeline)
         return pipe.run_pages_batched(self.pool.buf, pages, n_valid,
                                       build=build, n_rows=bucket,
-                                      row_words=row_words)
+                                      row_words=row_words, row_ids=row_ids)
 
     def _dispatch_strings_batched(self, pipe, reqs) -> list[PipelineResult]:
         """Stacked string/regex round: zero-pad each request's byte matrix
@@ -344,8 +364,13 @@ class FViewNode:
             lengths[b, : m.shape[0]] = np.asarray(r.lengths, np.int32)
         n_valid = np.asarray([m.shape[0] for m in mats], np.int32)
         widths = np.asarray([m.shape[1] for m in mats], np.int32)
+        row_ids = None
+        if reqs[0].row_ids is not None:     # homogeneous by dispatch key
+            row_ids = np.zeros((len(reqs), bucket_n), np.int32)
+            for b, (m, r) in enumerate(zip(mats, reqs)):
+                row_ids[b, : m.shape[0]] = r.row_ids     # tails masked
         return pipe.run_strings_batched(stacked, lengths, n_valid,
-                                        widths=widths)
+                                        widths=widths, row_ids=row_ids)
 
     def _account(self, req: PendingRequest, res: PipelineResult) -> None:
         qp = req.qp
@@ -401,16 +426,21 @@ def table_read(qp: QPair, ft: FTable) -> jnp.ndarray:
 # ------------------------------------------------------------- Farview verb
 def submit_request(qp: QPair, ft: FTable, pipeline: tuple, *,
                    lengths: np.ndarray | None = None,
-                   strings: np.ndarray | None = None) -> PendingRequest:
+                   strings: np.ndarray | None = None,
+                   row_ids: np.ndarray | None = None) -> PendingRequest:
     """Async Farview verb: queue on the node. `node.flush()` dispatches;
     requests from different QPairs sharing a signature coalesce into one
-    stacked executable per scheduling round."""
-    return qp.node.submit(qp, ft, pipeline, lengths=lengths, strings=strings)
+    stacked executable per scheduling round. `row_ids` marks a partition
+    dispatch (cluster scatter): original-table row indices that key the
+    crypt keystream and come back as `PipelineResult.sel_ids`."""
+    return qp.node.submit(qp, ft, pipeline, lengths=lengths, strings=strings,
+                          row_ids=row_ids)
 
 
 def farview_request(qp: QPair, ft: FTable, pipeline: tuple,
                     *, lengths: np.ndarray | None = None,
-                    strings: np.ndarray | None = None) -> PipelineResult:
+                    strings: np.ndarray | None = None,
+                    row_ids: np.ndarray | None = None) -> PipelineResult:
     """The paper's extra one-sided verb: read + operator pipeline push-down.
 
     One fused executable per (signature, layout) does page gather +
@@ -421,7 +451,8 @@ def farview_request(qp: QPair, ft: FTable, pipeline: tuple,
     their byte matrix + lengths explicitly (string ingest keeps a byte-exact
     sideband since the pool stores f32 words).
     """
-    req = submit_request(qp, ft, pipeline, lengths=lengths, strings=strings)
+    req = submit_request(qp, ft, pipeline, lengths=lengths, strings=strings,
+                         row_ids=row_ids)
     try:
         qp.node.flush()
     except Exception:
@@ -434,6 +465,13 @@ def farview_request(qp: QPair, ft: FTable, pipeline: tuple,
 
 
 def merge_group_partials(ft: FTable, pipeline: tuple,
-                         partials: list[PipelineResult]) -> PipelineResult:
-    """Client-side software merge (overflow buffers, multi-node partials)."""
-    return _merge(ft, pipeline, partials)
+                         partials: list[PipelineResult], *,
+                         n_rows: int | None = None,
+                         part_rows: list | None = None) -> PipelineResult:
+    """Client-side software merge (overflow buffers, multi-node partials).
+
+    `n_rows` / `part_rows` are the cluster scatter-gather extras: the
+    original table's row count and the partition map, which let rows-kind
+    and mask-kind partials splice back byte-identically to a single-node
+    response (see offload._merge)."""
+    return _merge(ft, pipeline, partials, n_rows=n_rows, part_rows=part_rows)

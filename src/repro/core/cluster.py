@@ -1,0 +1,367 @@
+"""FarCluster: a pool sharded across N FViewNodes with scatter-gather verbs.
+
+The paper's premise is one large disaggregated pool serving many small
+processing nodes, and its evaluation scales to multiple Farview instances.
+This module is that scale-out: a `FarCluster` owns N independent
+`FViewNode`s and presents the same verb surface as a single node —
+
+    open_connection(cluster)            -> ClusterQP (one QPair per node)
+    alloc_table_mem(cqp, ft)            -> ClusterTable (client-side
+                                           partition map; no node traffic)
+    table_write / table_read            -> row scatter / ordered gather
+    farview_request(cqp, ct, pipeline)  -> merged PipelineResult
+    submit_request / flush              -> async scatter-gather
+
+Partitioning is decided client-side at `alloc_table_mem` time
+(`distributed.sharding.partition_rows`): contiguous `range` blocks
+(default), key-`hash` (co-locates equal keys for joins/group-bys), or the
+`skew`-aware greedy balancer that places key-groups largest-first on the
+least-loaded node. The map is pure metadata — nodes never talk to each
+other, exactly like the paper's one-sided RDMA model.
+
+A Farview verb against a partitioned table scatters: each owning node runs
+the SAME fused `CompiledPipeline` over its local partition (select/project,
+regex, crypt, join probe, partial group-aggregate) and keeps its own
+bucket-batched scheduler — partition requests from many cluster clients
+coalesce per node into stacked executables just like solo requests do. The
+client then gathers and merges partials (`offload._merge` /
+`merge_group_partials`) byte-identically to a single-node dispatch:
+
+  * rows kind: survivors splice in original row order (each partition
+    dispatch threads `row_ids` through the packing and gets them back as
+    `sel_ids`), then pad to the solo-shaped (n_rows, width) buffer; a
+    post-crypt response is decrypted per-node, spliced, and re-encrypted
+    at merged keystream positions;
+  * mask kind (regex): per-partition decisions scatter back to original
+    row positions via the partition map;
+  * groups kind: partial aggregates merge client-side (the paper's
+    software merge, generalized from overflow buffers to node partials).
+
+Pre-crypt works on any partition because the CTR keystream is addressed by
+ORIGINAL row offsets (`row_ids`), not local ones — a node holding rows
+{3, 17, 40} of an encrypted table decrypts each with the keystream slice it
+was encrypted under.
+
+Small join build tables are `replicate=True`-allocated (a copy in every
+node's pool, the classic broadcast join) so probe partitions resolve their
+build locally.
+
+Scatter dispatch is genuinely concurrent: `flush()` drains each node's
+scheduler in its own thread (nodes are independent; XLA releases the GIL),
+which is what the scale-out benchmark (`bench_cluster_scaleout`) measures.
+Per-node read/shipped accounting stays on each node's QPair/pool; the
+ClusterQP and `cluster.stats` expose the aggregate.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import client as fv
+from repro.core import operators as op_ir
+from repro.core.pipeline import PipelineResult
+from repro.core.pool import PoolStats
+from repro.core.table import FTable, INT_EXACT_LIMIT
+from repro.distributed.sharding import partition_rows
+
+
+@dataclass
+class ClusterTable:
+    """A logical table + its client-side partition map."""
+    schema: FTable                  # the un-partitioned table (schema, n_rows)
+    parts: list                     # per-node FTable handle (None = no rows)
+    part_rows: list                 # per-node original-row index arrays
+    partitioner: str
+    replicated: bool = False        # full copy on every node (join builds)
+
+    @property
+    def name(self) -> str:
+        return self.schema.name
+
+    @property
+    def n_rows(self) -> int:
+        return self.schema.n_rows
+
+
+class ClusterQP:
+    """One logical connection = one QPair on every node.
+
+    Byte counters are aggregates of the per-node QPairs (reading them
+    settles each node — the same lazy-accounting contract as a solo QPair);
+    `requests` counts cluster verbs, `qps[i].requests` per-node dispatches.
+    """
+
+    def __init__(self, cluster: "FarCluster", qps: list):
+        self.cluster = cluster
+        self.qps = qps
+        self.requests = 0
+
+    @property
+    def bytes_shipped(self) -> int:
+        return sum(qp.bytes_shipped for qp in self.qps)
+
+    @property
+    def bytes_read_pool(self) -> int:
+        return sum(qp.bytes_read_pool for qp in self.qps)
+
+
+class ClusterPending:
+    """A scattered Farview verb awaiting its gather."""
+
+    def __init__(self, cluster: "FarCluster", ctable: ClusterTable,
+                 pipeline: tuple, pends: list, part_rows: list):
+        self.cluster = cluster
+        self.ctable = ctable
+        self.pipeline = pipeline
+        self.pends = pends          # per-node PendingRequests (owners only)
+        self.part_rows = part_rows  # aligned original-row indices
+
+    def wait(self) -> PipelineResult:
+        """Flush every involved node and merge the partials."""
+        flush_err: Exception | None = None
+        try:
+            self.cluster.flush()
+        except Exception as e:      # may belong to another verb's partial
+            flush_err = e
+        partials = []
+        for pend in self.pends:
+            if pend.error is not None:
+                raise pend.error
+            if pend.result is None:             # never dispatched
+                raise flush_err or fv.FarviewError(
+                    "cluster partial was not dispatched")
+            partials.append(pend.result)
+        if self.ctable.replicated:
+            # served whole from node 0: the partial IS the solo-shaped
+            # response — merging would only rebuild (and for a post-crypt,
+            # redundantly decrypt + re-encrypt) a byte-identical copy
+            return partials[0]
+        return fv.merge_group_partials(
+            self.ctable.schema, self.pipeline, partials,
+            n_rows=self.ctable.n_rows, part_rows=self.part_rows)
+
+
+class FarCluster:
+    """N smart memory nodes + client-side scatter-gather dispatch."""
+
+    def __init__(self, n_nodes: int, capacity_bytes: int = 64 * 2**20, *,
+                 n_regions: int = 6, interpret: bool | None = None,
+                 partitioner: str = "range", parallel: bool = True):
+        if n_nodes < 1:
+            raise ValueError("a cluster needs at least one node")
+        self.nodes = [fv.FViewNode(capacity_bytes, n_regions=n_regions,
+                                   interpret=interpret)
+                      for _ in range(n_nodes)]
+        self.partitioner = partitioner
+        self.parallel = parallel and n_nodes > 1
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.nodes)
+
+    @property
+    def dispatches(self) -> int:
+        """Total stacked-executable launches across the cluster."""
+        return sum(node.dispatches for node in self.nodes)
+
+    @property
+    def stats(self) -> PoolStats:
+        return PoolStats.aggregate([node.pool.stats for node in self.nodes])
+
+    # ----------------------------------------------------------- connections
+    def open_connection(self) -> ClusterQP:
+        qps = []
+        try:
+            for node in self.nodes:
+                qps.append(node.open_connection())
+        except fv.FarviewError:
+            for qp, node in zip(qps, self.nodes):
+                node.close_connection(qp)
+            raise
+        return ClusterQP(self, qps)
+
+    def close_connection(self, cqp: ClusterQP) -> None:
+        """Close the per-node QPairs; each node cancels the connection's
+        still-queued partition requests (their `wait()` raises)."""
+        for node, qp in zip(self.nodes, cqp.qps):
+            node.close_connection(qp)
+
+    # ---------------------------------------------------------------- memory
+    def alloc_table_mem(self, cqp: ClusterQP, ft: FTable, *,
+                        replicate: bool = False,
+                        partitioner: str | None = None,
+                        keys: np.ndarray | None = None) -> ClusterTable:
+        """Partition (or replicate) a table across the nodes' pools.
+
+        The partition map is computed HERE, once, client-side: `keys`
+        (optional, one value per row) feeds the hash/skew partitioners so
+        equal-key rows co-locate. `replicate=True` puts a full copy in
+        every pool — for small join build tables (broadcast join)."""
+        if ft.n_rows >= INT_EXACT_LIMIT:
+            # row ids ride the fused packing as an f32 column (the same
+            # exactness budget the DB enforces for i32 data at ingest);
+            # ids >= 2^24 would round and silently break the merge order
+            raise ValueError(
+                f"cluster tables are limited to {INT_EXACT_LIMIT - 1} rows "
+                "(row ids must stay f32-exact); partition the data into "
+                "multiple tables")
+        if replicate:
+            parts = self._alloc_parts(
+                cqp, ft, [ft.n_rows] * self.n_nodes)
+            all_rows = np.arange(ft.n_rows, dtype=np.int64)
+            return ClusterTable(ft, parts, [all_rows] * self.n_nodes,
+                                "replicate", replicated=True)
+        kind = partitioner or self.partitioner
+        part_rows = partition_rows(ft.n_rows, self.n_nodes, kind, keys=keys)
+        parts = self._alloc_parts(cqp, ft, [len(i) for i in part_rows])
+        return ClusterTable(ft, parts, part_rows, kind)
+
+    def _alloc_parts(self, cqp: ClusterQP, ft: FTable,
+                     rows_per_node: list) -> list:
+        """Allocate one partition per node (None for zero rows), rolling
+        back the earlier nodes' allocations if a later pool is exhausted —
+        a half-scattered table would leak pages with no handle to free."""
+        parts: list = []
+        try:
+            for qp, n in zip(cqp.qps, rows_per_node):
+                if n == 0:
+                    parts.append(None)
+                    continue
+                part = FTable(ft.name, ft.columns, n_rows=n,
+                              str_width=ft.str_width)
+                fv.alloc_table_mem(qp, part)
+                parts.append(part)
+        except Exception:
+            for qp, part in zip(cqp.qps, parts):
+                if part is not None:
+                    fv.free_table_mem(qp, part)
+            raise
+        return parts
+
+    def free_table_mem(self, cqp: ClusterQP, ctable: ClusterTable) -> None:
+        for qp, part in zip(cqp.qps, ctable.parts):
+            if part is not None:
+                fv.free_table_mem(qp, part)
+
+    def table_write(self, cqp: ClusterQP, ctable: ClusterTable,
+                    words: np.ndarray) -> None:
+        """Scatter the row matrix to the owning nodes (or all, if
+        replicated). Rows land pre-split; nothing is written twice."""
+        words = np.asarray(words)
+        if ctable.replicated:
+            for qp, part in zip(cqp.qps, ctable.parts):
+                fv.table_write(qp, part, words)
+            return
+        for qp, part, idx in zip(cqp.qps, ctable.parts, ctable.part_rows):
+            if part is not None:
+                fv.table_write(qp, part, words[np.asarray(idx)])
+
+    def table_read(self, cqp: ClusterQP, ctable: ClusterTable) -> jnp.ndarray:
+        """Plain gather-read: fetch every partition, restore original row
+        order via the partition map (ships the whole table — no push-down)."""
+        if ctable.replicated:
+            return fv.table_read(cqp.qps[0], ctable.parts[0])
+        out = np.zeros((ctable.n_rows, ctable.schema.row_words), np.float32)
+        for qp, part, idx in zip(cqp.qps, ctable.parts, ctable.part_rows):
+            if part is not None:
+                out[np.asarray(idx)] = np.asarray(fv.table_read(qp, part))
+        return jnp.asarray(out)
+
+    # -------------------------------------------------------------- dispatch
+    def submit_request(self, cqp: ClusterQP, ctable: ClusterTable,
+                       pipeline: tuple, *,
+                       lengths: np.ndarray | None = None,
+                       strings: np.ndarray | None = None) -> ClusterPending:
+        """Scatter one Farview verb: queue a partition request on every
+        owning node. Each node's bucket-batched scheduler coalesces the
+        partition with whatever else is queued there — K cluster clients
+        running the same pipeline still cost each node ONE stacked
+        dispatch per round."""
+        pipeline = op_ir.validate_pipeline(tuple(pipeline))
+        strings = None if strings is None else np.asarray(strings)
+        lengths = None if lengths is None else np.asarray(lengths)
+        if ctable.replicated:
+            # a replicated table has no partitions to scatter over: serve
+            # from node 0 exactly like a solo dispatch
+            pend = self.nodes[0].submit(
+                cqp.qps[0], ctable.parts[0], pipeline,
+                lengths=lengths, strings=strings)
+            cqp.requests += 1
+            return ClusterPending(self, ctable, pipeline, [pend],
+                                  [ctable.part_rows[0]])
+        pends, prows = [], []
+        for node, qp, part, idx in zip(self.nodes, cqp.qps, ctable.parts,
+                                       ctable.part_rows):
+            if part is None:
+                continue
+            idx = np.asarray(idx)
+            kwargs = {}
+            if strings is not None:
+                kwargs["strings"] = strings[idx]
+                kwargs["lengths"] = lengths[idx]
+            pends.append(node.submit(qp, part, pipeline,
+                                     row_ids=idx.astype(np.int32), **kwargs))
+            prows.append(idx)
+        cqp.requests += 1
+        return ClusterPending(self, ctable, pipeline, pends, prows)
+
+    def flush(self) -> None:
+        """Drain every node's scheduler — concurrently when `parallel`
+        (nodes are independent machines; here, independent executables
+        whose dispatch threads overlap). Per-node dispatch errors stay
+        attached to their own requests; the first one re-raises after all
+        nodes drain, like a solo node's flush."""
+        pending = [node for node in self.nodes if node.has_queued]
+        if not pending:
+            return
+        errors: list = [None] * len(pending)
+
+        def drain(i: int, node) -> None:
+            try:
+                node.flush()
+            except Exception as e:          # noqa: BLE001 - re-raised below
+                errors[i] = e
+
+        if self.parallel and len(pending) > 1:
+            threads = [threading.Thread(target=drain, args=(i, node))
+                       for i, node in enumerate(pending)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+        else:
+            for i, node in enumerate(pending):
+                drain(i, node)
+        for err in errors:
+            if err is not None:
+                raise err
+
+    def settle(self) -> None:
+        """Flush + finalize in-flight responses on every node."""
+        try:
+            self.flush()
+        except Exception:
+            pass                    # errors stay on their PendingRequests
+        for node in self.nodes:
+            node.settle()
+
+    def farview_request(self, cqp: ClusterQP, ctable: ClusterTable,
+                        pipeline: tuple, *,
+                        lengths: np.ndarray | None = None,
+                        strings: np.ndarray | None = None) -> PipelineResult:
+        """The scatter-gather Farview verb: partition dispatch on every
+        owning node, client-side merge byte-identical to a single node."""
+        pend = self.submit_request(cqp, ctable, pipeline,
+                                   lengths=lengths, strings=strings)
+        return pend.wait()
+
+
+def open_connection(cluster: FarCluster) -> ClusterQP:
+    return cluster.open_connection()
+
+
+def close_connection(cqp: ClusterQP) -> None:
+    cqp.cluster.close_connection(cqp)

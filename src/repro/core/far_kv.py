@@ -22,7 +22,6 @@ GQA attention block (projections TP-sharded by heads + far-pool cache).
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 
 import jax

@@ -18,7 +18,6 @@ rows — the metric behind Figs. 8-10.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 
 import jax
@@ -94,16 +93,82 @@ def run_offloaded(mesh: Mesh, axis: str, schema: FTable, pipeline: tuple,
 
 
 def _merge(schema: FTable, pipeline: tuple,
-           partials: list[PipelineResult]) -> PipelineResult:
+           partials: list[PipelineResult], *,
+           n_rows: int | None = None,
+           part_rows: "list[np.ndarray] | None" = None) -> PipelineResult:
+    """Client-side software merge of per-shard / per-node partials.
+
+    The base behavior (offload engine) concatenates partials in shard
+    order. The cluster scatter-gather path passes two extras that make the
+    merged response byte-identical to a single-node dispatch:
+
+      n_rows      the un-partitioned table's row count: rows-kind results
+                  are rebuilt as the full (n_rows, width) packed buffer
+                  (survivors front, zero tail) and mask-kind results as the
+                  full row mask;
+      part_rows   per-partial original-row index arrays (the partition
+                  map), used to scatter mask partials back to their rows.
+
+    When every rows-kind partial carries `sel_ids` (partition dispatch),
+    survivors are spliced in original-row order — hash/skew partitions
+    merge as byte-exactly as contiguous range partitions. A response
+    encrypted per-node (post-crypt) is decrypted with each node's local
+    keystream, spliced in the clear, and re-encrypted at merged positions
+    (same involutive CTR cipher; the client holds the pipeline's key)."""
     if not partials:
+        # nothing was dispatched (zero-row table): the empty result must
+        # still have the pipeline's kind and response width — both come
+        # from the canonical compiled plan, never re-derived here
+        plan = compile_pipeline(schema, tuple(pipeline))
+        if plan.kind == "mask":
+            return PipelineResult(
+                kind="mask", mask=jnp.zeros((n_rows or 0,), bool))
+        if plan.kind == "groups":
+            return PipelineResult(kind="groups", groups={})
         return PipelineResult(kind="rows", rows=jnp.zeros(
-            (0, schema.n_cols), jnp.float32), count=0)
+            (n_rows or 0, plan.response_width), jnp.float32), count=0)
     kind = partials[0].kind
     if kind == "rows":
-        rows = jnp.concatenate(
-            [p.rows[:int(p.count)] for p in partials], axis=0)
-        return PipelineResult(kind="rows", rows=rows,
-                              count=int(rows.shape[0]),
+        counts = [int(p.count) for p in partials]
+        cpost = op_ir.crypt_post_of(pipeline) if n_rows is not None else None
+        if cpost is not None:
+            key = jnp.asarray(cpost.key, jnp.uint32)
+            survivors = []
+            for p, c in zip(partials, counts):
+                # undo each node's local response crypt — survivors only:
+                # they are packed at the front, and the keystream is
+                # contiguous from position 0, so decrypt cost scales with
+                # the RESULT size, not the partition size
+                buf = jnp.asarray(p.rows, jnp.float32)[:c]
+                dec = kref.ctr_crypt(buf.reshape(-1).view(jnp.uint32),
+                                     key, cpost.nonce)
+                survivors.append(dec.view(jnp.float32).reshape(buf.shape))
+        else:
+            survivors = [p.rows[:c] for p, c in zip(partials, counts)]
+        rows = jnp.concatenate(survivors, axis=0)
+        ids_list = [p.sel_ids for p in partials]
+        merged_ids = None
+        if all(i is not None for i in ids_list):
+            merged_ids = np.concatenate(
+                [np.asarray(i) for i in ids_list])
+            if merged_ids.size and np.any(np.diff(merged_ids) < 0):
+                # hash/skew partitions interleave; range partitions come
+                # back already ordered and skip the gather entirely
+                order = np.argsort(merged_ids)  # ids unique: original order
+                rows = jnp.asarray(rows)[jnp.asarray(order)]
+                merged_ids = merged_ids[order]
+        count = int(rows.shape[0])
+        if n_rows is not None:      # single-node-shaped packed response
+            full = jnp.zeros((n_rows, int(rows.shape[1])), jnp.float32)
+            full = full.at[:count].set(rows)
+            if cpost is not None:   # re-encrypt at merged stream positions
+                enc = kref.ctr_crypt(full.reshape(-1).view(jnp.uint32),
+                                     jnp.asarray(cpost.key, jnp.uint32),
+                                     cpost.nonce)
+                full = enc.view(jnp.float32).reshape(full.shape)
+            rows = full
+        return PipelineResult(kind="rows", rows=rows, count=count,
+                              sel_ids=merged_ids,
                               shipped_bytes=sum(p.shipped_bytes or 0
                                                 for p in partials),
                               read_bytes=sum(p.read_bytes for p in partials))
@@ -140,7 +205,16 @@ def _merge(schema: FTable, pipeline: tuple,
                                                 for p in partials),
                               read_bytes=sum(p.read_bytes for p in partials))
     if kind == "mask":
-        mask = jnp.concatenate([p.mask for p in partials])
+        if part_rows is not None and n_rows is not None:
+            # scatter each partition's per-row decisions back to the rows'
+            # original positions (any partitioner, not just contiguous)
+            full = np.zeros((n_rows,), bool)
+            for p, idx in zip(partials, part_rows):
+                idx = np.asarray(idx)
+                full[idx] = np.asarray(p.mask)[: len(idx)]
+            mask = jnp.asarray(full)
+        else:
+            mask = jnp.concatenate([p.mask for p in partials])
         return PipelineResult(kind="mask", mask=mask,
                               shipped_bytes=sum(p.shipped_bytes or 0
                                                 for p in partials),

@@ -149,3 +149,14 @@ def has_crypt_pre(pipeline: tuple) -> bool:
     byte positions — string requests with a pre-crypt bucket on exact
     width (row padding appends whole rows and is keystream-safe)."""
     return any(isinstance(o, Crypt) and o.when == "pre" for o in pipeline)
+
+
+def crypt_post_of(pipeline: tuple) -> Crypt | None:
+    """The response-encryption descriptor, if any. The cluster merge needs
+    it: per-node responses are each encrypted with a keystream starting at
+    position 0, so a byte-identical merged response is rebuilt client-side
+    (decrypt partials, splice, re-encrypt at merged positions)."""
+    for o in pipeline:
+        if isinstance(o, Crypt) and o.when == "post":
+            return o
+    return None

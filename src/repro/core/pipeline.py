@@ -22,6 +22,14 @@ Entry points:
       regex dispatch over a (B, n, w) byte tensor with per-request
       lengths — the DFA/crypt body vmapped over the round's clients.
 
+Every entry point takes an optional `row_ids` operand (traced, one
+original-table row index per local row) for cluster partition dispatch:
+a pre-Crypt addresses its CTR keystream by those ORIGINAL offsets (a node
+holding a row subset of one encrypted table decrypts exactly), and
+rows-kind results thread the ids through the packing, returning survivors'
+ids as `PipelineResult.sel_ids` — what the client-side scatter-gather
+merge sorts on to restore single-node row order byte-identically.
+
 All entry points return a lazy `PipelineResult`: device arrays plus traced
 count/byte scalars. `PipelineResult.finalize()` is the ONLY sync point —
 it materializes Python-int counts, extracts group-overflow rows, and fires
@@ -43,6 +51,7 @@ signature at the same shape performs zero retraces (`CompiledPipeline
 """
 from __future__ import annotations
 
+import threading
 from typing import Callable
 
 import jax
@@ -72,7 +81,7 @@ class PipelineResult:
     """
 
     def __init__(self, kind: str, *, rows=None, count=None, groups=None,
-                 mask=None, shipped_bytes=0, read_bytes=0,
+                 mask=None, shipped_bytes=0, read_bytes=0, sel_ids=None,
                  _raw: dict | None = None, _meta: dict | None = None):
         self.kind = kind                # "rows" | "groups" | "mask"
         self.read_bytes = read_bytes    # static: bytes pulled from pool DRAM
@@ -81,6 +90,7 @@ class PipelineResult:
         self._groups = groups
         self._mask = mask
         self._shipped = shipped_bytes
+        self._ids = sel_ids             # survivors' original row ids, or None
         self._raw = _raw                # unfinalized executable payload
         self._meta = _meta or {}
         self._callbacks: list[Callable] = []
@@ -114,6 +124,15 @@ class PipelineResult:
         self.finalize()
         return self._shipped
 
+    @property
+    def sel_ids(self):
+        """Survivors' original row ids (np.int64, len == count) when the
+        request was dispatched with explicit `row_ids` (cluster partitions);
+        None otherwise. The client-side scatter-gather merge sorts on these
+        to restore the single-node row order byte-identically."""
+        self.finalize()
+        return self._ids
+
     def on_finalize(self, cb: Callable) -> None:
         """Run `cb(self)` once the response is materialized (accounting)."""
         if self._raw is None:
@@ -129,6 +148,9 @@ class PipelineResult:
                 self._rows = raw["rows"]
                 self._count = int(raw["count"])
                 self._shipped = int(raw["shipped"])
+                if "ids" in raw:
+                    self._ids = np.rint(np.asarray(
+                        raw["ids"][: self._count])).astype(np.int64)
             elif self.kind == "mask":
                 self._mask = raw["mask"]
                 self._shipped = int(raw["shipped"])
@@ -237,15 +259,34 @@ class CompiledPipeline:
         except ValueError:
             raise KeyError(f"no column {name!r}") from None
 
+    @property
+    def response_width(self) -> int:
+        """Column count of the packed rows-kind response buffer: narrowed
+        to the projection under smart addressing, otherwise the full table
+        width plus (for joins) the appended build columns and the zeroed
+        hit column. The single source of truth for response shape — the
+        scatter-gather merge uses it to build empty results that match
+        what `_body` would have packed."""
+        if self.smart and self.proj_cols is not None:
+            return len(self.proj_cols)
+        width = self._n_cols
+        if self.join is not None:
+            width += len(self.join.build_cols) + 1
+        return width
+
     # ------------------------------------------------------------ public API
-    def __call__(self, rows, lengths=None, build=None) -> PipelineResult:
+    def __call__(self, rows, lengths=None, build=None,
+                 row_ids=None) -> PipelineResult:
         """Compatibility path: rows already materialized (offload engine,
-        string tables). Still one fused traced program."""
+        string tables). Still one fused traced program. `row_ids` (optional,
+        (n,) i32) are the rows' indices in the original un-partitioned
+        table: they key the positional CTR keystream and ride the packing
+        as survivor ids (see _body)."""
         rows = jnp.asarray(rows)
         n = int(rows.shape[0])
         payload = self._jit_rows(
             rows, None if lengths is None else jnp.asarray(lengths),
-            self._as_build(build))
+            self._as_build(build), self._as_ids(row_ids))
         if self._columnar_read():
             read_bytes = n * len(self.proj_cols) * WORD_BYTES
         else:
@@ -254,20 +295,24 @@ class CompiledPipeline:
         return self._wrap(payload, read_bytes)
 
     def run_pages(self, buf, pages, n_valid, build=None, *,
-                  n_rows: int, row_words: int) -> PipelineResult:
+                  n_rows: int, row_words: int,
+                  row_ids=None) -> PipelineResult:
         """The fused request verb: ONE dispatch does page gather + pipeline.
 
         buf: pool buffer (n_pages, page_words); pages: (P,) page ids;
-        n_valid: traced row-validity scalar (rows >= n_valid are masked).
+        n_valid: traced row-validity scalar (rows >= n_valid are masked);
+        row_ids: optional (n_rows,) original-table row indices (partition
+        dispatch — keystream offsets + survivor-id packing).
         """
         payload = self._jit_pages(
             buf, jnp.asarray(pages, jnp.int32),
             jnp.asarray(n_valid, jnp.int32), self._as_build(build),
-            n_rows=n_rows, row_words=row_words)
+            self._as_ids(row_ids), n_rows=n_rows, row_words=row_words)
         return self._wrap(payload, self._pages_read_bytes(n_rows, row_words))
 
     def run_pages_batched(self, buf, pages, n_valid, build=None, *,
-                          n_rows: int, row_words: int) -> list[PipelineResult]:
+                          n_rows: int, row_words: int,
+                          row_ids=None) -> list[PipelineResult]:
         """Stacked multi-client dispatch: pages (B, P), n_valid (B,).
 
         One vmapped executable serves the whole scheduling round; the
@@ -285,13 +330,14 @@ class CompiledPipeline:
         nv = np.asarray(n_valid, np.int64)
         payload = self._jit_pages(
             buf, pages, jnp.asarray(n_valid, jnp.int32),
-            self._as_build(build), n_rows=n_rows, row_words=row_words)
+            self._as_build(build), self._as_ids(row_ids),
+            n_rows=n_rows, row_words=row_words)
         return [self._wrap(self._split(payload, b, int(nv[b])),
                            self._pages_read_bytes(int(nv[b]), row_words))
                 for b in range(int(pages.shape[0]))]
 
     def run_strings_batched(self, strings, lengths, n_valid, *,
-                            widths=None) -> list[PipelineResult]:
+                            widths=None, row_ids=None) -> list[PipelineResult]:
         """Stacked string/regex dispatch: strings (B, n, w) uint8 bytes,
         lengths (B, n) int32, n_valid (B,) valid-row counts.
 
@@ -306,7 +352,7 @@ class CompiledPipeline:
         nv = np.asarray(n_valid, np.int64)
         payload = self._jit_strings(
             strings, jnp.asarray(lengths, jnp.int32),
-            jnp.asarray(n_valid, jnp.int32))
+            jnp.asarray(n_valid, jnp.int32), self._as_ids(row_ids))
         w = int(strings.shape[2])
         ws = (np.full((strings.shape[0],), w, np.int64) if widths is None
               else np.asarray(widths, np.int64))
@@ -322,12 +368,16 @@ class CompiledPipeline:
         out = {}
         for k, v in payload.items():
             v = v[b]
-            if k in ("rows", "mask", "keys", "vals", "overflow_mask"):
+            if k in ("rows", "mask", "keys", "vals", "overflow_mask", "ids"):
                 v = v[:nv]
             out[k] = v
         return out
 
     # -------------------------------------------------------------- internals
+    @staticmethod
+    def _as_ids(row_ids):
+        return None if row_ids is None else jnp.asarray(row_ids, jnp.int32)
+
     @staticmethod
     def _as_build(build):
         if build is None:
@@ -364,33 +414,51 @@ class CompiledPipeline:
         return PipelineResult(self.kind, read_bytes=read_bytes,
                               _raw=payload, _meta=meta)
 
-    def _rows_entry(self, rows, lengths, build):
-        return self._body(rows, lengths, None, build, narrowed=False)
+    def _rows_entry(self, rows, lengths, build, row_ids):
+        return self._body(rows, lengths, None, build, row_ids, narrowed=False)
 
-    def _strings_entry(self, strings, lengths, n_valid):
+    def _strings_entry(self, strings, lengths, n_valid, row_ids):
         # stacked (B, n, w) byte tensor: vmap the whole DFA/crypt body
-        def one(s, l, nv):
-            return self._body(s, l, nv, None, narrowed=False)
-        return jax.vmap(one)(strings, lengths, n_valid)
+        if row_ids is None:
+            def one(s, ln, nv):
+                return self._body(s, ln, nv, None, None, narrowed=False)
+            return jax.vmap(one)(strings, lengths, n_valid)
 
-    def _pages_entry(self, buf, pages, n_valid, build, *, n_rows, row_words):
+        def one(s, ln, nv, ids):
+            return self._body(s, ln, nv, None, ids, narrowed=False)
+        return jax.vmap(one)(strings, lengths, n_valid, row_ids)
+
+    def _pages_entry(self, buf, pages, n_valid, build, row_ids, *,
+                     n_rows, row_words):
         if pages.ndim == 2:                     # stacked multi-client round
             # `build` is closed over, not vmapped: the round shares ONE
             # join build table, broadcast across the stacked probes.
-            def one(pg, nv):
-                return self._gather_run(buf, pg, nv, build, n_rows, row_words)
-            return jax.vmap(one)(pages, n_valid)
-        return self._gather_run(buf, pages, n_valid, build, n_rows, row_words)
+            if row_ids is None:
+                def one(pg, nv):
+                    return self._gather_run(buf, pg, nv, build, None,
+                                            n_rows, row_words)
+                return jax.vmap(one)(pages, n_valid)
 
-    def _gather_run(self, buf, pages, n_valid, build, n_rows, row_words):
+            def one(pg, nv, ids):
+                return self._gather_run(buf, pg, nv, build, ids,
+                                        n_rows, row_words)
+            return jax.vmap(one)(pages, n_valid, row_ids)
+        return self._gather_run(buf, pages, n_valid, build, row_ids,
+                                n_rows, row_words)
+
+    def _gather_run(self, buf, pages, n_valid, build, row_ids,
+                    n_rows, row_words):
         if self._columnar_read():
             work = fpool.gather_columns(buf, pages, n_rows, row_words,
                                         tuple(self.proj_cols))
-            return self._body(work, None, n_valid, build, narrowed=True)
+            return self._body(work, None, n_valid, build, row_ids,
+                              narrowed=True)
         rows = fpool.gather_rows(buf, pages, n_rows, row_words)
-        return self._body(rows, None, n_valid, build, narrowed=False)
+        return self._body(rows, None, n_valid, build, row_ids,
+                          narrowed=False)
 
-    def _body(self, work, lengths, n_valid, build, *, narrowed: bool):
+    def _body(self, work, lengths, n_valid, build, row_ids, *,
+              narrowed: bool):
         """The whole request pipeline as one traced program."""
         self.traces += 1                         # trace-time side effect only
         xla = self.interpret                     # lowering choice (static)
@@ -407,7 +475,18 @@ class CompiledPipeline:
                 u32 = flat.astype(jnp.uint32)
             else:
                 u32 = jnp.asarray(flat, jnp.float32).view(jnp.uint32)
-            if xla:
+            if row_ids is not None:
+                # partitioned dispatch: this node holds a row *subset* of
+                # one encrypted table, so each row's keystream position is
+                # its offset in the ORIGINAL row-major flattening, not the
+                # local one. Gathered keystream goes through the pure-jnp
+                # reference cipher (backend-agnostic; the Pallas kernel
+                # assumes a contiguous stream).
+                w = work.shape[-1]
+                idx = (row_ids.astype(jnp.uint32)[:, None] * jnp.uint32(w)
+                       + jnp.arange(w, dtype=jnp.uint32)[None, :]).reshape(-1)
+                dec = kref.ctr_crypt(u32, jnp.asarray(key), nonce, idx=idx)
+            elif xla:
                 dec = kref.ctr_crypt(u32, jnp.asarray(key), nonce)
             else:
                 dec = kops.crypt(u32, key, nonce, interpret=False)
@@ -478,6 +557,25 @@ class CompiledPipeline:
             return self._group_body(work, eff_sel_ops, eff_sel_vals, valid,
                                     xla)
 
+        # response width BEFORE any bookkeeping columns are appended
+        ncols_out = (len(self.proj_cols)
+                     if (self.proj_cols is not None and self.smart)
+                     else int(np.sum(eff_proj)))
+
+        # -- survivor-id column: partitioned dispatch threads each row's
+        # original-table index through the packing (predicate-skipped,
+        # projection-kept), so the client-side gather can splice partials
+        # back into single-node row order. Split off before the response
+        # encrypt — ids are transport metadata, not response payload. -------
+        if row_ids is not None:
+            work = jnp.concatenate(
+                [work, row_ids.astype(jnp.float32)[:, None]], axis=1)
+            eff_sel_ops = np.concatenate(
+                [eff_sel_ops, np.zeros(1, np.int32)])
+            eff_sel_vals = np.concatenate(
+                [eff_sel_vals, np.zeros(1, np.float32)])
+            eff_proj = np.concatenate([eff_proj, np.ones(1, np.float32)])
+
         # -- selection + projection + packing (fused) -------------------------
         if xla:
             packed, count = kops.select_project_xla(
@@ -502,6 +600,11 @@ class CompiledPipeline:
                     jnp.asarray(eff_sel_vals), jnp.asarray(eff_proj),
                     interpret=False)
 
+        ids_packed = None
+        if row_ids is not None:
+            ids_packed = packed[:, -1]
+            packed = packed[:, :-1]
+
         # -- post-encrypt + pack ----------------------------------------------
         if self.crypt_post is not None:
             key = np.asarray(self.crypt_post.key, np.uint32)
@@ -514,11 +617,11 @@ class CompiledPipeline:
                                  interpret=False)
             packed = enc.view(jnp.float32).reshape(packed.shape)
 
-        ncols_out = (len(self.proj_cols)
-                     if (self.proj_cols is not None and self.smart)
-                     else int(np.sum(eff_proj)))
         shipped = count.astype(jnp.int32) * np.int32(ncols_out * WORD_BYTES)
-        return {"rows": packed, "count": count, "shipped": shipped}
+        out = {"rows": packed, "count": count, "shipped": shipped}
+        if ids_packed is not None:
+            out["ids"] = ids_packed
+        return out
 
     def _group_body(self, work, eff_sel_ops, eff_sel_vals, valid, xla):
         if self.group is not None:
@@ -557,6 +660,7 @@ class CompiledPipeline:
 
 
 _CACHE: dict = {}
+_CACHE_LOCK = threading.Lock()   # cluster nodes flush from parallel threads
 
 
 def compile_pipeline(schema: FTable, pipeline: tuple,
@@ -579,7 +683,9 @@ def compile_pipeline(schema: FTable, pipeline: tuple,
     key = (tuple((c.name, c.dtype) for c in schema.columns),
            bool(schema.str_width), op_ir.signature(pipeline), interpret)
     if key not in _CACHE:
-        _CACHE[key] = CompiledPipeline(schema, pipeline, interpret)
+        with _CACHE_LOCK:       # one build per key under concurrent flushes
+            if key not in _CACHE:
+                _CACHE[key] = CompiledPipeline(schema, pipeline, interpret)
     return _CACHE[key]
 
 

@@ -26,7 +26,7 @@ from __future__ import annotations
 import functools
 import math
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -75,6 +75,17 @@ class PoolStats:
     bytes_written: int = 0
     bytes_shipped: int = 0          # over-the-network response bytes
     requests: int = 0
+
+    @classmethod
+    def aggregate(cls, stats: "list[PoolStats]") -> "PoolStats":
+        """Cluster-wide roll-up of per-node pool counters."""
+        out = cls()
+        for s in stats:
+            out.bytes_read += s.bytes_read
+            out.bytes_written += s.bytes_written
+            out.bytes_shipped += s.bytes_shipped
+            out.requests += s.requests
+        return out
 
 
 class FarPool:

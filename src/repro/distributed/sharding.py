@@ -27,7 +27,7 @@ import re
 from typing import Any
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, Shape
@@ -237,3 +237,72 @@ def constrain(x, spec: P):
 
 def named(mesh: Mesh, spec: P) -> NamedSharding:
     return NamedSharding(mesh, spec)
+
+
+# --------------------------------------------------------------------------- #
+# Farview pool partitioning (multi-node FarCluster, paper's scale-out)
+# --------------------------------------------------------------------------- #
+_HASH_MULT = np.uint64(0x9E3779B1)      # Fibonacci hashing (same family as
+#                                         the pool's group-bucket hash)
+
+
+def partition_rows(n_rows: int, n_parts: int, kind: str = "range", *,
+                   keys: "np.ndarray | None" = None) -> "list[np.ndarray]":
+    """Client-side partition map: original row index -> owning pool node.
+
+    Returns one sorted int64 index array per part (some possibly empty).
+    Decided once at `alloc_table_mem` time — pure metadata, no node-to-node
+    traffic; the cluster's scatter-gather merge uses the same map to splice
+    per-node partials back into single-node row order.
+
+      range   contiguous blocks (balanced +-1 row). Order-preserving
+              concat; the default.
+      hash    Fibonacci hash of the partition key (co-locates equal keys:
+              joins and group-bys see all rows of a key on one node).
+              Hashes the row index when no keys are given.
+      skew    skew-aware: group rows by key, place key-groups largest-first
+              onto the currently least-loaded node (greedy LPT). A heavy
+              hitter key costs ONE node its group size instead of
+              hash-landing several heavy keys together.
+    """
+    if n_parts <= 0:
+        raise ValueError("n_parts must be positive")
+    if kind == "range" and keys is not None:
+        # silently dropping the keys would scatter equal-key rows across
+        # nodes while the caller believes they co-locate (join/group-by)
+        raise ValueError(
+            "partition keys were given but the 'range' partitioner "
+            "ignores them — use 'hash' or 'skew' for key co-location")
+    idx = np.arange(n_rows, dtype=np.int64)
+    if n_parts == 1:
+        return [idx]
+    if kind == "range":
+        return list(np.array_split(idx, n_parts))
+    if keys is None:
+        if kind == "skew":      # nothing to balance without keys
+            return list(np.array_split(idx, n_parts))
+        keys = idx
+    keys = np.asarray(keys)
+    if keys.shape[0] != n_rows:
+        raise ValueError(
+            f"partition keys cover {keys.shape[0]} rows, table has {n_rows}")
+    h = (keys.astype(np.int64).view(np.uint64)
+         if keys.dtype == np.int64 else
+         keys.astype(np.int64).astype(np.uint64))
+    h = (h * _HASH_MULT) >> np.uint64(13)
+    if kind == "hash":
+        owner = (h % np.uint64(n_parts)).astype(np.int64)
+        return [idx[owner == p] for p in range(n_parts)]
+    if kind == "skew":
+        uniq, inv, counts = np.unique(h, return_inverse=True,
+                                       return_counts=True)
+        owner_of_key = np.zeros(len(uniq), np.int64)
+        load = np.zeros(n_parts, np.int64)
+        for g in np.argsort(-counts, kind="stable"):   # largest group first
+            tgt = int(np.argmin(load))
+            owner_of_key[g] = tgt
+            load[tgt] += counts[g]
+        owner = owner_of_key[inv]
+        return [idx[owner == p] for p in range(n_parts)]
+    raise ValueError(f"unknown partitioner {kind!r} "
+                     "(expected range | hash | skew)")

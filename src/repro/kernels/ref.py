@@ -170,10 +170,20 @@ def threefry2x32(key: jnp.ndarray, c0: jnp.ndarray, c1: jnp.ndarray):
     return x0, x1
 
 
-def ctr_crypt(data: jnp.ndarray, key: jnp.ndarray, nonce: int) -> jnp.ndarray:
-    """XOR data (N,) uint32 with the Threefry CTR keystream. Involutive."""
+def ctr_crypt(data: jnp.ndarray, key: jnp.ndarray, nonce: int,
+              idx: jnp.ndarray | None = None) -> jnp.ndarray:
+    """XOR data (N,) uint32 with the Threefry CTR keystream. Involutive.
+
+    The keystream is positional: word i is XORed with stream position
+    `idx[i]` (default arange(N) — a contiguous buffer starting at stream
+    position 0). Passing explicit positions lets a partition of a larger
+    buffer decrypt with the offsets it had inside the original flattening
+    (the multi-node scatter path: each node holds a row subset of one
+    encrypted table).
+    """
     n = data.shape[0]
-    idx = jnp.arange(n, dtype=jnp.uint32)
+    idx = (jnp.arange(n, dtype=jnp.uint32) if idx is None
+           else idx.astype(jnp.uint32))
     blk = idx >> 1  # each threefry call yields 2 words
     lane = idx & 1
     s0, s1 = threefry2x32(key, blk, jnp.full_like(blk, np.uint32(nonce)))

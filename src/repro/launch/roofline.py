@@ -25,7 +25,6 @@ import os
 
 from repro.configs import ARCHS, SHAPES
 from repro.launch.dryrun import RESULT_DIR
-from repro.launch.mesh import HW
 
 
 def load_cells(result_dir: str, mesh: str, tag: str = "") -> dict:

@@ -24,10 +24,16 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=32)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--pool-nodes", type=int, default=16,
+                    help="modeled Farview node count the KV pool is "
+                         "sharded over (the tp term of the Fig. 8 "
+                         "economics; mirrors FarCluster scale-out)")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--full", dest="smoke", action="store_false")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.pool_nodes < 1:
+        ap.error("--pool-nodes must be >= 1")
 
     from repro.configs import get_config
     from repro.configs.base import smoke_config
@@ -84,11 +90,13 @@ def main() -> None:
     total_tokens = B * (args.prompt_len + args.gen_len)
     print(f"served {total_tokens} tokens in {dt:.2f}s "
           f"({total_tokens / dt:.1f} tok/s, mode={args.kv_mode})")
+    nodes = args.pool_nodes
     ship = shipped_bytes_per_layer(
         args.kv_mode, batch=B, hq=cfg.n_heads, hkv=cfg.n_kv_heads,
         head_dim=cfg.resolved_head_dim, seq_len=args.max_seq,
-        tp=16)
-    print(f"modeled network bytes/layer/step @tp=16: {ship}")
+        tp=nodes)
+    print(f"modeled network bytes/layer/step @{nodes} pool nodes: {ship} "
+          f"({max(1, ship // nodes)}/node)")
 
 
 if __name__ == "__main__":

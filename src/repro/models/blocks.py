@@ -17,13 +17,11 @@ group_dec (single-token decode vs caches) / group_cache (cache zeros).
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.jax_compat import shard_map

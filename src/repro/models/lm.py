@@ -15,7 +15,6 @@ around the group body keeps train memory bounded at 32k context.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -7,7 +7,6 @@ moment shardings mirror param shardings so the state scales with the mesh.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 
 import jax

@@ -14,13 +14,10 @@ and scans, accumulating f32 gradients (keeps the activation working set
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, TrainConfig
+from repro.configs.base import TrainConfig
 from repro.distributed import compress as C
 from repro.models.lm import LM
 from repro.optim import adamw

@@ -10,7 +10,6 @@ from repro.configs import ARCHS, get_config
 from repro.configs.base import TrainConfig, smoke_config
 from repro.models import frontends as F
 from repro.models.lm import LM
-from repro.optim import adamw
 from repro.runtime import steps as R
 
 B, S = 2, 64

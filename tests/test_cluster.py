@@ -1,0 +1,656 @@
+"""FarCluster scatter-gather (PR 3 tentpole).
+
+The contract under test: a pool sharded across N FViewNodes answers every
+Farview verb BYTE-IDENTICALLY to one node holding the whole table —
+
+(a) selection / projection / smart addressing: survivors splice back in
+    original row order for every partitioner (range, hash, skew);
+(b) group-aggregate and distinct: partial aggregates merge exactly
+    (integer-valued data so float sums are order-insensitive);
+(c) regex: per-partition masks scatter to original row positions;
+(d) crypt: pre-decrypt works on arbitrary row subsets (keystream addressed
+    by original offsets) and post-encrypted responses are spliced and
+    re-encrypted at merged positions;
+(e) join: replicated (broadcast) build + partitioned probe;
+(f) per-node scheduling still coalesces: K cluster clients sharing a
+    pipeline cost each node one stacked dispatch per round;
+(g) read/shipped accounting aggregates exactly (no double counting);
+plus merge_group_partials edge cases (empty partition, single group,
+all-rows-filtered) and close_connection request-cancellation coverage.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import operators as op
+from repro.core.client import (FarviewError, FViewNode, alloc_table_mem,
+                               close_connection, farview_request,
+                               merge_group_partials, open_connection,
+                               submit_request, table_write)
+from repro.core.cluster import FarCluster
+from repro.core.pipeline import PipelineResult
+from repro.core.table import FTable, Column, string_table
+from repro.distributed.sharding import partition_rows
+from repro.kernels import ref as kref
+
+N = 700
+COLS = tuple(Column(f"c{i}", "i32" if i == 0 else "f32") for i in range(8))
+KEY, NONCE = (11, 22), 7
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(0)
+    d = {"c0": rng.integers(0, 13, N).astype(np.int32)}
+    for i in range(1, 8):
+        # integer-valued floats: group sums are exact under ANY merge order,
+        # so "byte-identical" is meaningful for aggregates too
+        d[f"c{i}"] = rng.integers(-50, 50, N).astype(np.float32)
+    return d
+
+
+def schema(name="t"):
+    return FTable(name, COLS, n_rows=N)
+
+
+def encrypt_words(words, key=KEY, nonce=NONCE):
+    flat = jnp.asarray(np.asarray(words, np.float32).reshape(-1))
+    enc = kref.ctr_crypt(flat.view(jnp.uint32), jnp.asarray(key, jnp.uint32),
+                         nonce)
+    return np.asarray(enc).view(np.float32).reshape(np.shape(words))
+
+
+def solo_run(pipe, words, build=None):
+    node = FViewNode(64 * 2**20)
+    qp = open_connection(node)
+    if build is not None:
+        bft, bwords = build
+        b = FTable(bft.name, bft.columns, n_rows=bft.n_rows)
+        alloc_table_mem(qp, b)
+        table_write(qp, b, bwords)
+    ft = schema()
+    alloc_table_mem(qp, ft)
+    table_write(qp, ft, words)
+    return farview_request(qp, ft, pipe).finalize()
+
+
+def cluster_run(pipe, words, k, partitioner, build=None, keys=None):
+    cl = FarCluster(k, partitioner=partitioner)
+    cqp = cl.open_connection()
+    if build is not None:
+        bft, bwords = build
+        b = FTable(bft.name, bft.columns, n_rows=bft.n_rows)
+        cb = cl.alloc_table_mem(cqp, b, replicate=True)
+        cl.table_write(cqp, cb, bwords)
+    ct = cl.alloc_table_mem(cqp, schema(), keys=keys)
+    cl.table_write(cqp, ct, words)
+    res = cl.farview_request(cqp, ct, pipe).finalize()
+    return res, cl, cqp, ct
+
+
+def assert_rows_identical(res, ref):
+    assert res.count == ref.count
+    np.testing.assert_array_equal(np.asarray(res.rows), np.asarray(ref.rows))
+    assert res.shipped_bytes == ref.shipped_bytes
+    assert res.read_bytes == ref.read_bytes
+
+
+PARTITIONERS = ("range", "hash", "skew")
+NODE_COUNTS = (1, 2, 3)
+
+
+class TestByteIdentity:
+    """Cluster vs solo for every operator kind x partitioner x node count."""
+
+    @pytest.mark.parametrize("partitioner", PARTITIONERS)
+    @pytest.mark.parametrize("k", NODE_COUNTS)
+    def test_selection(self, data, partitioner, k):
+        pipe = (op.Select((op.Predicate("c1", "<", 0.0),
+                           op.Predicate("c2", ">", -20.0))),)
+        words = schema().encode(data)
+        ref = solo_run(pipe, words)
+        keys = data["c0"] if partitioner != "range" else None
+        res, *_ = cluster_run(pipe, words, k, partitioner, keys=keys)
+        assert_rows_identical(res, ref)
+
+    @pytest.mark.parametrize("partitioner", PARTITIONERS)
+    def test_projection(self, data, partitioner):
+        pipe = (op.Project(("c1", "c3")),
+                op.Select((op.Predicate("c1", ">", 0.0),)))
+        words = schema().encode(data)
+        ref = solo_run(pipe, words)
+        res, *_ = cluster_run(pipe, words, 3, partitioner,
+                              keys=data["c0"] if partitioner != "range"
+                              else None)
+        assert_rows_identical(res, ref)
+
+    @pytest.mark.parametrize("k", NODE_COUNTS)
+    def test_smart_addressing(self, data, k):
+        """Column-granular reads per partition; read bytes stay exact."""
+        pipe = (op.SmartAddress(("c2", "c5")),
+                op.Select((op.Predicate("c2", "<", 10.0),)))
+        words = schema().encode(data)
+        ref = solo_run(pipe, words)
+        res, *_ = cluster_run(pipe, words, k, "range")
+        assert_rows_identical(res, ref)
+
+    @pytest.mark.parametrize("partitioner", PARTITIONERS)
+    @pytest.mark.parametrize("k", NODE_COUNTS)
+    def test_group_aggregate(self, data, partitioner, k):
+        pipe = (op.GroupBy("c0", ("c1", "c2"), n_buckets=128),)
+        words = schema().encode(data)
+        ref = merge_group_partials(schema(), pipe,
+                                   [solo_run(pipe, words)]).groups
+        keys = data["c0"] if partitioner != "range" else None
+        res, *_ = cluster_run(pipe, words, k, partitioner, keys=keys)
+        got = res.groups
+        assert set(got) == set(ref)
+        for key in ref:
+            rc, rs, rmn, rmx = ref[key]
+            cc, cs, cmn, cmx = got[key]
+            assert rc == cc
+            np.testing.assert_array_equal(np.asarray(rs), np.asarray(cs))
+            np.testing.assert_array_equal(np.asarray(rmn), np.asarray(cmn))
+            np.testing.assert_array_equal(np.asarray(rmx), np.asarray(cmx))
+
+    def test_group_aggregate_oracle(self, data):
+        """Cluster group-by agrees with the numpy exact-group oracle."""
+        pipe = (op.GroupBy("c0", ("c1",), n_buckets=128),)
+        words = schema().encode(data)
+        res, *_ = cluster_run(pipe, words, 3, "hash", keys=data["c0"])
+        for key in np.unique(data["c0"]):
+            m = data["c0"] == key
+            cnt, s, mn, mx = res.groups[int(key)]
+            assert cnt == int(m.sum())
+            np.testing.assert_array_equal(np.asarray(s).reshape(()),
+                                          data["c1"][m].sum())
+
+    @pytest.mark.parametrize("partitioner", ("range", "hash"))
+    def test_distinct(self, data, partitioner):
+        pipe = (op.Distinct(("c0",), n_buckets=128),)
+        words = schema().encode(data)
+        ref = merge_group_partials(schema(), pipe,
+                                   [solo_run(pipe, words)]).groups
+        res, *_ = cluster_run(pipe, words, 3, partitioner,
+                              keys=data["c0"] if partitioner == "hash"
+                              else None)
+        assert set(res.groups) == set(ref) == set(np.unique(data["c0"]))
+
+    @pytest.mark.parametrize("partitioner", PARTITIONERS)
+    def test_crypt_pre_words(self, data, partitioner):
+        """Encrypted-at-rest table: every partition decrypts with the
+        keystream slice of its ORIGINAL row offsets."""
+        pipe = (op.Crypt(key=KEY, nonce=NONCE, when="pre"),
+                op.Select((op.Predicate("c1", "<", 0.0),)))
+        enc = encrypt_words(schema().encode(data))
+        ref = solo_run(pipe, enc)
+        assert ref.count > 0
+        keys = data["c0"] if partitioner != "range" else None
+        res, *_ = cluster_run(pipe, enc, 3, partitioner, keys=keys)
+        assert_rows_identical(res, ref)
+
+    @pytest.mark.parametrize("k", (2, 3))
+    def test_crypt_post_response(self, data, k):
+        """Per-node encrypted responses splice + re-encrypt to the exact
+        single-node ciphertext (zero tail included: it carries keystream)."""
+        pipe = (op.Select((op.Predicate("c2", ">", 0.0),)),
+                op.Crypt(key=(3, 9), nonce=4, when="post"))
+        words = schema().encode(data)
+        ref = solo_run(pipe, words)
+        res, *_ = cluster_run(pipe, words, k, "hash", keys=data["c0"])
+        assert_rows_identical(res, ref)
+
+    @pytest.mark.parametrize("partitioner", ("range", "hash"))
+    @pytest.mark.parametrize("k", NODE_COUNTS)
+    def test_join_partitioned_probe(self, data, partitioner, k):
+        rng = np.random.default_rng(3)
+        bft = FTable("cust", (Column("k", "i32"), Column("v")), n_rows=40)
+        bwords = bft.encode({"k": rng.permutation(64)[:40].astype(np.int32),
+                             "v": rng.integers(0, 99, 40).astype(np.float32)})
+        pipe = (op.JoinSmall(probe_key="c0", build_table="cust",
+                             build_key="k", build_cols=("v",)),)
+        jdata = dict(data)
+        jdata["c0"] = rng.integers(0, 64, N).astype(np.int32)
+        words = schema().encode(jdata)
+        ref = solo_run(pipe, words, build=(bft, bwords))
+        keys = jdata["c0"] if partitioner != "range" else None
+        res, *_ = cluster_run(pipe, words, k, partitioner,
+                              build=(bft, bwords), keys=keys)
+        assert_rows_identical(res, ref)
+
+
+class TestByteIdentityStrings:
+    STRS = [b"error: disk full", b"all fine", b"ERROR", b"warn: error",
+            b"errr", b"the error is late"]
+
+    def _strings(self, n=300, width=24, seed=5):
+        rng = np.random.default_rng(seed)
+        strs = [self.STRS[j] for j in rng.integers(0, len(self.STRS), n)]
+        return string_table("s", strs, width)
+
+    def _solo(self, pipe, ft, mat, lens):
+        node = FViewNode(64 * 2**20)
+        qp = open_connection(node)
+        part = FTable(ft.name, ft.columns, n_rows=ft.n_rows,
+                      str_width=ft.str_width)
+        alloc_table_mem(qp, part)
+        return farview_request(qp, part, pipe,
+                               strings=mat, lengths=lens).finalize()
+
+    def _cluster(self, pipe, ft, mat, lens, k, partitioner):
+        cl = FarCluster(k, partitioner=partitioner)
+        cqp = cl.open_connection()
+        ct = cl.alloc_table_mem(
+            cqp, FTable(ft.name, ft.columns, n_rows=ft.n_rows,
+                        str_width=ft.str_width))
+        return cl.farview_request(cqp, ct, pipe,
+                                  strings=mat, lengths=lens).finalize()
+
+    @pytest.mark.parametrize("partitioner", PARTITIONERS)
+    @pytest.mark.parametrize("k", NODE_COUNTS)
+    def test_regex_mask_scatter(self, partitioner, k):
+        pipe = (op.RegexMatch("error"),)
+        ft, mat, lens = self._strings()
+        ref = self._solo(pipe, ft, mat, lens)
+        res = self._cluster(pipe, ft, mat, lens, k, partitioner)
+        np.testing.assert_array_equal(np.asarray(res.mask),
+                                      np.asarray(ref.mask))
+        assert res.shipped_bytes == ref.shipped_bytes
+        assert res.read_bytes == ref.read_bytes
+
+    def test_crypt_pre_regex(self):
+        """Encrypted string rows: partition keystream is byte-addressed by
+        original row offsets (row id x width + column)."""
+        key, nonce = (5, 7), 9
+        pipe = (op.Crypt(key=key, nonce=nonce, when="pre"),
+                op.RegexMatch("error"))
+        ft, mat, lens = self._strings()
+        enc = np.asarray(kref.ctr_crypt(
+            jnp.asarray(mat.reshape(-1).astype(np.uint32)),
+            jnp.asarray(key, jnp.uint32), nonce)
+        ).astype(np.uint8).reshape(mat.shape)
+        ref = self._solo(pipe, ft, enc, lens)
+        assert int(np.asarray(ref.mask).sum()) > 0    # decrypt really works
+        for k in (2, 3):
+            res = self._cluster(pipe, ft, enc, lens, k, "range")
+            np.testing.assert_array_equal(np.asarray(res.mask),
+                                          np.asarray(ref.mask))
+
+
+class TestSchedulerComposition:
+    """Partition requests keep riding each node's bucket-batched stacks."""
+
+    def test_multi_client_one_dispatch_per_node(self, data):
+        pipe = (op.Select((op.Predicate("c1", "<", 0.0),)),)
+        words = schema().encode(data)
+        cl = FarCluster(2)
+        clients = []
+        for c in range(3):
+            cqp = cl.open_connection()
+            ct = cl.alloc_table_mem(cqp, schema(f"t{c}"))
+            cl.table_write(cqp, ct, words)
+            clients.append((cqp, ct))
+        ref = solo_run(pipe, words)
+        pends = [cl.submit_request(cqp, ct, pipe) for cqp, ct in clients]
+        before = [node.dispatches for node in cl.nodes]
+        cl.flush()
+        # 3 clients x 2 nodes: ONE stacked executable per node, not 3
+        assert [node.dispatches for node in cl.nodes] == [b + 1
+                                                          for b in before]
+        for pend in pends:
+            assert_rows_identical(pend.wait().finalize(), ref)
+
+    def test_per_node_accounting_aggregates(self, data):
+        pipe = (op.Select((op.Predicate("c1", "<", 0.0),)),)
+        words = schema().encode(data)
+        ref = solo_run(pipe, words)
+        res, cl, cqp, ct = cluster_run(pipe, words, 3, "range")
+        # aggregate counters equal solo; per-node shares partition them
+        assert cqp.bytes_read_pool == ref.read_bytes
+        assert cqp.bytes_shipped == ref.shipped_bytes
+        per_node_read = [qp.bytes_read_pool for qp in cqp.qps]
+        assert sum(per_node_read) == ref.read_bytes
+        assert all(r > 0 for r in per_node_read)      # every node did work
+        assert cl.stats.bytes_read == ref.read_bytes
+        assert cl.stats.bytes_shipped == ref.shipped_bytes
+        assert cqp.requests == 1                      # one cluster verb
+
+    def test_sequential_flush_matches_parallel(self, data):
+        pipe = (op.Select((op.Predicate("c3", ">", 0.0),)),)
+        words = schema().encode(data)
+        ref = solo_run(pipe, words)
+        for parallel in (False, True):
+            cl = FarCluster(3, parallel=parallel)
+            cqp = cl.open_connection()
+            ct = cl.alloc_table_mem(cqp, schema())
+            cl.table_write(cqp, ct, words)
+            res = cl.farview_request(cqp, ct, pipe).finalize()
+            assert_rows_identical(res, ref)
+
+    def test_replicated_table_serves_solo_shaped(self, data):
+        """A verb against a replicated table is served whole from node 0
+        and returns the solo response directly (no merge rebuild)."""
+        pipe = (op.Select((op.Predicate("c1", "<", 0.0),)),
+                op.Crypt(key=(3, 9), nonce=4, when="post"))
+        words = schema().encode(data)
+        ref = solo_run(pipe, words)
+        cl = FarCluster(3)
+        cqp = cl.open_connection()
+        ct = cl.alloc_table_mem(cqp, schema(), replicate=True)
+        cl.table_write(cqp, ct, words)
+        res = cl.farview_request(cqp, ct, pipe).finalize()
+        assert_rows_identical(res, ref)
+        assert cl.nodes[0].dispatches == 1      # node 0 serves...
+        assert cl.nodes[1].dispatches == 0      # ...the others idle
+
+    def test_table_read_roundtrip(self, data):
+        words = schema().encode(data)
+        for partitioner in PARTITIONERS:
+            cl = FarCluster(3, partitioner=partitioner)
+            cqp = cl.open_connection()
+            ct = cl.alloc_table_mem(cqp, schema(),
+                                    keys=data["c0"]
+                                    if partitioner != "range" else None)
+            cl.table_write(cqp, ct, words)
+            got = np.asarray(cl.table_read(cqp, ct))
+            np.testing.assert_array_equal(got, words.astype(np.float32))
+
+
+class TestMergeEdgeCases:
+    """merge_group_partials on degenerate partials."""
+
+    def _group_partial(self, words, pipe, row_ids=None):
+        node = FViewNode(64 * 2**20)
+        qp = open_connection(node)
+        ft = FTable("t", COLS, n_rows=words.shape[0])
+        alloc_table_mem(qp, ft)
+        table_write(qp, ft, words)
+        return farview_request(qp, ft, pipe, row_ids=row_ids).finalize()
+
+    def test_empty_partials_list(self):
+        res = merge_group_partials(schema(), (), [])
+        assert res.kind == "rows" and res.count == 0
+
+    def test_empty_partials_list_padded(self):
+        res = merge_group_partials(schema(), (), [], n_rows=16)
+        assert np.asarray(res.rows).shape == (16, len(COLS))
+        assert not np.asarray(res.rows).any()
+
+    def test_empty_partials_keep_pipeline_kind(self):
+        """A zero-row table's merged result has the pipeline's kind and
+        response width, not a hardcoded rows/schema shape."""
+        res = merge_group_partials(schema(), (op.RegexMatch("x"),), [],
+                                   n_rows=0)
+        assert res.kind == "mask" and np.asarray(res.mask).shape == (0,)
+        res = merge_group_partials(schema(),
+                                   (op.GroupBy("c0", ("c1",)),), [])
+        assert res.kind == "groups" and res.groups == {}
+        res = merge_group_partials(schema(),
+                                   (op.SmartAddress(("c1",)),), [])
+        assert np.asarray(res.rows).shape == (0, 1)       # narrowed
+        jpipe = (op.JoinSmall(probe_key="c0", build_table="b",
+                              build_key="k", build_cols=("v", "w")),)
+        res = merge_group_partials(schema(), jpipe, [])
+        assert np.asarray(res.rows).shape == (0, len(COLS) + 3)
+
+    def test_zero_row_cluster_table(self):
+        """End-to-end: an empty table scatters to nobody and still merges
+        to the right kind."""
+        cl = FarCluster(2)
+        cqp = cl.open_connection()
+        ct = cl.alloc_table_mem(cqp, FTable("empty", COLS, n_rows=0))
+        assert all(p is None for p in ct.parts)
+        res = cl.farview_request(
+            cqp, ct, (op.GroupBy("c0", ("c1",)),)).finalize()
+        assert res.kind == "groups" and res.groups == {}
+
+    def test_empty_partition_skipped(self, data):
+        """A cluster bigger than the table: some nodes own zero rows and
+        are never dispatched to; the merge still matches solo."""
+        pipe = (op.Select((op.Predicate("c1", "<", 0.0),)),)
+        rng = np.random.default_rng(7)
+        small = {"c0": np.arange(3, dtype=np.int32)}
+        for i in range(1, 8):
+            small[f"c{i}"] = rng.integers(-5, 5, 3).astype(np.float32)
+        ft = FTable("tiny", COLS, n_rows=3)
+        words = ft.encode(small)
+        node = FViewNode(64 * 2**20)
+        qp = open_connection(node)
+        solo_ft = FTable("tiny", COLS, n_rows=3)
+        alloc_table_mem(qp, solo_ft)
+        table_write(qp, solo_ft, words)
+        ref = farview_request(qp, solo_ft, pipe).finalize()
+        cl = FarCluster(5)      # 5 nodes, 3 rows: >= 2 empty partitions
+        cqp = cl.open_connection()
+        ct = cl.alloc_table_mem(cqp, FTable("tiny", COLS, n_rows=3))
+        assert sum(1 for p in ct.parts if p is None) >= 2
+        cl.table_write(cqp, ct, words)
+        res = cl.farview_request(cqp, ct, pipe).finalize()
+        assert_rows_identical(res, ref)
+
+    def test_single_group(self):
+        """Every row in one group: one claimed bucket, rest sentinel."""
+        rng = np.random.default_rng(8)
+        d = {"c0": np.full(64, 5, np.int32)}
+        for i in range(1, 8):
+            d[f"c{i}"] = rng.integers(0, 9, 64).astype(np.float32)
+        ft = FTable("t", COLS, n_rows=64)
+        words = ft.encode(d)
+        pipe = (op.GroupBy("c0", ("c1",), n_buckets=64),)
+        merged = merge_group_partials(
+            ft, pipe, [self._group_partial(words, pipe)]).groups
+        assert list(merged) == [5]
+        cnt, s, mn, mx = merged[5]
+        assert cnt == 64
+        np.testing.assert_array_equal(np.asarray(s).reshape(()),
+                                      d["c1"].sum())
+
+    def test_all_rows_filtered(self):
+        """Selection drops everything: group partials carry only dropped
+        keys; the merge is empty (drop_key never leaks)."""
+        rng = np.random.default_rng(9)
+        d = {"c0": rng.integers(0, 5, 64).astype(np.int32)}
+        for i in range(1, 8):
+            d[f"c{i}"] = rng.integers(0, 9, 64).astype(np.float32)
+        ft = FTable("t", COLS, n_rows=64)
+        words = ft.encode(d)
+        pipe = (op.Select((op.Predicate("c1", ">", 1e9),)),
+                op.GroupBy("c0", ("c1",), n_buckets=64))
+        merged = merge_group_partials(
+            ft, pipe, [self._group_partial(words, pipe)]).groups
+        assert merged == {}
+        # rows kind, all filtered, via the cluster merge path
+        spipe = (op.Select((op.Predicate("c1", ">", 1e9),)),)
+        parts = [self._group_partial(words, spipe,
+                                     row_ids=np.arange(64, dtype=np.int32))]
+        res = merge_group_partials(ft, spipe, parts, n_rows=64,
+                                   part_rows=[np.arange(64)])
+        assert res.count == 0
+        assert not np.asarray(res.rows).any()
+
+    def test_rows_merge_reorders_by_sel_ids(self):
+        """Out-of-order partials (hash partitions) splice back exactly."""
+        rows_a = jnp.asarray(np.asarray([[3.0, 3.0], [9.0, 9.0]]))
+        rows_b = jnp.asarray(np.asarray([[1.0, 1.0], [7.0, 7.0]]))
+        pa = PipelineResult("rows", rows=rows_a, count=2,
+                            sel_ids=np.asarray([3, 9]), shipped_bytes=16,
+                            read_bytes=32)
+        pb = PipelineResult("rows", rows=rows_b, count=2,
+                            sel_ids=np.asarray([1, 7]), shipped_bytes=16,
+                            read_bytes=32)
+        ft = FTable("t", (Column("a"), Column("b")), n_rows=12)
+        res = merge_group_partials(ft, (), [pa, pb], n_rows=12)
+        out = np.asarray(res.rows)
+        np.testing.assert_array_equal(out[:4, 0], [1.0, 3.0, 7.0, 9.0])
+        assert res.count == 4 and not out[4:].any()
+        assert res.shipped_bytes == 32 and res.read_bytes == 64
+
+
+class TestCloseConnection:
+    def test_cluster_close_cancels_partition_requests(self, data):
+        """Closing a ClusterQP cancels its queued partials on EVERY node;
+        other tenants' requests still dispatch."""
+        pipe = (op.Select((op.Predicate("c1", "<", 0.0),)),)
+        words = schema().encode(data)
+        ref = solo_run(pipe, words)
+        cl = FarCluster(2)
+        doomed_qp = cl.open_connection()
+        alive_qp = cl.open_connection()
+        doomed_ct = cl.alloc_table_mem(doomed_qp, schema("d"))
+        alive_ct = cl.alloc_table_mem(alive_qp, schema("a"))
+        cl.table_write(doomed_qp, doomed_ct, words)
+        cl.table_write(alive_qp, alive_ct, words)
+        doomed = cl.submit_request(doomed_qp, doomed_ct, pipe)
+        alive = cl.submit_request(alive_qp, alive_ct, pipe)
+        cl.close_connection(doomed_qp)
+        with pytest.raises(FarviewError, match="closed"):
+            doomed.wait()
+        assert_rows_identical(alive.wait().finalize(), ref)
+        # further verbs on the closed connection are refused outright
+        with pytest.raises(FarviewError, match="closed"):
+            cl.submit_request(doomed_qp, doomed_ct, pipe)
+
+    def test_close_cancels_only_own_requests(self):
+        """Node-level: two queued requests from one QPair both cancel; a
+        third tenant's queued request survives and the freed region's new
+        tenant sees no ghost traffic."""
+        rng = np.random.default_rng(11)
+        node = FViewNode(64 * 2**20, n_regions=3)
+        qp1 = open_connection(node)
+        qp2 = open_connection(node)
+        d = {f"c{i}": rng.normal(size=128).astype(np.float32)
+             for i in range(8)}
+        d["c0"] = rng.integers(0, 9, 128).astype(np.int32)
+        fts = []
+        for name, qp in (("x", qp1), ("y", qp1), ("z", qp2)):
+            ft = FTable(name, COLS, n_rows=128)
+            alloc_table_mem(qp, ft)
+            table_write(qp, ft, ft.encode(d))
+            fts.append(ft)
+        pipe = (op.Select((op.Predicate("c1", "<", 0.0),)),)
+        doomed1 = submit_request(qp1, fts[0], pipe)
+        doomed2 = submit_request(qp1, fts[1], pipe)
+        alive = submit_request(qp2, fts[2], pipe)
+        close_connection(qp1)
+        for pend in (doomed1, doomed2):
+            with pytest.raises(FarviewError, match="closed"):
+                pend.wait()
+        assert alive.wait().count == int((d["c1"] < 0.0).sum())
+        qp3 = open_connection(node)
+        assert qp3.region == qp1.region
+        assert qp3.requests == 0
+
+    def test_settle_after_close_is_clean(self):
+        """settle() after a close with queued requests neither raises nor
+        dispatches the cancelled work."""
+        rng = np.random.default_rng(12)
+        node = FViewNode(64 * 2**20, n_regions=1)
+        qp = open_connection(node)
+        ft = FTable("t", COLS, n_rows=64)
+        alloc_table_mem(qp, ft)
+        d = {f"c{i}": rng.normal(size=64).astype(np.float32)
+             for i in range(8)}
+        d["c0"] = np.zeros(64, np.int32)
+        table_write(qp, ft, ft.encode(d))
+        pend = submit_request(qp, ft, (op.Select(
+            (op.Predicate("c1", "<", 0.0),)),))
+        before = node.dispatches
+        close_connection(qp)
+        node.settle()
+        assert node.dispatches == before
+        with pytest.raises(FarviewError, match="closed"):
+            pend.wait()
+
+
+class TestPartitioners:
+    def test_partition_rows_cover_exactly(self):
+        rng = np.random.default_rng(13)
+        keys = rng.integers(0, 7, 101)
+        for kind in PARTITIONERS:
+            parts = partition_rows(101, 4, kind,
+                                   keys=keys if kind != "range" else None)
+            assert len(parts) == 4
+            got = np.sort(np.concatenate(parts))
+            np.testing.assert_array_equal(got, np.arange(101))
+
+    def test_hash_colocates_equal_keys(self):
+        rng = np.random.default_rng(14)
+        keys = rng.integers(0, 9, 200)
+        parts = partition_rows(200, 3, "hash", keys=keys)
+        owner = np.empty(200, np.int64)
+        for i, p in enumerate(parts):
+            owner[p] = i
+        for key in np.unique(keys):
+            assert len(np.unique(owner[keys == key])) == 1
+
+    def test_skew_balances_heavy_hitter(self):
+        """90% of rows share one key: skew-aware placement bounds the
+        hottest node at the heavy group, never heavy + more."""
+        keys = np.asarray([0] * 90 + list(range(1, 11)))
+        parts = partition_rows(100, 3, "skew", keys=keys)
+        sizes = sorted(len(p) for p in parts)
+        assert max(sizes) == 90          # heavy key alone on one node
+        assert sizes[0] + sizes[1] == 10  # the rest spread over the others
+        owner = np.empty(100, np.int64)
+        for i, p in enumerate(parts):
+            owner[p] = i
+        for key in np.unique(keys):      # still co-located per key
+            assert len(np.unique(owner[keys == key])) == 1
+
+    def test_unknown_partitioner_raises(self):
+        with pytest.raises(ValueError, match="unknown partitioner"):
+            partition_rows(10, 2, "rendezvous")
+
+    def test_range_with_keys_raises(self):
+        """Silently dropping the co-location keys would be a footgun."""
+        with pytest.raises(ValueError, match="ignores them"):
+            partition_rows(10, 2, "range", keys=np.arange(10))
+
+    def test_response_width_matches_actual_packing(self, data):
+        """The compiled plan's response_width (used to shape empty merged
+        results) must track what _body actually packs."""
+        from repro.core.pipeline import compile_pipeline
+        rng = np.random.default_rng(21)
+        bft = FTable("bw", (Column("k", "i32"), Column("v"), Column("w")),
+                     n_rows=8)
+        bwords = bft.encode({"k": np.arange(8, dtype=np.int32),
+                             "v": rng.random(8).astype(np.float32),
+                             "w": rng.random(8).astype(np.float32)})
+        pipes = [
+            (op.Select((op.Predicate("c1", "<", 0.0),)),),
+            (op.Project(("c1", "c3")),),
+            (op.SmartAddress(("c2", "c5")),),
+            (op.JoinSmall(probe_key="c0", build_table="bw",
+                          build_key="k", build_cols=("v", "w")),),
+        ]
+        words = schema().encode(data)
+        for pipe in pipes:
+            build = (bft, bwords) if any(
+                isinstance(o, op.JoinSmall) for o in pipe) else None
+            res = solo_run(pipe, words, build=build)
+            assert (np.asarray(res.rows).shape[1]
+                    == compile_pipeline(schema(), pipe).response_width), pipe
+
+    def test_failed_alloc_rolls_back_earlier_nodes(self):
+        """A mid-scatter pool-exhaustion frees the partitions already
+        allocated on earlier nodes (no orphaned pages)."""
+        cl = FarCluster(2, 8 * 2**20)       # 4 x 2 MiB pages per node
+        cqp = cl.open_connection()
+        # node 1 nearly full (3 of 4 pages): its half of `big` won't fit
+        cl.nodes[1].pool.alloc_table(
+            FTable("solo-hog", COLS, n_rows=163840))        # 5 MiB
+        free_before = [node.pool.free_pages for node in cl.nodes]
+        big = FTable("big", COLS, n_rows=300000)    # 4.6 MiB per partition
+        with pytest.raises(MemoryError):
+            cl.alloc_table_mem(cqp, big)
+        assert [node.pool.free_pages for node in cl.nodes] == free_before
+
+    def test_alloc_rejects_f32_inexact_row_ids(self):
+        """Row ids ride the packing as f32: tables at/above 2^24 rows
+        would silently scramble the merge order, so alloc refuses them."""
+        cl = FarCluster(2)
+        cqp = cl.open_connection()
+        big = FTable("big", COLS, n_rows=1 << 24)
+        with pytest.raises(ValueError, match="f32-exact"):
+            cl.alloc_table_mem(cqp, big)

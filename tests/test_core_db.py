@@ -9,8 +9,7 @@ from repro.core.client import (FViewNode, FarviewError, alloc_table_mem,
                                close_connection, farview_request,
                                free_table_mem, merge_group_partials,
                                open_connection, table_read, table_write)
-from repro.core.pipeline import clear_cache, cache_info, compile_pipeline
-from repro.core.pool import FarPool
+from repro.core.pipeline import clear_cache, cache_info
 from repro.core.table import FTable, Column, string_table
 
 

@@ -1,7 +1,6 @@
 """Unit tests for the far-KV library (core/far_kv.py): the disaggregated
 KV pool primitives used by the serving stack."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

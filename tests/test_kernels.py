@@ -5,7 +5,6 @@ BlockSpec structure, validated here for semantics). assert_allclose against
 ref.py per the spec.
 """
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

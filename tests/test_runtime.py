@@ -3,8 +3,6 @@ checkpoint cadence, elastic restart, loss actually decreases."""
 import tempfile
 
 import numpy as np
-import jax
-import pytest
 
 from repro.configs import get_config
 from repro.configs.base import TrainConfig, smoke_config
