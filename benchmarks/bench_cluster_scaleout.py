@@ -126,7 +126,6 @@ def run() -> None:
 
 def main() -> None:
     import argparse
-    import json
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None, metavar="PATH")
@@ -137,8 +136,7 @@ def main() -> None:
     run()
     common.print_csv()
     if args.json:
-        with open(args.json, "w") as f:
-            json.dump(common.rows_as_records(), f, indent=2, default=str)
+        common.write_json(args.json)
 
 
 if __name__ == "__main__":

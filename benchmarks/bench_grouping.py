@@ -1,20 +1,92 @@
-"""Fig. 9: DISTINCT and GROUP BY+SUM vs LCPU/RCPU dict baselines.
+"""Fig. 9: DISTINCT and GROUP BY+SUM vs LCPU/RCPU dict baselines, plus the
+cluster group scale-out sweep (PR 4).
 
 (a) distinct with #distinct == #rows (worst case), (b) group-by with
 growing data size, (c) group-by with fixed group count. The FV path is the
 hash_group kernel + client-side overflow merge; the baseline is a python
 dict (the paper used a fast C++ hash map — CPU numbers are indicative,
-shipped bytes exact)."""
+shipped bytes exact).
+
+(d) `FV_group_scaleout_{k}nodes`: the same group-aggregate scattered over a
+FarCluster of 1/2/4 nodes — throughput, stacked-dispatch count, and exact
+shipped bytes per node count, so the group-scaling ceiling ROADMAP used to
+describe in prose is a committed number (PR 3 recorded it flatlining at
+2 nodes; the segment-reduce aggregation + device-side partial merge are
+what this sweep measures)."""
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import row, timeit
 from repro.core import operators as op
 from repro.core.client import (FViewNode, alloc_table_mem, farview_request,
                                open_connection,
                                table_write)
+from repro.core.cluster import FarCluster
 from repro.core.table import FTable, Column
+
+
+def _group_scaleout() -> None:
+    q = common.quick()
+    n = 1 << (13 if q else 19)
+    n_clients = 2 if q else 4
+    node_counts = (1, 2) if q else (1, 2, 4)
+    repeat = 1 if q else 5
+    cols = tuple(Column(f"c{i}", "i32" if i == 0 else "f32")
+                 for i in range(8))
+    pipe = (op.GroupBy("c0", ("c1", "c2"), n_buckets=1024),)
+    rng = np.random.default_rng(2)
+
+    rounds = {}
+    for k in node_counts:
+        cl = FarCluster(k, 256 * 2**20)
+        clients = []
+        for c in range(n_clients):
+            cqp = cl.open_connection()
+            ft = FTable(f"g{c}", cols, n_rows=n)
+            keys = rng.integers(0, 128, n).astype(np.int32)
+            d = {"c0": keys}
+            for i in range(1, 8):
+                d[f"c{i}"] = rng.normal(size=n).astype(np.float32)
+            # range partitions: group-aggregate needs no key co-location
+            # (the device merge folds cross-node partials exactly), and
+            # exact n/k splits stay on pow2 bucket boundaries — hash's
+            # n/k+eps partitions would pad back up to the next bucket
+            ct = cl.alloc_table_mem(cqp, ft)
+            cl.table_write(cqp, ct, ft.encode(d))
+            clients.append((cqp, ct))
+
+        def one_round(cl=cl, clients=clients):
+            pends = [cl.submit_request(cqp, ct, pipe)
+                     for cqp, ct in clients]
+            return [p.wait().finalize() for p in pends]
+
+        rounds[k] = (cl, clients, one_round)
+        one_round()                             # warmup: trace + caches
+
+    samples = {k: [] for k in node_counts}
+    for _ in range(repeat):                     # interleave the node counts
+        for k in node_counts:
+            t0 = time.perf_counter()
+            rounds[k][2]()
+            samples[k].append(time.perf_counter() - t0)
+    base = None
+    for k in node_counts:
+        cl, clients, one = rounds[k]
+        d0 = cl.dispatches
+        res = one()
+        shipped = sum(r.shipped_bytes for r in res)
+        sec = sorted(samples[k])[len(samples[k]) // 2]          # p50
+        thru = n_clients * n / sec
+        base = base or thru
+        row("grouping", f"FV_group_scaleout_{k}nodes", sec * 1e6,
+            nodes=k, clients=n_clients, rows=n_clients * n,
+            dispatches=cl.dispatches - d0, shipped_bytes=shipped,
+            mrows_per_s=round(thru / 1e6, 2),
+            speedup=round(thru / base, 2))
 
 
 def run() -> None:
@@ -67,3 +139,6 @@ def run() -> None:
         row("grouping", f"RCPU_groupby_n{n}", us_lcpu,
             shipped_bytes=ft.n_bytes, rows=n)
         node.pool.free_table(ft)
+
+    # (d) cluster group scale-out: 1/2/4 nodes
+    _group_scaleout()

@@ -1,15 +1,76 @@
 """Small-table join (paper §Conclusions future work): FV in-memory join vs
 LCPU/RCPU dict-merge baselines. FV ships only matched+selected rows with
-the build values appended; RCPU ships the whole probe table."""
+the build values appended; RCPU ships the whole probe table.
+
+`FV_join_scaleout_{k}nodes_{copart|repl}` (PR 4): the same join scattered
+over a FarCluster of 1/2/4 nodes, comparing the replicated broadcast build
+(N pool copies, N× write traffic) against the co-partitioned build-probe
+layout (build hash-placed by the probe's key rule: ONE copy cluster-wide,
+every node joins locally). `build_bytes_written` is the exact pool write
+traffic for the build table under each layout."""
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import row, timeit
 from repro.core import operators as op
 from repro.core.client import (FViewNode, alloc_table_mem, farview_request,
                                open_connection, table_write)
+from repro.core.cluster import FarCluster
 from repro.core.table import FTable, Column
+
+
+def _join_scaleout() -> None:
+    q = common.quick()
+    n = 1 << (13 if q else 18)
+    node_counts = (1, 2) if q else (1, 2, 4)
+    repeat = 1 if q else 5
+    n_build = 512
+    rng = np.random.default_rng(6)
+    pk = rng.integers(0, 1024, n).astype(np.int32)
+    pd = {"k": pk, "a": rng.random(n).astype(np.float32),
+          "b": rng.random(n).astype(np.float32)}
+    bk = rng.permutation(1024)[:n_build].astype(np.int32)
+    bv = rng.random(n_build).astype(np.float32)
+    pipe = (op.JoinSmall(probe_key="k", build_table="dim",
+                         build_key="k", build_cols=("v",)),)
+    pcols = (Column("k", "i32"), Column("a"), Column("b"))
+    bcols = (Column("k", "i32"), Column("v"))
+
+    for k in node_counts:
+        for mode in ("copart", "repl"):
+            cl = FarCluster(k, 256 * 2**20)
+            cqp = cl.open_connection()
+            probe = FTable("probe", pcols, n_rows=n)
+            ct = cl.alloc_table_mem(cqp, probe, partitioner="hash", keys=pk)
+            cl.table_write(cqp, ct, probe.encode(pd))
+            build = FTable("dim", bcols, n_rows=n_build)
+            w0 = cl.stats.bytes_written
+            if mode == "copart":
+                cb = cl.alloc_table_mem(cqp, build, co_partition=ct, keys=bk)
+            else:
+                cb = cl.alloc_table_mem(cqp, build, replicate=True)
+            cl.table_write(cqp, cb, build.encode({"k": bk, "v": bv}))
+            build_written = cl.stats.bytes_written - w0
+
+            def verb(cl=cl, cqp=cqp, ct=ct):
+                return cl.farview_request(cqp, ct, pipe).finalize()
+
+            res = verb()
+            samples = []
+            for _ in range(repeat):
+                t0 = time.perf_counter()
+                verb()
+                samples.append(time.perf_counter() - t0)
+            sec = sorted(samples)[len(samples) // 2]            # p50
+            row("join", f"FV_join_scaleout_{k}nodes_{mode}", sec * 1e6,
+                nodes=k, rows=n, matched=int(res.count),
+                shipped_bytes=res.shipped_bytes,
+                build_bytes_written=build_written,
+                mrows_per_s=round(n / sec / 1e6, 2))
 
 
 def run(n_rows: int = 1 << 14) -> None:
@@ -57,3 +118,6 @@ def run(n_rows: int = 1 << 14) -> None:
             rows=n_rows)
         row("join", f"RCPU_join_{match_pct}pct", us_lcpu,
             shipped_bytes=probe.n_bytes, rows=n_rows)
+
+    # cluster join scale-out: co-partitioned vs replicated build, 1/2/4 nodes
+    _join_scaleout()

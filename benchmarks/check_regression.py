@@ -1,0 +1,121 @@
+"""Benchmark regression guard: diff a fresh --json run against a committed
+BENCH_*.json and fail on a >THRESHOLD x p50 regression in any shared key.
+
+    python -m benchmarks.check_regression current.json            # auto-pick
+    python -m benchmarks.check_regression current.json --against BENCH_PR4.json
+
+Shared key = (bench, name) present in both files AND whose size context
+matches: rows whose `rows` / `nodes` / `clients` fields differ are skipped
+(a --quick run shrinks problem sizes, so comparing them against full-mode
+numbers would be apples-to-oranges, not a regression). Baselines faster
+than --floor microseconds are skipped too — dispatch-overhead-sized rows
+drown in scheduler noise.
+
+Reads both JSON formats: the bare record list (<= PR 3) and the
+{"meta": ..., "rows": [...]} provenance-stamped format (>= PR 4).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import subprocess
+import sys
+
+_CONTEXT_KEYS = ("rows", "nodes", "clients")
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load_rows(path: str) -> tuple[list[dict], dict]:
+    with open(path) as f:
+        data = json.load(f)
+    if isinstance(data, list):          # <= PR 3 bare-list format
+        return data, {}
+    return data.get("rows", []), data.get("meta", {})
+
+
+def latest_committed_baseline(quick: "bool | None" = None) -> str | None:
+    """The most recently committed BENCH_*.json (git commit date; falls
+    back to lexical order when git is unavailable). When `quick` is given
+    and any candidate's meta carries a matching quick flag, only matching
+    candidates are considered — quick-mode CI runs compare against a
+    quick-mode baseline, never against full-mode problem sizes."""
+    cands = sorted(glob.glob(os.path.join(_ROOT, "BENCH_*.json")))
+    if not cands:
+        return None
+    if quick is not None:
+        matching = [p for p in cands
+                    if load_rows(p)[1].get("quick") == quick]
+        if matching:
+            cands = matching
+
+    def commit_ts(p: str) -> int:
+        try:
+            out = subprocess.run(
+                ["git", "log", "-1", "--format=%ct", "--", p],
+                capture_output=True, text=True, cwd=_ROOT, timeout=10)
+            return int(out.stdout.strip() or 0)
+        except Exception:
+            return 0
+
+    return max(cands, key=lambda p: (commit_ts(p), p))
+
+
+def compare(cur_rows: list[dict], base_rows: list[dict], *,
+            threshold: float, floor_us: float) -> tuple[list, list]:
+    base = {(r["bench"], r["name"]): r for r in base_rows}
+    checked, failed = [], []
+    for r in cur_rows:
+        b = base.get((r["bench"], r["name"]))
+        if b is None:
+            continue
+        if any(k in r and k in b and r[k] != b[k] for k in _CONTEXT_KEYS):
+            continue                    # different problem size: not comparable
+        if b["us_per_call"] < floor_us:
+            continue
+        ratio = r["us_per_call"] / max(b["us_per_call"], 1e-9)
+        entry = (r["bench"], r["name"], b["us_per_call"], r["us_per_call"],
+                 ratio)
+        checked.append(entry)
+        if ratio > threshold:
+            failed.append(entry)
+    return checked, failed
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="fresh benchmarks.run --json output")
+    ap.add_argument("--against", default=None,
+                    help="baseline BENCH_*.json (default: latest committed)")
+    ap.add_argument("--threshold", type=float, default=2.0,
+                    help="fail when current p50 > threshold x baseline")
+    ap.add_argument("--floor", type=float, default=200.0,
+                    help="skip baselines faster than this many us")
+    args = ap.parse_args()
+
+    cur_rows, cur_meta = load_rows(args.current)
+    baseline = args.against or latest_committed_baseline(
+        cur_meta.get("quick"))
+    if baseline is None:
+        print("# no committed BENCH_*.json baseline; nothing to check")
+        return 0
+    base_rows, base_meta = load_rows(baseline)
+    print(f"# current  {args.current} (quick={cur_meta.get('quick')}, "
+          f"platform={cur_meta.get('platform')})")
+    print(f"# baseline {baseline} (quick={base_meta.get('quick')}, "
+          f"commit={str(base_meta.get('git_commit'))[:12]})")
+
+    checked, failed = compare(cur_rows, base_rows,
+                              threshold=args.threshold, floor_us=args.floor)
+    for bench, name, bus, cus, ratio in checked:
+        flag = "  << REGRESSION" if ratio > args.threshold else ""
+        print(f"{bench:>20s} {name:<36s} {bus:>12.1f} -> {cus:>12.1f} "
+              f"({ratio:5.2f}x){flag}")
+    print(f"# {len(checked)} shared keys checked, {len(failed)} regressed "
+          f"(threshold {args.threshold}x, floor {args.floor}us)")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

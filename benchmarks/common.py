@@ -87,6 +87,36 @@ def rows_as_records() -> list[dict]:
     return [{k: _plain(v) for k, v in r.items()} for r in ROWS]
 
 
+def bench_meta() -> dict:
+    """Provenance stamp for --json output: git commit, jax version, device
+    platform, quick-mode flag. BENCH_*.json files carry it so the perf
+    trajectory is comparable PR over PR (and the CI regression guard can
+    refuse to compare quick-mode against full-mode numbers)."""
+    import subprocess
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            timeout=10).stdout.strip() or None
+    except Exception:
+        commit = None
+    return {
+        "git_commit": commit,
+        "jax_version": jax.__version__,
+        "platform": jax.default_backend(),
+        "quick": QUICK,
+    }
+
+
+def write_json(path: str) -> None:
+    """Write {"meta": ..., "rows": [...]} (the post-PR4 BENCH format; the
+    regression guard still reads the older bare-list files)."""
+    import json
+    with open(path, "w") as f:
+        json.dump({"meta": bench_meta(), "rows": rows_as_records()}, f,
+                  indent=2, default=str)
+
+
 def print_csv():
     keys = ["bench", "name", "us_per_call"]
     extra = sorted({k for r in ROWS for k in r} - set(keys))

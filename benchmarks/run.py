@@ -17,16 +17,20 @@ FV rows time the fused jitted request path with BLOCKING p50 timing (see
 common.timeit); shipped/read byte columns are exact and carry the paper's
 actual claims.
 
-`--json PATH` additionally writes the rows as structured JSON records
-(bench, name, us_per_call, plus per-bench fields like shipped_frac/rows),
-so the perf trajectory is recorded PR over PR, e.g.:
+`--json PATH` additionally writes `{"meta": ..., "rows": [...]}`: the rows
+are structured records (bench, name, us_per_call, plus per-bench fields
+like shipped_frac/rows) and the meta block stamps git commit, jax version,
+device platform and quick-mode — so BENCH_*.json files form a comparable
+trajectory PR over PR, e.g.:
 
     python -m benchmarks.run --json BENCH_$(date +%Y%m%d_%H%M%S).json
+
+`benchmarks.check_regression` diffs two such files (CI runs it against the
+latest committed BENCH_*.json and fails on a >2x p50 regression).
 """
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 import time
 
@@ -35,7 +39,7 @@ from benchmarks import (bench_cluster_scaleout, bench_crypto, bench_far_kv,
                         bench_multiclient_mixed, bench_projection,
                         bench_rdma, bench_regex, bench_resources,
                         bench_selection, common)
-from benchmarks.common import print_csv, rows_as_records
+from benchmarks.common import print_csv, write_json
 
 ALL = {
     "rdma": bench_rdma.run,
@@ -73,8 +77,7 @@ def main() -> None:
         print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
     print_csv()
     if args.json:
-        with open(args.json, "w") as f:
-            json.dump(rows_as_records(), f, indent=2, default=str)
+        write_json(args.json)
         print(f"# wrote {args.json}", file=sys.stderr)
 
 

@@ -470,8 +470,11 @@ def merge_group_partials(ft: FTable, pipeline: tuple,
                          part_rows: list | None = None) -> PipelineResult:
     """Client-side software merge (overflow buffers, multi-node partials).
 
-    `n_rows` / `part_rows` are the cluster scatter-gather extras: the
-    original table's row count and the partition map, which let rows-kind
-    and mask-kind partials splice back byte-identically to a single-node
-    response (see offload._merge)."""
+    Groups-kind partials — each a compact (bucket table + packed collision
+    rows) per node — concatenate and fold in ONE device-side segment-reduce
+    dispatch (offload.merge_groups_device); only the per-key totals cross
+    back to the host dict. `n_rows` / `part_rows` are the cluster
+    scatter-gather extras: the original table's row count and the partition
+    map, which let rows-kind and mask-kind partials splice back
+    byte-identically to a single-node response (see offload._merge)."""
     return _merge(ft, pipeline, partials, n_rows=n_rows, part_rows=part_rows)

@@ -34,17 +34,26 @@ client then gathers and merges partials (`offload._merge` /
     at merged keystream positions;
   * mask kind (regex): per-partition decisions scatter back to original
     row positions via the partition map;
-  * groups kind: partial aggregates merge client-side (the paper's
-    software merge, generalized from overflow buffers to node partials).
+  * groups kind: compact per-node partials (bucket tables + packed
+    collision rows) merge in ONE device-side segment-reduce dispatch
+    (offload.merge_groups_device) — the paper's client software merge,
+    generalized from overflow buffers to node partials and pushed back
+    onto the device.
 
 Pre-crypt works on any partition because the CTR keystream is addressed by
 ORIGINAL row offsets (`row_ids`), not local ones — a node holding rows
 {3, 17, 40} of an encrypted table decrypts each with the keystream slice it
 was encrypted under.
 
-Small join build tables are `replicate=True`-allocated (a copy in every
-node's pool, the classic broadcast join) so probe partitions resolve their
-build locally.
+Small join build tables take one of two layouts: `replicate=True` (a copy
+in every node's pool — the classic broadcast join, works against any probe
+partitioning, costs N× the write traffic and footprint) or
+`co_partition=<probe ClusterTable>` (build rows placed by the PROBE's
+key rule so each node joins purely against its local shard — ONE copy
+cluster-wide). `co_partition=` falls back to replication automatically
+when the probe carries no key rule (range/replicated); dispatching a join
+whose build is partitioned but NOT co-partitioned with the probe is
+refused (it would silently drop matches).
 
 Scatter dispatch is genuinely concurrent: `flush()` drains each node's
 scheduler in its own thread (nodes are independent; XLA releases the GIL),
@@ -65,7 +74,8 @@ from repro.core import operators as op_ir
 from repro.core.pipeline import PipelineResult
 from repro.core.pool import PoolStats
 from repro.core.table import FTable, INT_EXACT_LIMIT
-from repro.distributed.sharding import partition_rows
+from repro.distributed.sharding import (CoPartition, co_partition_spec,
+                                        partition_rows)
 
 
 @dataclass
@@ -76,6 +86,8 @@ class ClusterTable:
     part_rows: list                 # per-node original-row index arrays
     partitioner: str
     replicated: bool = False        # full copy on every node (join builds)
+    co_spec: CoPartition | None = None  # key->node rule (key partitioners);
+    #                                     what a co-partitioned build reuses
 
     @property
     def name(self) -> str:
@@ -157,6 +169,7 @@ class FarCluster:
                       for _ in range(n_nodes)]
         self.partitioner = partitioner
         self.parallel = parallel and n_nodes > 1
+        self.catalog: dict[str, ClusterTable] = {}  # name -> cluster handle
 
     @property
     def n_nodes(self) -> int:
@@ -193,13 +206,24 @@ class FarCluster:
     def alloc_table_mem(self, cqp: ClusterQP, ft: FTable, *,
                         replicate: bool = False,
                         partitioner: str | None = None,
-                        keys: np.ndarray | None = None) -> ClusterTable:
+                        keys: np.ndarray | None = None,
+                        co_partition: "ClusterTable | None" = None,
+                        ) -> ClusterTable:
         """Partition (or replicate) a table across the nodes' pools.
 
         The partition map is computed HERE, once, client-side: `keys`
         (optional, one value per row) feeds the hash/skew partitioners so
         equal-key rows co-locate. `replicate=True` puts a full copy in
-        every pool — for small join build tables (broadcast join)."""
+        every pool — for small join build tables (broadcast join).
+
+        `co_partition=probe_ctable` places THIS table's rows (by `keys`,
+        the join-key value per row) on whichever node the probe table's
+        key partitioning put that key: each node then resolves build-probe
+        joins entirely locally and the build is written ONCE cluster-wide
+        instead of N times. Falls back to `replicate=True` automatically
+        when the referenced table carries no key rule (range-partitioned
+        or replicated) — co-location is impossible there, and a silent
+        partition would drop join matches."""
         if ft.n_rows >= INT_EXACT_LIMIT:
             # row ids ride the fused packing as an f32 column (the same
             # exactness budget the DB enforces for i32 data at ingest);
@@ -208,26 +232,50 @@ class FarCluster:
                 f"cluster tables are limited to {INT_EXACT_LIMIT - 1} rows "
                 "(row ids must stay f32-exact); partition the data into "
                 "multiple tables")
+        if co_partition is not None:
+            if replicate:
+                raise ValueError("co_partition and replicate are exclusive")
+            spec = co_partition.co_spec
+            if spec is None:        # no key rule to share: broadcast join
+                return self.alloc_table_mem(cqp, ft, replicate=True)
+            part_rows = partition_rows(ft.n_rows, self.n_nodes, keys=keys,
+                                       co_partition=spec)
+            # empty shards still allocate: every node must resolve the
+            # build table by name when it joins its probe partition
+            parts = self._alloc_parts(cqp, ft, [len(i) for i in part_rows],
+                                      alloc_empty=True)
+            return self._register(ClusterTable(
+                ft, parts, part_rows, f"co[{spec.kind}]", co_spec=spec))
         if replicate:
             parts = self._alloc_parts(
                 cqp, ft, [ft.n_rows] * self.n_nodes)
             all_rows = np.arange(ft.n_rows, dtype=np.int64)
-            return ClusterTable(ft, parts, [all_rows] * self.n_nodes,
-                                "replicate", replicated=True)
+            return self._register(ClusterTable(
+                ft, parts, [all_rows] * self.n_nodes,
+                "replicate", replicated=True))
         kind = partitioner or self.partitioner
         part_rows = partition_rows(ft.n_rows, self.n_nodes, kind, keys=keys)
         parts = self._alloc_parts(cqp, ft, [len(i) for i in part_rows])
-        return ClusterTable(ft, parts, part_rows, kind)
+        return self._register(ClusterTable(
+            ft, parts, part_rows, kind,
+            co_spec=co_partition_spec(kind, self.n_nodes, keys)))
+
+    def _register(self, ctable: ClusterTable) -> ClusterTable:
+        self.catalog[ctable.name] = ctable
+        return ctable
 
     def _alloc_parts(self, cqp: ClusterQP, ft: FTable,
-                     rows_per_node: list) -> list:
-        """Allocate one partition per node (None for zero rows), rolling
-        back the earlier nodes' allocations if a later pool is exhausted —
-        a half-scattered table would leak pages with no handle to free."""
+                     rows_per_node: list, *,
+                     alloc_empty: bool = False) -> list:
+        """Allocate one partition per node (None for zero rows, unless
+        `alloc_empty` — co-partitioned build shards register even when
+        empty so probe-side joins resolve the name), rolling back the
+        earlier nodes' allocations if a later pool is exhausted — a
+        half-scattered table would leak pages with no handle to free."""
         parts: list = []
         try:
             for qp, n in zip(cqp.qps, rows_per_node):
-                if n == 0:
+                if n == 0 and not alloc_empty:
                     parts.append(None)
                     continue
                 part = FTable(ft.name, ft.columns, n_rows=n,
@@ -245,6 +293,8 @@ class FarCluster:
         for qp, part in zip(cqp.qps, ctable.parts):
             if part is not None:
                 fv.free_table_mem(qp, part)
+        if self.catalog.get(ctable.name) is ctable:
+            del self.catalog[ctable.name]
 
     def table_write(self, cqp: ClusterQP, ctable: ClusterTable,
                     words: np.ndarray) -> None:
@@ -283,6 +333,7 @@ class FarCluster:
         pipeline = op_ir.validate_pipeline(tuple(pipeline))
         strings = None if strings is None else np.asarray(strings)
         lengths = None if lengths is None else np.asarray(lengths)
+        self._check_join_locality(ctable, pipeline)
         if ctable.replicated:
             # a replicated table has no partitions to scatter over: serve
             # from node 0 exactly like a solo dispatch
@@ -295,7 +346,7 @@ class FarCluster:
         pends, prows = [], []
         for node, qp, part, idx in zip(self.nodes, cqp.qps, ctable.parts,
                                        ctable.part_rows):
-            if part is None:
+            if part is None or part.n_rows == 0:
                 continue
             idx = np.asarray(idx)
             kwargs = {}
@@ -307,6 +358,34 @@ class FarCluster:
             prows.append(idx)
         cqp.requests += 1
         return ClusterPending(self, ctable, pipeline, pends, prows)
+
+    def _check_join_locality(self, ctable: ClusterTable,
+                             pipeline: tuple) -> None:
+        """A probe may only dispatch a join when every serving node can
+        answer it from its OWN pool: a replicated build copy (broadcast
+        join) or — for a partitioned probe — a shard co-partitioned with
+        THIS probe (same captured CoPartition object; structural equality
+        of two hash rules says nothing about which columns they hashed).
+        Any other layout would silently drop matches whose build row lives
+        on a different node — refuse loudly instead. A replicated probe is
+        served whole from node 0, so only a replicated build (node 0 holds
+        a full copy) is local there."""
+        jop = op_ir.join_small_of(pipeline)
+        if jop is None:
+            return
+        bct = self.catalog.get(jop.build_table)
+        if bct is None:     # not cluster-allocated; nodes resolve (or raise)
+            return
+        if bct.replicated:
+            return
+        if (not ctable.replicated and bct.co_spec is not None
+                and bct.co_spec.compatible_with(ctable.co_spec)):
+            return          # build placed BY this probe's key rule
+        raise fv.FarviewError(
+            f"build table {jop.build_table!r} is partitioned but not "
+            f"co-partitioned with probe {ctable.name!r}: allocate it with "
+            "replicate=True (broadcast join) or "
+            "co_partition=<probe table> (single-copy local join)")
 
     def flush(self) -> None:
         """Drain every node's scheduler — concurrently when `parallel`

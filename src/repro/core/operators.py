@@ -151,6 +151,17 @@ def has_crypt_pre(pipeline: tuple) -> bool:
     return any(isinstance(o, Crypt) and o.when == "pre" for o in pipeline)
 
 
+def join_small_of(pipeline: tuple) -> JoinSmall | None:
+    """The pipeline's join descriptor, if any. The cluster's scatter needs
+    it up front: a partitioned probe may only dispatch when every owning
+    node can resolve the named build table locally (replicated copy or
+    co-partitioned shard)."""
+    for o in pipeline:
+        if isinstance(o, JoinSmall):
+            return o
+    return None
+
+
 def crypt_post_of(pipeline: tuple) -> Crypt | None:
     """The response-encryption descriptor, if any. The cluster merge needs
     it: per-node responses are each encrypted with a keystream starting at

@@ -164,17 +164,17 @@ class PipelineResult:
 
     def _finalize_groups(self, raw: dict) -> None:
         # the paper's collision buffer: overflow rows ship to the client
-        # for software post-aggregation
-        ovf = np.asarray(raw["overflow_mask"]).astype(bool)
-        keys = np.asarray(raw["keys"])
-        vals = np.asarray(raw["vals"])
-        ovf_keys = keys[ovf]
-        keep = ovf_keys != _DROP_KEY
+        # for software post-aggregation. The executable already packed them
+        # to the front of ovf_keys/ovf_vals (device-side compaction), so
+        # only the `ovf_count` collision rows cross to the host — never the
+        # partition-sized key/value arrays.
+        n_ovf = int(raw["ovf_count"])
         self._groups = dict(
             bucket_keys=raw["bucket_keys"], count=raw["count"],
             sum=raw["sum"], min=raw["min"], max=raw["max"],
             drop_key=self._meta.get("drop_key"),
-            ovf_keys=ovf_keys[keep], ovf_vals=vals[ovf][keep])
+            ovf_keys=np.asarray(raw["ovf_keys"][:n_ovf]),
+            ovf_vals=np.asarray(raw["ovf_vals"][:n_ovf]))
         self._shipped = int(raw["shipped"])
 
 
@@ -368,8 +368,8 @@ class CompiledPipeline:
         out = {}
         for k, v in payload.items():
             v = v[b]
-            if k in ("rows", "mask", "keys", "vals", "overflow_mask", "ids"):
-                v = v[:nv]
+            if k in ("rows", "mask", "ovf_keys", "ovf_vals", "ids"):
+                v = v[:nv]      # packed fronts always fit: count <= nv
             out[k] = v
         return out
 
@@ -650,13 +650,19 @@ class CompiledPipeline:
             res = kops.group_aggregate(keys, vals, n_buckets=nb,
                                        interpret=False)
         ovf = res["overflow_mask"]
-        keep_cnt = jnp.sum((ovf & (keys != _DROP_KEY)).astype(jnp.int32))
+        keep = ovf & (keys != _DROP_KEY)
+        keep_cnt = jnp.sum(keep.astype(jnp.int32))
+        # compact (keys, values) collision partial: overflow rows packed to
+        # the front IN the traced program (stable two-way partition via the
+        # composite-key sort), so the response ships B buckets + the actual
+        # collision rows — the host never touches partition-sized arrays
+        order, _ = kref.sort_by_bucket((~keep).astype(jnp.int32), 2)
         shipped = (np.int32(nb * (2 + 4 * len(vcols)) * WORD_BYTES)
                    + keep_cnt * np.int32((1 + len(vcols)) * WORD_BYTES))
         return {"bucket_keys": res["bucket_keys"], "count": res["count"],
                 "sum": res["sum"], "min": res["min"], "max": res["max"],
-                "overflow_mask": ovf, "keys": keys, "vals": vals,
-                "shipped": shipped}
+                "ovf_keys": keys[order], "ovf_vals": vals[order],
+                "ovf_count": keep_cnt, "shipped": shipped}
 
 
 _CACHE: dict = {}

@@ -246,8 +246,94 @@ _HASH_MULT = np.uint64(0x9E3779B1)      # Fibonacci hashing (same family as
 #                                         the pool's group-bucket hash)
 
 
+def _hash_keys(keys: np.ndarray) -> np.ndarray:
+    """Fibonacci hash of a key column -> uint64 (shared by every
+    key-partitioner so two tables hashing the same key values always agree
+    on the owner — the invariant co-partitioned joins rest on)."""
+    keys = np.asarray(keys)
+    h = (keys.astype(np.int64).view(np.uint64)
+         if keys.dtype == np.int64 else
+         keys.astype(np.int64).astype(np.uint64))
+    return (h * _HASH_MULT) >> np.uint64(13)
+
+
+class CoPartition:
+    """A captured key -> owning-node assignment.
+
+    Built once when a table is key-partitioned (`co_partition_spec`) and
+    handed to `partition_rows(..., co_partition=...)` to place a SECOND
+    table's rows on the same nodes by key — the locality contract of a
+    co-partitioned build-probe join: every build row lives on the node that
+    owns the equal-keyed probe rows, so each node joins purely locally and
+    the build table is written exactly once cluster-wide (vs the N-copy
+    replicated broadcast join).
+
+      hash   owners derive from the shared hash formula — any key, even one
+             the original table never held, maps consistently.
+      skew   owners come from the greedy placement's key->node table; keys
+             unseen by the original table fall back to the hash rule (they
+             co-locate with nothing, so placement is free).
+    """
+
+    def __init__(self, kind: str, n_parts: int,
+                 key_owner: "tuple[np.ndarray, np.ndarray] | None" = None):
+        self.kind = kind
+        self.n_parts = n_parts
+        self._key_owner = key_owner     # (sorted uniq hashes, owners)
+
+    def compatible_with(self, other: "CoPartition | None") -> bool:
+        """Whether two tables are co-located BY CONSTRUCTION: only when
+        they share this very spec object (the build was allocated with
+        co_partition=<that probe>). Two hash specs with equal n_parts
+        place equal HASH inputs on the same node, but a spec does not know
+        which COLUMN its keys came from — a probe hash-partitioned on a
+        non-join column would false-pass a formula comparison and silently
+        drop join matches, so structural equality is deliberately NOT
+        enough."""
+        return other is not None and self is other
+
+    def owners_of(self, keys: np.ndarray) -> np.ndarray:
+        h = _hash_keys(keys)
+        fallback = (h % np.uint64(self.n_parts)).astype(np.int64)
+        if self.kind == "hash" or self._key_owner is None:
+            return fallback
+        hk, ow = self._key_owner
+        if len(hk) == 0:
+            return fallback
+        pos = np.clip(np.searchsorted(hk, h), 0, len(hk) - 1)
+        return np.where(hk[pos] == h, ow[pos], fallback)
+
+
+def _skew_owner_map(h: np.ndarray, n_parts: int):
+    """Greedy LPT placement: key-groups largest-first onto the least-loaded
+    node. Returns (sorted uniq hashes, owner per uniq hash, owner per row)."""
+    uniq, inv, counts = np.unique(h, return_inverse=True, return_counts=True)
+    owner_of_key = np.zeros(len(uniq), np.int64)
+    load = np.zeros(n_parts, np.int64)
+    for g in np.argsort(-counts, kind="stable"):   # largest group first
+        tgt = int(np.argmin(load))
+        owner_of_key[g] = tgt
+        load[tgt] += counts[g]
+    return uniq, owner_of_key, owner_of_key[inv]
+
+
+def co_partition_spec(kind: str, n_parts: int,
+                      keys: "np.ndarray | None") -> "CoPartition | None":
+    """The reusable key->node assignment behind a key-partitioned table,
+    or None when the partitioning carries no key rule (range, or hash/skew
+    over row indices): nothing can co-locate with it."""
+    if keys is None or kind not in ("hash", "skew"):
+        return None
+    if kind == "hash":
+        return CoPartition("hash", n_parts)
+    uniq, owner_of_key, _ = _skew_owner_map(_hash_keys(keys), n_parts)
+    return CoPartition("skew", n_parts, (uniq, owner_of_key))
+
+
 def partition_rows(n_rows: int, n_parts: int, kind: str = "range", *,
-                   keys: "np.ndarray | None" = None) -> "list[np.ndarray]":
+                   keys: "np.ndarray | None" = None,
+                   co_partition: "CoPartition | None" = None,
+                   ) -> "list[np.ndarray]":
     """Client-side partition map: original row index -> owning pool node.
 
     Returns one sorted int64 index array per part (some possibly empty).
@@ -264,16 +350,35 @@ def partition_rows(n_rows: int, n_parts: int, kind: str = "range", *,
               onto the currently least-loaded node (greedy LPT). A heavy
               hitter key costs ONE node its group size instead of
               hash-landing several heavy keys together.
+
+    `co_partition=` (a CoPartition from `co_partition_spec`) overrides the
+    kind: rows are placed wherever the REFERENCED table's partitioning put
+    that key, co-locating the two tables for local build-probe joins.
     """
     if n_parts <= 0:
         raise ValueError("n_parts must be positive")
+    idx = np.arange(n_rows, dtype=np.int64)
+    if co_partition is not None:
+        if keys is None:
+            raise ValueError("co_partition placement needs keys= (the join "
+                             "key value of every row)")
+        if co_partition.n_parts != n_parts:
+            raise ValueError(
+                f"co_partition spans {co_partition.n_parts} nodes, "
+                f"requested {n_parts}")
+        keys = np.asarray(keys)
+        if keys.shape[0] != n_rows:
+            raise ValueError(
+                f"partition keys cover {keys.shape[0]} rows, "
+                f"table has {n_rows}")
+        owner = co_partition.owners_of(keys)
+        return [idx[owner == p] for p in range(n_parts)]
     if kind == "range" and keys is not None:
         # silently dropping the keys would scatter equal-key rows across
         # nodes while the caller believes they co-locate (join/group-by)
         raise ValueError(
             "partition keys were given but the 'range' partitioner "
             "ignores them — use 'hash' or 'skew' for key co-location")
-    idx = np.arange(n_rows, dtype=np.int64)
     if n_parts == 1:
         return [idx]
     if kind == "range":
@@ -286,23 +391,12 @@ def partition_rows(n_rows: int, n_parts: int, kind: str = "range", *,
     if keys.shape[0] != n_rows:
         raise ValueError(
             f"partition keys cover {keys.shape[0]} rows, table has {n_rows}")
-    h = (keys.astype(np.int64).view(np.uint64)
-         if keys.dtype == np.int64 else
-         keys.astype(np.int64).astype(np.uint64))
-    h = (h * _HASH_MULT) >> np.uint64(13)
+    h = _hash_keys(keys)
     if kind == "hash":
         owner = (h % np.uint64(n_parts)).astype(np.int64)
         return [idx[owner == p] for p in range(n_parts)]
     if kind == "skew":
-        uniq, inv, counts = np.unique(h, return_inverse=True,
-                                       return_counts=True)
-        owner_of_key = np.zeros(len(uniq), np.int64)
-        load = np.zeros(n_parts, np.int64)
-        for g in np.argsort(-counts, kind="stable"):   # largest group first
-            tgt = int(np.argmin(load))
-            owner_of_key[g] = tgt
-            load[tgt] += counts[g]
-        owner = owner_of_key[inv]
+        _, _, owner = _skew_owner_map(h, n_parts)
         return [idx[owner == p] for p in range(n_parts)]
     raise ValueError(f"unknown partitioner {kind!r} "
                      "(expected range | hash | skew)")

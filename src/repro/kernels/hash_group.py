@@ -1,21 +1,34 @@
 """Distinct / group-by / aggregation kernel (paper §5.4).
 
-TPU adaptation of Farview's cuckoo-hash + LRU-shift-register design:
+TPU adaptation of Farview's cuckoo-hash + LRU-shift-register design,
+restructured for scale (PR 4): the row stream is bucket-SORTED before the
+kernel (stable composite-key value sort — part of the same jitted
+program), bucket ownership is resolved globally on the sorted stream, and
+the Pallas kernel aggregates into a SMALL, fixed number of partial bucket
+tables that a tree merge combines:
 
-  * FPGA BRAM hash tables -> a bucket table resident in VMEM across the whole
-    grid (the output blocks are revisited by every grid step, so they act as
-    on-chip accumulators, exactly like Farview's on-chip hash state).
-  * hash lookups -> one-hot *matmuls* on the MXU. A (buckets x rows) one-hot
-    matrix aggregates counts and sums in one dot; bucket "claims" (which key
-    owns a bucket) are also resolved with one-hot matmuls over the 16-bit
-    halves of the key so that f32 MXU arithmetic stays exact.
+  * hash lookups -> one-hot *matmuls* on the MXU, exactly as before: a
+    (buckets x rows) one-hot matrix aggregates counts and sums in one dot.
+  * FPGA BRAM hash tables -> per-grid-row partial bucket tables. The grid
+    is (P, G): row p accumulates its G consecutive row-blocks into its own
+    VMEM-resident (B, V) partial (the revisited-output accumulator
+    pattern, scoped to one grid row), and P is capped at MAX_PARTIALS so
+    partial memory stays P*B*V — never the O(n/block_rows * B * V) blowup
+    a one-partial-per-block layout would allocate.
+  * the P partials are combined by a log-depth pairwise TREE MERGE
+    (`tree_merge`, plain jnp): count/sum add, min/max meet — associative,
+    so any merge order is valid. Grid rows share NO state; only the
+    G blocks inside a row accumulate sequentially (like the paper's
+    on-chip hash state, which Farview also banks per pipeline).
   * cuckoo collision eviction -> rows whose key differs from the bucket
-    owner's key are flagged as *overflow* and shipped to the client for
-    software post-aggregation — the same observable contract as the paper's
-    collision buffer.
-  * the LRU shift register (hazard protection) is unnecessary: the whole
-    block is aggregated associatively in one step, so read-after-write
-    hazards between consecutive tuples cannot occur.
+    owner's key are flagged *overflow* and shipped to the client for
+    software post-aggregation. Ownership (first row by ORIGINAL index
+    claims the bucket) is computed once, globally, on the sorted stream —
+    block-local claims would disagree with the global claimant whenever a
+    bucket spans a block boundary, so claims never enter the kernel.
+  * the LRU shift register (hazard protection) stays unnecessary: each
+    block is aggregated associatively in one step, and the tree merge has
+    no read-after-write hazards at all.
 
 Aggregates: count, sum, min, max (avg = sum/count client-side, as in ops.py).
 """
@@ -31,85 +44,42 @@ from jax.experimental import pallas as pl
 from repro.kernels import ref
 
 DEFAULT_BLOCK_ROWS = 256
+MAX_PARTIALS = 8            # cap on partial bucket tables (VMEM/HBM bound)
 _BIG = np.float32(3.0e38)
 _SENT = np.int32(ref.KEY_SENTINEL)
 
 
-def _halves(keys_u32):
-    hi = (keys_u32 >> np.uint32(16)).astype(jnp.float32)
-    lo = (keys_u32 & np.uint32(0xFFFF)).astype(jnp.float32)
-    return hi, lo
+def _block_kernel(n_buckets, bucket_ref, vals_ref, owns_ref,
+                  cnt_ref, sum_ref, min_ref, max_ref):
+    """Grid (P, G): partial p accumulates its g-th row-block. The output
+    blocks for partial p stay resident across that row's G steps (standard
+    revisited-accumulator pattern); different partials never touch each
+    other's state."""
+    g = pl.program_id(1)
 
-
-def _recombine(hi_f, lo_f):
-    hi = jnp.round(hi_f).astype(jnp.uint32)
-    lo = jnp.round(lo_f).astype(jnp.uint32)
-    return ((hi << np.uint32(16)) | lo).astype(jnp.int32)
-
-
-def _kernel(n_buckets, keys_ref, vals_ref, bkey_ref, cnt_ref, sum_ref,
-            min_ref, max_ref, ovf_ref):
-    step = pl.program_id(0)
-
-    @pl.when(step == 0)
+    @pl.when(g == 0)
     def _init():
-        bkey_ref[...] = jnp.full_like(bkey_ref, _SENT)
         cnt_ref[...] = jnp.zeros_like(cnt_ref)
         sum_ref[...] = jnp.zeros_like(sum_ref)
         min_ref[...] = jnp.full_like(min_ref, _BIG)
         max_ref[...] = jnp.full_like(max_ref, -_BIG)
 
-    keys = keys_ref[...][:, 0]                                # (R,) int32
+    bucket = bucket_ref[...][:, 0]                            # (R,) int32
     vals = vals_ref[...]                                      # (R, V) f32
-    r = keys.shape[0]
+    owns = owns_ref[...][:, 0] > 0                            # (R,) bool
+    r = bucket.shape[0]
     b = n_buckets
 
-    ku = keys.astype(jnp.uint32)
-    h = (ku * np.uint32(0x9E3779B1)) >> np.uint32(32 - int(np.log2(b)))
-    bucket = h.astype(jnp.int32)                              # (R,)
-
-    # one-hot (B, R): bucket membership, built on the VPU.
+    # one-hot (B, R): bucket membership of owned rows, built on the VPU.
     iota_b = jax.lax.broadcasted_iota(jnp.int32, (b, r), 0)
-    member = (bucket[None, :] == iota_b)                      # (B, R) bool
-
-    # --- per-block claimant: lowest row index in each bucket ----------------
-    iota_r = jax.lax.broadcasted_iota(jnp.int32, (b, r), 1)
-    first_idx = jnp.min(jnp.where(member, iota_r, r), axis=1)  # (B,)
-    nonempty = first_idx < r
-    first_sel = (iota_r == first_idx[:, None]) & member        # (B, R) one-hot
-    fsel_f = first_sel.astype(jnp.float32)
-    khi, klo = _halves(ku)
-    blk_hi = jax.lax.dot(fsel_f, khi[:, None],
-                         precision=jax.lax.Precision.HIGHEST)[:, 0]
-    blk_lo = jax.lax.dot(fsel_f, klo[:, None],
-                         precision=jax.lax.Precision.HIGHEST)[:, 0]
-    blk_key = jnp.where(nonempty, _recombine(blk_hi, blk_lo), _SENT)
-
-    # --- merge with the global bucket table (claim if empty) ---------------
-    cur = bkey_ref[...][:, 0]
-    newkey = jnp.where(cur == _SENT, blk_key, cur)
-    bkey_ref[...] = newkey[:, None]
-
-    # --- ownership: does each row's key match its bucket's owner? ----------
-    # gather owner key per row with exact one-hot matmuls over 16-bit halves
-    mem_f = member.astype(jnp.float32)                        # (B, R)
-    ohi, olo = _halves(newkey.astype(jnp.uint32))
-    row_hi = jax.lax.dot(ohi[None, :], mem_f,
-                         precision=jax.lax.Precision.HIGHEST)[0]
-    row_lo = jax.lax.dot(olo[None, :], mem_f,
-                         precision=jax.lax.Precision.HIGHEST)[0]
-    owner_key = _recombine(row_hi, row_lo)                    # (R,)
-    owns = keys == owner_key
-    ovf_ref[...] = (~owns).astype(jnp.int32)[:, None]
-
-    owned = member & owns[None, :]                            # (B, R)
+    owned = (bucket[None, :] == iota_b) & owns[None, :]       # (B, R)
     owned_f = owned.astype(jnp.float32)
 
     # --- aggregate on the MXU ----------------------------------------------
-    cnt_ref[...] = cnt_ref[...] + jnp.round(jax.lax.dot(
+    cnt_ref[0] = cnt_ref[0] + jnp.round(jax.lax.dot(
         owned_f, jnp.ones((r, 1), jnp.float32),
         precision=jax.lax.Precision.HIGHEST)).astype(jnp.int32)
-    sum_ref[...] = sum_ref[...] + jax.lax.dot(
+    sum_ref[0] = sum_ref[0] + jax.lax.dot(
         owned_f, vals.astype(jnp.float32),
         precision=jax.lax.Precision.HIGHEST)
 
@@ -131,8 +101,29 @@ def _kernel(n_buckets, keys_ref, vals_ref, bkey_ref, cnt_ref, sum_ref,
     blk_min, blk_max = jax.lax.fori_loop(
         0, b // chunk, mm_step,
         (jnp.full((b, nv), _BIG), jnp.full((b, nv), -_BIG)))
-    min_ref[...] = jnp.minimum(min_ref[...], blk_min)
-    max_ref[...] = jnp.maximum(max_ref[...], blk_max)
+    min_ref[0] = jnp.minimum(min_ref[0], blk_min)
+    max_ref[0] = jnp.maximum(max_ref[0], blk_max)
+
+
+def tree_merge(cnt, s, mn, mx):
+    """Log-depth pairwise merge of per-partial aggregates over axis 0.
+
+    cnt (P, B, 1) i32; s/mn/mx (P, B, V) f32. The combine is associative
+    (add / add / min / max), so the merge tree is exact for count/min/max
+    and order-insensitive up to f32 rounding for sum.
+    """
+    while cnt.shape[0] > 1:
+        p = cnt.shape[0]
+        if p % 2:       # odd level: pad one identity partial
+            cnt = jnp.concatenate([cnt, jnp.zeros_like(cnt[:1])])
+            s = jnp.concatenate([s, jnp.zeros_like(s[:1])])
+            mn = jnp.concatenate([mn, jnp.full_like(mn[:1], _BIG)])
+            mx = jnp.concatenate([mx, jnp.full_like(mx[:1], -_BIG)])
+        cnt = cnt[0::2] + cnt[1::2]
+        s = s[0::2] + s[1::2]
+        mn = jnp.minimum(mn[0::2], mn[1::2])
+        mx = jnp.maximum(mx[0::2], mx[1::2])
+    return cnt[0], s[0], mn[0], mx[0]
 
 
 @functools.partial(jax.jit,
@@ -144,36 +135,62 @@ def group_aggregate(keys: jnp.ndarray, values: jnp.ndarray, *,
     """keys (N,1) int32, values (N,V) f32; N % block_rows == 0.
 
     Returns (bucket_keys (B,1) i32, count (B,1) i32, sum (B,V) f32,
-             min (B,V) f32, max (B,V) f32, overflow_mask (N,1) i32).
+             min (B,V) f32, max (B,V) f32, overflow_mask (N,1) i32) —
+    the same contract as kernels/ref.py:group_aggregate, field for field.
     """
     n, _ = keys.shape
     v = values.shape[1]
     assert n % block_rows == 0
     assert n_buckets & (n_buckets - 1) == 0, "n_buckets must be a power of 2"
-    nb = n // block_rows
-    kern = functools.partial(_kernel, n_buckets)
-    return pl.pallas_call(
+    k1 = keys[:, 0]
+
+    # --- sort by bucket + global first-claim ownership (pure XLA) ----------
+    bucket = ref.bucket_of(k1, n_buckets)
+    order, sb = ref.sort_by_bucket(bucket, n_buckets)
+    start, _end, nonempty = ref.segment_spans(sb, n_buckets)
+    claimed = jnp.where(nonempty, k1[order[start]], _SENT)
+    owns = k1 == claimed[bucket]
+    ovf = (~owns).astype(jnp.int32)[:, None]        # original row order
+
+    # --- grid shape: P partials x G blocks each, P <= MAX_PARTIALS ---------
+    sv = values[order]
+    so = owns[order].astype(jnp.int32)[:, None]
+    nb_total = n // block_rows
+    p = min(nb_total, MAX_PARTIALS)
+    g = -(-nb_total // p)
+    pad_rows = p * g * block_rows - n
+    if pad_rows:
+        # inert pad: owns=0 rows contribute to no bucket (bucket id is
+        # irrelevant once the owned one-hot masks them out)
+        sb = jnp.concatenate([sb, jnp.zeros((pad_rows,), sb.dtype)])
+        sv = jnp.concatenate([sv, jnp.zeros((pad_rows, v), sv.dtype)])
+        so = jnp.concatenate([so, jnp.zeros((pad_rows, 1), so.dtype)])
+
+    # --- block-local one-hot MXU aggregation over the sorted stream --------
+    kern = functools.partial(_block_kernel, n_buckets)
+    cnt_p, sum_p, min_p, max_p = pl.pallas_call(
         kern,
-        grid=(nb,),
+        grid=(p, g),
         in_specs=[
-            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, v), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i, j, g=g: (i * g + j, 0)),
+            pl.BlockSpec((block_rows, v), lambda i, j, g=g: (i * g + j, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i, j, g=g: (i * g + j, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((n_buckets, 1), lambda i: (0, 0)),
-            pl.BlockSpec((n_buckets, 1), lambda i: (0, 0)),
-            pl.BlockSpec((n_buckets, v), lambda i: (0, 0)),
-            pl.BlockSpec((n_buckets, v), lambda i: (0, 0)),
-            pl.BlockSpec((n_buckets, v), lambda i: (0, 0)),
-            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, n_buckets, 1), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, n_buckets, v), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, n_buckets, v), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, n_buckets, v), lambda i, j: (i, 0, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n_buckets, 1), jnp.int32),
-            jax.ShapeDtypeStruct((n_buckets, 1), jnp.int32),
-            jax.ShapeDtypeStruct((n_buckets, v), jnp.float32),
-            jax.ShapeDtypeStruct((n_buckets, v), jnp.float32),
-            jax.ShapeDtypeStruct((n_buckets, v), jnp.float32),
-            jax.ShapeDtypeStruct((n, 1), jnp.int32),
+            jax.ShapeDtypeStruct((p, n_buckets, 1), jnp.int32),
+            jax.ShapeDtypeStruct((p, n_buckets, v), jnp.float32),
+            jax.ShapeDtypeStruct((p, n_buckets, v), jnp.float32),
+            jax.ShapeDtypeStruct((p, n_buckets, v), jnp.float32),
         ],
         interpret=interpret,
-    )(keys, values)
+    )(sb[:, None], sv, so)
+
+    # --- tree merge of the partials ----------------------------------------
+    cnt, s, mn, mx = tree_merge(cnt_p, sum_p, min_p, max_p)
+    return claimed[:, None], cnt, s, mn, mx, ovf

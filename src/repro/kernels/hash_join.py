@@ -14,6 +14,11 @@ Build keys must be unique (enforced by the ops.py wrapper): each probe row
 matches at most one build row, so M is one-hot per row and the matmul IS
 the value gather. 16-bit key halves keep the f32 compare exact (same trick
 as hash_group).
+
+K = 0 (an empty co-partitioned build shard — a cluster node whose probe
+partition's keys all miss) is handled by the ops.py wrapper: it
+short-circuits to a no-match result rather than lowering a zero-row build
+block, so the kernel itself always sees K >= 1.
 """
 from __future__ import annotations
 

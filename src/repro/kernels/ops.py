@@ -262,6 +262,8 @@ def hash_join(probe_keys, build_keys, build_vals, *, block_rows: int = 256,
                 "build keys must be unique for a small-table join")
     n = probe_keys.shape[0]
     k, v = build_vals.shape
+    if k == 0:      # empty co-partitioned build shard: nothing matches
+        return (jnp.zeros((n, v), jnp.float32), jnp.zeros((n,), bool))
     pk = _pad_to(probe_keys.astype(jnp.int32)[:, None], 0, block_rows,
                  value=ref.KEY_SENTINEL)        # sentinel never matches
     bkp = _pad_to(build_keys.astype(jnp.int32)[:, None], 0, 8,
@@ -306,7 +308,12 @@ def hash_join_xla(probe_keys, build_keys, build_vals):
 
     probe_keys (N,) i32; build_keys (K,) i32 unique; build_vals (K, V) f32.
     Returns (joined (N, V) — matched build row or zeros, hit (N,) bool).
+    K may be 0 (an empty co-partitioned build shard): nothing matches.
     """
+    if build_keys.shape[0] == 0:
+        n = probe_keys.shape[0]
+        return (jnp.zeros((n, build_vals.shape[1]), jnp.float32),
+                jnp.zeros((n,), bool))
     order = jnp.argsort(build_keys)
     sk = build_keys[order]
     sv = build_vals[order]

@@ -68,6 +68,76 @@ def bucket_of(keys: jnp.ndarray, n_buckets: int) -> jnp.ndarray:
     return (h >> shift).astype(jnp.int32)
 
 
+def sort_by_bucket(bucket: jnp.ndarray, n_buckets: int):
+    """Stable sort of rows by bucket id -> (order, sorted_buckets).
+
+    Fast path: pack (bucket, row) into ONE uint32 composite key
+    `bucket * N + row` and value-sort it — stability is by construction
+    (rows of a bucket keep ascending index), and XLA's single-array
+    primitive sort is ~5x faster on CPU than the comparator-pair sort
+    argsort lowers to. Falls back to stable argsort when the composite
+    would overflow 32 bits (n_buckets * N > 2^32).
+    """
+    n = bucket.shape[0]
+    if n and n_buckets * n <= 2**32:
+        comp = jnp.sort(bucket.astype(jnp.uint32) * jnp.uint32(n)
+                        + jnp.arange(n, dtype=jnp.uint32))
+        order = (comp % jnp.uint32(n)).astype(jnp.int32)
+        return order, (comp // jnp.uint32(n)).astype(jnp.int32)
+    order = jnp.argsort(bucket, stable=True)
+    return order.astype(jnp.int32), bucket[order]
+
+
+def segment_spans(sorted_seg_ids: jnp.ndarray, n_segments: int):
+    """Per-segment [start, end] row spans of a bucket-sorted id array.
+
+    sorted_seg_ids: (N,) int32, non-decreasing. Returns (start (S,), end (S,),
+    nonempty (S,) bool) where end is the INCLUSIVE last row (clipped to a
+    valid index; mask with `nonempty` before trusting it).
+    """
+    n = sorted_seg_ids.shape[0]
+    seg = jnp.arange(n_segments, dtype=sorted_seg_ids.dtype)
+    lo = jnp.searchsorted(sorted_seg_ids, seg, side="left")
+    hi = jnp.searchsorted(sorted_seg_ids, seg, side="right")
+    nonempty = hi > lo
+    return (jnp.clip(lo, 0, max(n - 1, 0)).astype(jnp.int32),
+            jnp.clip(hi - 1, 0, max(n - 1, 0)).astype(jnp.int32), nonempty)
+
+
+def segmented_reduce(sums: jnp.ndarray, mins: jnp.ndarray, maxs: jnp.ndarray,
+                     starts: jnp.ndarray, counts: jnp.ndarray | None = None):
+    """Inclusive segmented scan of (sum, min, max[, count]) in one pass.
+
+    sums/mins/maxs: (N, V); starts: (N,) bool segment-start flags over rows
+    already sorted by segment; counts: optional (N,) int per-row weights
+    scanned with the same flag-reset combine (the group-merge path needs
+    exact int totals; group_aggregate uses a plain cumsum instead). Lowers
+    to `jax.lax.associative_scan` — a log-depth data-parallel tree, never a
+    serialized scatter. Row i of each output holds the running reduction
+    since its segment's first row, so the segment totals sit at the segment
+    END rows (gather via segment_spans). Returns (sum, min, max) or
+    (count, sum, min, max) when counts is given.
+    """
+    f = starts[:, None]
+
+    def comb(a, b):
+        sa, mna, mxa, *ca, fa = a
+        sb, mnb, mxb, *cb, fb = b
+        out = (jnp.where(fb, sb, sa + sb),
+               jnp.where(fb, mnb, jnp.minimum(mna, mnb)),
+               jnp.where(fb, mxb, jnp.maximum(mxa, mxb)))
+        if ca:
+            out += (jnp.where(fb[:, 0], cb[0], ca[0] + cb[0]),)
+        return out + (fa | fb,)
+
+    if counts is None:
+        s, mn, mx, _ = jax.lax.associative_scan(comb, (sums, mins, maxs, f))
+        return s, mn, mx
+    s, mn, mx, c, _ = jax.lax.associative_scan(
+        comb, (sums, mins, maxs, counts, f))
+    return c, s, mn, mx
+
+
 def group_aggregate(keys: jnp.ndarray, values: jnp.ndarray, n_buckets: int):
     """Hash-grouped aggregation with first-claim buckets + overflow.
 
@@ -77,6 +147,15 @@ def group_aggregate(keys: jnp.ndarray, values: jnp.ndarray, n_buckets: int):
     (paper: cuckoo-collision rows are shipped to the client for software
     post-processing).
 
+    Lowering: sort-based segment-reduce. Rows are stably sorted by bucket
+    (composite-key value sort, `sort_by_bucket`), so each bucket is a
+    contiguous segment whose FIRST row is the lowest-original-index row
+    (the claimant); count comes from an exact int cumulative sum and
+    sum/min/max from one segmented associative scan (log-depth tree) —
+    all data-parallel primitives, replacing the `.at[].add/min/max`
+    scatters that serialized on the host and capped cluster group
+    scale-out (ROADMAP PR 3 follow-up).
+
     Returns dict with:
       bucket_keys (B,) int32 (KEY_SENTINEL if unclaimed)
       count (B,) int32 ; sum/min/max (B, V) float32 (claimed keys only)
@@ -84,20 +163,29 @@ def group_aggregate(keys: jnp.ndarray, values: jnp.ndarray, n_buckets: int):
     """
     n, v = values.shape
     b = bucket_of(keys, n_buckets)
-    first_idx = jnp.full((n_buckets,), n, dtype=jnp.int32)
-    first_idx = first_idx.at[b].min(jnp.arange(n, dtype=jnp.int32))
-    claimed = jnp.where(first_idx < n, keys[jnp.clip(first_idx, 0, n - 1)],
-                        KEY_SENTINEL)
+    order, sb = sort_by_bucket(b, n_buckets)
+    start, end, nonempty = segment_spans(sb, n_buckets)
+    # first-claim: after the stable sort, each segment's first row is the
+    # bucket's lowest-original-index row
+    claimed = jnp.where(nonempty, keys[order[start]], KEY_SENTINEL)
     owns = keys == claimed[b]
     ovf = ~owns
-    w = owns.astype(values.dtype)
-    count = jnp.zeros((n_buckets,), jnp.int32).at[b].add(owns.astype(jnp.int32))
-    s = jnp.zeros((n_buckets, v), values.dtype).at[b].add(values * w[:, None])
+    so = owns[order]
+    sv = values[order]
+    # count: exact int32 prefix-sum difference over owned rows
+    oc = so.astype(jnp.int32)
+    csum = jnp.cumsum(oc)
+    count = jnp.where(nonempty, csum[end] - (csum[start] - oc[start]), 0)
+    # sum/min/max: one segmented scan; non-owned rows carry the identity
     big = jnp.asarray(jnp.finfo(values.dtype).max, values.dtype)
-    mn = jnp.full((n_buckets, v), big, values.dtype).at[b].min(
-        jnp.where(owns[:, None], values, big))
-    mx = jnp.full((n_buckets, v), -big, values.dtype).at[b].max(
-        jnp.where(owns[:, None], values, -big))
+    flags = jnp.concatenate([jnp.ones((min(n, 1),), bool), sb[1:] != sb[:-1]])
+    ssum, smin, smax = segmented_reduce(
+        jnp.where(so[:, None], sv, 0), jnp.where(so[:, None], sv, big),
+        jnp.where(so[:, None], sv, -big), flags)
+    ne = nonempty[:, None]
+    s = jnp.where(ne, ssum[end], 0)
+    mn = jnp.where(ne, smin[end], big)
+    mx = jnp.where(ne, smax[end], -big)
     return dict(bucket_keys=claimed, count=count, sum=s, min=mn, max=mx,
                 overflow_mask=ovf)
 

@@ -1,0 +1,233 @@
+"""Co-partitioned build-probe joins (PR 4 tentpole).
+
+Contract: when a build table is allocated with `co_partition=<probe>`, its
+rows land on whichever node the probe's key rule assigned that key, so
+
+  (a) every node answers the join from its LOCAL build shard and the
+      merged result is byte-identical to solo AND to the replicated
+      broadcast path, for hash and skew probes at 1..4 nodes;
+  (b) the build table is written exactly ONCE cluster-wide
+      (bytes_written == single-copy size, vs N x under replicate=True);
+  (c) a probe with no key rule (range partitioned) silently falls back to
+      the replicated broadcast layout — co-location is impossible there;
+  (d) a build that is partitioned but NOT co-partitioned with the probe is
+      refused loudly (a silent scatter would drop matches).
+"""
+import numpy as np
+import pytest
+
+from repro.core import operators as op
+from repro.core.client import (FarviewError, FViewNode, alloc_table_mem,
+                               farview_request, open_connection, table_write)
+from repro.core.cluster import FarCluster
+from repro.core.table import FTable, Column
+from repro.distributed.sharding import CoPartition, co_partition_spec
+
+N = 700
+PCOLS = tuple(Column(f"c{i}", "i32" if i == 0 else "f32") for i in range(6))
+BCOLS = (Column("k", "i32"), Column("v"), Column("w"))
+PIPE = (op.JoinSmall(probe_key="c0", build_table="dim",
+                     build_key="k", build_cols=("v", "w")),)
+
+
+@pytest.fixture(scope="module")
+def tables():
+    rng = np.random.default_rng(17)
+    d = {"c0": rng.integers(0, 96, N).astype(np.int32)}
+    for i in range(1, 6):
+        d[f"c{i}"] = rng.integers(-50, 50, N).astype(np.float32)
+    bk = rng.permutation(128)[:64].astype(np.int32)   # half the keys match
+    bd = {"k": bk, "v": rng.integers(0, 99, 64).astype(np.float32),
+          "w": rng.integers(0, 99, 64).astype(np.float32)}
+    return d, bd
+
+
+def solo_ref(tables):
+    d, bd = tables
+    node = FViewNode(64 * 2**20)
+    qp = open_connection(node)
+    bft = FTable("dim", BCOLS, n_rows=64)
+    alloc_table_mem(qp, bft)
+    table_write(qp, bft, bft.encode(bd))
+    ft = FTable("t", PCOLS, n_rows=N)
+    alloc_table_mem(qp, ft)
+    table_write(qp, ft, ft.encode(d))
+    return farview_request(qp, ft, PIPE).finalize()
+
+
+def cluster_join(tables, k, partitioner, *, co: bool):
+    d, bd = tables
+    cl = FarCluster(k)
+    cqp = cl.open_connection()
+    ct = cl.alloc_table_mem(cqp, FTable("t", PCOLS, n_rows=N),
+                            partitioner=partitioner, keys=d["c0"])
+    cl.table_write(cqp, ct, FTable("t", PCOLS, n_rows=N).encode(d))
+    bft = FTable("dim", BCOLS, n_rows=64)
+    w0 = cl.stats.bytes_written
+    if co:
+        cb = cl.alloc_table_mem(cqp, bft, co_partition=ct, keys=bd["k"])
+    else:
+        cb = cl.alloc_table_mem(cqp, bft, replicate=True)
+    cl.table_write(cqp, cb, bft.encode(bd))
+    written = cl.stats.bytes_written - w0
+    res = cl.farview_request(cqp, ct, PIPE).finalize()
+    return res, written, cb, cl
+
+
+@pytest.mark.parametrize("partitioner", ("hash", "skew"))
+@pytest.mark.parametrize("k", (1, 2, 3, 4))
+def test_byte_identical_and_single_copy(tables, k, partitioner):
+    ref = solo_ref(tables)
+    res, written, cb, _ = cluster_join(tables, k, partitioner, co=True)
+    assert res.count == ref.count
+    np.testing.assert_array_equal(np.asarray(res.rows), np.asarray(ref.rows))
+    assert res.shipped_bytes == ref.shipped_bytes
+    # (b) no build replicas: exactly the single-copy bytes hit the pools
+    assert written == FTable("dim", BCOLS, n_rows=64).n_bytes
+    assert not cb.replicated
+
+
+@pytest.mark.parametrize("k", (2, 3))
+def test_matches_replicated_path(tables, k):
+    co_res, co_written, _, _ = cluster_join(tables, k, "hash", co=True)
+    re_res, re_written, _, _ = cluster_join(tables, k, "hash", co=False)
+    np.testing.assert_array_equal(np.asarray(co_res.rows),
+                                  np.asarray(re_res.rows))
+    assert co_res.count == re_res.count
+    single = FTable("dim", BCOLS, n_rows=64).n_bytes
+    assert co_written == single
+    assert re_written == k * single       # the broadcast join's N x cost
+
+
+def test_empty_build_shards_allocated(tables):
+    """A key distribution can leave a node with ZERO build rows; the shard
+    is still allocated + cataloged so that node's local join resolves (and
+    finds no matches, correctly)."""
+    d, bd = tables
+    cl = FarCluster(4)
+    cqp = cl.open_connection()
+    ct = cl.alloc_table_mem(cqp, FTable("t", PCOLS, n_rows=N),
+                            partitioner="skew", keys=d["c0"])
+    cl.table_write(cqp, ct, FTable("t", PCOLS, n_rows=N).encode(d))
+    # a single-key build: 3 of 4 nodes own zero build rows
+    bft = FTable("dim", BCOLS, n_rows=1)
+    bd1 = {"k": bd["k"][:1], "v": bd["v"][:1], "w": bd["w"][:1]}
+    cb = cl.alloc_table_mem(cqp, bft, co_partition=ct, keys=bd1["k"])
+    assert all(p is not None for p in cb.parts)
+    assert sum(p.n_rows == 0 for p in cb.parts) >= 3
+    cl.table_write(cqp, cb, bft.encode(bd1))
+    res = cl.farview_request(cqp, ct, PIPE).finalize()
+    exp = int((d["c0"] == int(bd1["k"][0])).sum())
+    assert res.count == exp
+
+
+def test_range_probe_falls_back_to_replicate(tables):
+    d, bd = tables
+    cl = FarCluster(3)
+    cqp = cl.open_connection()
+    ct = cl.alloc_table_mem(cqp, FTable("t", PCOLS, n_rows=N))   # range
+    cl.table_write(cqp, ct, FTable("t", PCOLS, n_rows=N).encode(d))
+    bft = FTable("dim", BCOLS, n_rows=64)
+    cb = cl.alloc_table_mem(cqp, bft, co_partition=ct, keys=bd["k"])
+    assert cb.replicated       # (c) automatic broadcast fallback
+    cl.table_write(cqp, cb, bft.encode(bd))
+    ref = solo_ref(tables)
+    res = cl.farview_request(cqp, ct, PIPE).finalize()
+    np.testing.assert_array_equal(np.asarray(res.rows), np.asarray(ref.rows))
+
+
+def test_incompatible_build_layout_refused(tables):
+    d, bd = tables
+    cl = FarCluster(2)
+    cqp = cl.open_connection()
+    ct = cl.alloc_table_mem(cqp, FTable("t", PCOLS, n_rows=N),
+                            partitioner="hash", keys=d["c0"])
+    cl.table_write(cqp, ct, FTable("t", PCOLS, n_rows=N).encode(d))
+    bft = FTable("dim", BCOLS, n_rows=64)
+    cb = cl.alloc_table_mem(cqp, bft)          # range-partitioned build
+    cl.table_write(cqp, cb, bft.encode(bd))
+    with pytest.raises(FarviewError, match="co-partitioned"):
+        cl.farview_request(cqp, ct, PIPE)
+
+
+def test_spec_only_matches_itself(tables):
+    """Co-location holds only for the CAPTURED spec object: a spec does
+    not know which column its keys came from, so two structurally-equal
+    hash rules (same n_parts) must NOT count as co-located — a probe
+    hash-partitioned on a non-join column would silently drop matches."""
+    h2a = co_partition_spec("hash", 2, np.arange(10))
+    h2b = co_partition_spec("hash", 2, np.arange(99))
+    sk = co_partition_spec("skew", 2, np.asarray([1, 1, 1, 2, 3]))
+    assert h2a.compatible_with(h2a)
+    assert not h2a.compatible_with(h2b)
+    assert sk.compatible_with(sk)
+    assert not sk.compatible_with(h2a)
+    assert not h2a.compatible_with(None)
+
+
+def test_probe_partitioned_on_other_column_refused(tables):
+    """Probe hash-partitioned on a NON-join column, build hash-partitioned
+    on the join key: same rule shape, different key domain — equal join
+    keys are NOT co-located, so the dispatch must refuse rather than
+    return a silently-partial join."""
+    d, bd = tables
+    cl = FarCluster(2)
+    cqp = cl.open_connection()
+    ct = cl.alloc_table_mem(cqp, FTable("t", PCOLS, n_rows=N),
+                            partitioner="hash", keys=d["c1"])   # not c0!
+    cl.table_write(cqp, ct, FTable("t", PCOLS, n_rows=N).encode(d))
+    bft = FTable("dim", BCOLS, n_rows=64)
+    cb = cl.alloc_table_mem(cqp, bft, partitioner="hash", keys=bd["k"])
+    cl.table_write(cqp, cb, bft.encode(bd))
+    with pytest.raises(FarviewError, match="co-partitioned"):
+        cl.farview_request(cqp, ct, PIPE)
+
+
+def test_replicated_probe_partitioned_build_refused(tables):
+    """A replicated probe is served whole from node 0, which holds only
+    node 0's shard of a partitioned build — refuse instead of silently
+    dropping the other shards' matches."""
+    d, bd = tables
+    cl = FarCluster(2)
+    cqp = cl.open_connection()
+    ct = cl.alloc_table_mem(cqp, FTable("t", PCOLS, n_rows=N),
+                            replicate=True)
+    cl.table_write(cqp, ct, FTable("t", PCOLS, n_rows=N).encode(d))
+    bft = FTable("dim", BCOLS, n_rows=64)
+    cb = cl.alloc_table_mem(cqp, bft, partitioner="hash", keys=bd["k"])
+    cl.table_write(cqp, cb, bft.encode(bd))
+    with pytest.raises(FarviewError, match="co-partitioned"):
+        cl.farview_request(cqp, ct, PIPE)
+    # a replicated build serves the replicated probe fine
+    cl2 = FarCluster(2)
+    cqp2 = cl2.open_connection()
+    ct2 = cl2.alloc_table_mem(cqp2, FTable("t", PCOLS, n_rows=N),
+                              replicate=True)
+    cl2.table_write(cqp2, ct2, FTable("t", PCOLS, n_rows=N).encode(d))
+    cb2 = cl2.alloc_table_mem(cqp2, bft, replicate=True)
+    cl2.table_write(cqp2, cb2, bft.encode(bd))
+    ref = solo_ref(tables)
+    res = cl2.farview_request(cqp2, ct2, PIPE).finalize()
+    assert res.count == ref.count
+
+
+def test_co_partition_owner_consistency():
+    """The same key always lands on the same node as the referenced
+    partitioning put it — including keys the probe never held (hash rule
+    fallback for skew)."""
+    rng = np.random.default_rng(23)
+    probe_keys = rng.integers(0, 50, 400)
+    for kind in ("hash", "skew"):
+        spec = co_partition_spec(kind, 3, probe_keys)
+        assert isinstance(spec, CoPartition)
+        from repro.distributed.sharding import partition_rows
+        parts = partition_rows(400, 3, kind, keys=probe_keys)
+        owner = np.empty(400, np.int64)
+        for i, p in enumerate(parts):
+            owner[p] = i
+        np.testing.assert_array_equal(spec.owners_of(probe_keys), owner)
+        # unseen keys are still assigned deterministically in range
+        unseen = spec.owners_of(np.arange(1000, 1050))
+        assert ((unseen >= 0) & (unseen < 3)).all()
+    assert co_partition_spec("range", 3, probe_keys) is None
+    assert co_partition_spec("hash", 3, None) is None

@@ -1,0 +1,137 @@
+"""Adversarial overflow-heavy grouping: key sets where most rows COLLIDE
+(many distinct keys hashing into few buckets — including keys crafted to
+land in ONE bucket), so nearly every row rides the overflow path instead of
+the bucket table. Verifies the segment-reduce aggregation (kernels/ref.py)
+and the device-side partial merge (offload.merge_groups_device) stay exact
+vs `group_aggregate_exact`, solo and at 1/2/4 cluster nodes.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import operators as op
+from repro.core.client import (FViewNode, alloc_table_mem, farview_request,
+                               merge_group_partials, open_connection,
+                               table_write)
+from repro.core.cluster import FarCluster
+from repro.core.table import FTable, Column
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+COLS = (Column("c0", "i32"), Column("c1"), Column("c2"))
+
+
+def same_bucket_keys(n_distinct: int, n_buckets: int,
+                     bucket: int = 0) -> np.ndarray:
+    """Distinct keys that all Fibonacci-hash into one bucket — every row
+    but the claimant overflows."""
+    cand = np.arange(1, 200000, dtype=np.int32)
+    b = np.asarray(kref.bucket_of(jnp.asarray(cand), n_buckets))
+    picked = cand[b == bucket][:n_distinct]
+    assert len(picked) == n_distinct, "search range too small"
+    return picked
+
+
+def assert_exact(merged: dict, keys: np.ndarray, vals: np.ndarray) -> None:
+    exact = kref.group_aggregate_exact(keys, vals)
+    assert set(merged) == set(exact)
+    for k in exact:
+        c, s, mn, mx = merged[k]
+        ce, se, mne, mxe = exact[k]
+        assert c == ce, k
+        np.testing.assert_array_equal(np.asarray(s, np.float64), se)
+        np.testing.assert_array_equal(np.asarray(mn, np.float64), mne)
+        np.testing.assert_array_equal(np.asarray(mx, np.float64), mxe)
+
+
+def adversarial_sets(rng):
+    nb = 32
+    # (a) every key in ONE bucket: 1 claimed row, n-1 overflow rows
+    one = same_bucket_keys(60, nb)
+    keys_a = one[rng.integers(0, len(one), 480)]
+    # (b) 500 distinct keys >> 32 buckets: most rows overflow somewhere
+    keys_b = rng.integers(0, 500, 480).astype(np.int32)
+    # (c) heavy skew: one dominant key + a long colliding tail
+    keys_c = np.concatenate([np.full(400, int(one[0]), np.int32),
+                             one[:40], one[:40]])
+    return nb, [keys_a, keys_b, keys_c]
+
+
+def test_kernel_overflow_heavy_exact(rng):
+    """Kernel + overflow merge (solo, kops.group_aggregate_full) is exact
+    when nearly all rows collide."""
+    nb, key_sets = adversarial_sets(rng)
+    for i, keys in enumerate(key_sets):
+        vals = rng.integers(-9, 9, (len(keys), 2)).astype(np.float32)
+        got = kops.group_aggregate_full(jnp.asarray(keys),
+                                        jnp.asarray(vals), n_buckets=nb)
+        exact = kref.group_aggregate_exact(keys, vals)
+        assert set(got) == set(exact)
+        for k in exact:
+            assert got[k][0] == exact[k][0]
+            np.testing.assert_array_equal(np.asarray(got[k][1], np.float64),
+                                          exact[k][1])
+        raw = kops.group_aggregate(jnp.asarray(keys), jnp.asarray(vals),
+                                   n_buckets=nb)
+        if i < 2:   # sets (a)/(b) really are overflow-heavy; (c)'s dominant
+            #         key claims its bucket, so only the tail overflows
+            assert np.asarray(raw["overflow_mask"]).mean() > 0.5
+
+
+def test_solo_pipeline_overflow_heavy_exact(rng):
+    nb, key_sets = adversarial_sets(rng)
+    for keys in key_sets:
+        n = len(keys)
+        node = FViewNode(64 * 2**20)
+        qp = open_connection(node)
+        ft = FTable("t", COLS, n_rows=n)
+        alloc_table_mem(qp, ft)
+        d = {"c0": keys,
+             "c1": rng.integers(-9, 9, n).astype(np.float32),
+             "c2": rng.integers(-9, 9, n).astype(np.float32)}
+        table_write(qp, ft, ft.encode(d))
+        pipe = (op.GroupBy("c0", ("c1", "c2"), n_buckets=nb),)
+        res = farview_request(qp, ft, pipe).finalize()
+        merged = merge_group_partials(ft, pipe, [res]).groups
+        assert_exact(merged, keys, np.stack([d["c1"], d["c2"]], 1))
+
+
+@pytest.mark.parametrize("k", (1, 2, 4))
+@pytest.mark.parametrize("partitioner", ("range", "hash"))
+def test_cluster_overflow_heavy_exact(rng, k, partitioner):
+    """1/2/4 nodes x range/hash partitions: node partials full of overflow
+    rows still merge exactly through the device-side segment-reduce."""
+    nb, key_sets = adversarial_sets(rng)
+    for keys in key_sets:
+        n = len(keys)
+        cl = FarCluster(k)
+        cqp = cl.open_connection()
+        ft = FTable("t", COLS, n_rows=n)
+        ct = cl.alloc_table_mem(
+            cqp, ft, partitioner=partitioner,
+            keys=keys if partitioner != "range" else None)
+        d = {"c0": keys,
+             "c1": rng.integers(-9, 9, n).astype(np.float32),
+             "c2": rng.integers(-9, 9, n).astype(np.float32)}
+        cl.table_write(cqp, ct, ft.encode(d))
+        pipe = (op.GroupBy("c0", ("c1", "c2"), n_buckets=nb),)
+        res = cl.farview_request(cqp, ct, pipe).finalize()
+        assert_exact(res.groups, keys, np.stack([d["c1"], d["c2"]], 1))
+
+
+def test_cluster_distinct_overflow_heavy(rng):
+    nb, key_sets = adversarial_sets(rng)
+    keys = key_sets[0]
+    n = len(keys)
+    for k in (1, 2, 4):
+        cl = FarCluster(k)
+        cqp = cl.open_connection()
+        ft = FTable("t", COLS, n_rows=n)
+        ct = cl.alloc_table_mem(cqp, ft, partitioner="hash", keys=keys)
+        d = {"c0": keys,
+             "c1": np.zeros(n, np.float32), "c2": np.zeros(n, np.float32)}
+        cl.table_write(cqp, ct, ft.encode(d))
+        res = cl.farview_request(
+            cqp, ct, (op.Distinct(("c0",), n_buckets=nb),)).finalize()
+        assert set(res.groups) == set(np.unique(keys).tolist())
