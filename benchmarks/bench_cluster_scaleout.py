@@ -100,9 +100,11 @@ def run() -> None:
     # all clusters up front, then INTERLEAVED rounds: sample k=1,2,4,
     # 1,2,4, ... so host-load drift hits every node count equally instead
     # of whichever happened to run last
-    rounds = {}
+    rounds, clusters = {}, {}
     for k in node_counts:
-        rounds[k] = make_round(*_setup(k, n_clients, n_word, n_str, str_w))
+        cl, requests = _setup(k, n_clients, n_word, n_str, str_w)
+        clusters[k] = cl
+        rounds[k] = make_round(cl, requests)
         for res in rounds[k]():                 # warmup: trace + caches
             res.finalize()
     samples = {k: [] for k in node_counts}
@@ -117,11 +119,14 @@ def run() -> None:
         sec = sorted(samples[k])[len(samples[k]) // 2]          # p50
         thru = rows_per_round / sec
         base = base or thru
+        valid, padded = common.cluster_padding(
+            *clusters[k].catalog.values())
         common.row("cluster_scaleout", f"{k}nodes", sec * 1e6,
                    nodes=k, clients=n_clients,
                    rows_per_round=rows_per_round,
                    mrows_per_s=round(thru / 1e6, 2),
-                   speedup=round(thru / base, 2))
+                   speedup=round(thru / base, 2),
+                   valid_rows=valid, padded_rows=padded)
 
 
 def main() -> None:

@@ -1,0 +1,186 @@
+"""Skew-drift rebalancing: throughput recovery after an induced flip (PR 5).
+
+The lifecycle the tentpole exists for, measured end-to-end at 2/4 nodes:
+
+  pre_flip        hash-partitioned table, uniform keys — balanced scatter.
+  post_flip       the induced skew flip: a rekeying rewrite whose new key
+                  distribution lives entirely on ONE node under the stale
+                  hash rule (`table_write(..., keys=)` routes by the
+                  captured rule, so the pile-up is what a real system
+                  would do to keep co-location). Every verb now waits on
+                  the hot node's straggler dispatch — and the hot
+                  partition rounds up to a 2x pow2 shape bucket on top.
+  post_rebalance  `auto_rebalance` fires on the observed heat (the drift
+                  ratio is reported), live-migrates to the skew-aware LPT
+                  placement, and the same workload is measured again.
+  fresh           the recovery target: a brand-new cluster allocated with
+                  partitioner="skew" over the post-flip keys — what the
+                  map would look like had it never gone stale. The
+                  acceptance bar is post_rebalance within ~15% of this.
+
+Every row carries valid vs pow2-padded row counts (the shape-bucketing
+waste item from ROADMAP) and the drift ratio / recovery fraction, so
+BENCH json records the whole story, not just wall times.
+
+Standalone:  python -m benchmarks.bench_rebalance --json BENCH.json
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import operators as op
+from repro.core.cluster import FarCluster
+from repro.core.table import Column, FTable
+
+COLS = tuple(Column(f"c{i}", "i32" if i == 0 else "f32") for i in range(8))
+N_KEYS = 64
+
+
+def _data(rng, keys):
+    d = {"c0": np.asarray(keys, np.int32)}
+    for i in range(1, 8):
+        d[f"c{i}"] = rng.normal(size=len(keys)).astype(np.float32)
+    return d
+
+
+PIPES = (
+    (op.Select((op.Predicate("c1", "<", 0.2),)),),
+    (op.GroupBy("c0", ("c1", "c2"), n_buckets=256),),
+)
+
+
+def _round(cl, cqp, ct):
+    """One scatter-gather round: all PIPES submitted, then gathered."""
+    pends = [cl.submit_request(cqp, ct, pipe) for pipe in PIPES]
+    for p in pends:
+        p.wait().finalize()
+
+
+def _measure(cl, cqp, ct, n, repeat):
+    """p50 wall time of one round and the implied rows/s throughput."""
+    _round(cl, cqp, ct)                             # warmup: trace + caches
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        _round(cl, cqp, ct)
+        ts.append(time.perf_counter() - t0)
+    sec = sorted(ts)[len(ts) // 2]
+    return sec, len(PIPES) * n / sec
+
+
+def _measure_pair(setups, n, repeat):
+    """p50s for two setups with INTERLEAVED rounds (a, b, a, b, ...), so
+    host-load drift hits both equally — the recovery fraction compares
+    post_rebalance against fresh under the same conditions."""
+    for s in setups:
+        _round(*s)                                  # warmup both first
+    ts = [[], []]
+    for _ in range(repeat):
+        for i, s in enumerate(setups):
+            t0 = time.perf_counter()
+            _round(*s)
+            ts[i].append(time.perf_counter() - t0)
+    out = []
+    for samples in ts:
+        sec = sorted(samples)[len(samples) // 2]
+        out.append((sec, len(PIPES) * n / sec))
+    return out
+
+
+def run() -> None:
+    import gc
+
+    q = common.quick()
+    n = 1 << (15 if q else 19)
+    # keep balanced hash partitions just under their pow2 bucket so the
+    # padded/valid gap isolates the HOT partition's round-up
+    n = int(n * 0.95)
+    repeat = 1 if q else 5
+    node_counts = (2,) if q else (2, 4)
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, N_KEYS, n).astype(np.int32)
+
+    for k in node_counts:
+        # drop earlier phases' (and earlier benches') device buffers
+        # before timing: the migration phases are allocation-heavy and
+        # leftover pools distort the interleaved comparison
+        gc.collect()
+        cl = FarCluster(k, 64 * 2**20)
+        cqp = cl.open_connection()
+        ct = cl.alloc_table_mem(cqp, FTable("t", COLS, n_rows=n),
+                                partitioner="hash", keys=keys)
+        cl.table_write(cqp, ct, FTable("t", COLS, n_rows=n).encode(
+            _data(rng, keys)))
+
+        sec, thru = _measure(cl, cqp, ct, n, repeat)
+        base = thru
+        valid, padded = common.cluster_padding(ct)
+        common.row("rebalance", f"pre_flip_{k}nodes", sec * 1e6,
+                   nodes=k, rows=n, mrows_per_s=round(thru / 1e6, 2),
+                   valid_rows=valid, padded_rows=padded)
+
+        # induced skew flip: every new key is owned by node 0 under the
+        # captured hash rule, so the rekeying write piles the table there
+        owners = ct.co_spec.owners_of(np.arange(N_KEYS))
+        hot = np.arange(N_KEYS)[owners == 0]
+        new_keys = hot[rng.integers(0, len(hot), n)].astype(np.int32)
+        cl.table_write(cqp, ct, FTable("t", COLS, n_rows=n).encode(
+            _data(rng, new_keys)), keys=new_keys)
+
+        sec, thru = _measure(cl, cqp, ct, n, repeat)
+        drift = cl.check_drift()["t"]
+        valid, padded = common.cluster_padding(ct)
+        common.row("rebalance", f"post_flip_{k}nodes", sec * 1e6,
+                   nodes=k, rows=n, mrows_per_s=round(thru / 1e6, 2),
+                   slowdown=round(base / thru, 2),
+                   drift_ratio=round(drift.ratio, 2),
+                   valid_rows=valid, padded_rows=padded)
+        assert drift.drifted, "detector must flag the induced flip"
+
+        plans = cl.auto_rebalance(cqp)
+        moved_bytes = sum(p.total_bytes for p in plans.values())
+
+        # recovery target: a never-stale map over the post-flip keys —
+        # measured INTERLEAVED with the rebalanced cluster so the
+        # recovery fraction is insensitive to host-load drift
+        cl2 = FarCluster(k, 64 * 2**20)
+        cqp2 = cl2.open_connection()
+        ct2 = cl2.alloc_table_mem(cqp2, FTable("t", COLS, n_rows=n),
+                                  partitioner="skew", keys=new_keys)
+        cl2.table_write(cqp2, ct2, FTable("t", COLS, n_rows=n).encode(
+            _data(rng, new_keys)))
+        (rsec, reb), (fsec, fresh) = _measure_pair(
+            [(cl, cqp, ct), (cl2, cqp2, ct2)], n, repeat)
+        valid, padded = common.cluster_padding(ct)
+        common.row("rebalance", f"post_rebalance_{k}nodes", rsec * 1e6,
+                   nodes=k, rows=n, mrows_per_s=round(reb / 1e6, 2),
+                   moved_bytes=moved_bytes,
+                   valid_rows=valid, padded_rows=padded)
+        valid, padded = common.cluster_padding(ct2)
+        common.row("rebalance", f"fresh_{k}nodes", fsec * 1e6,
+                   nodes=k, rows=n, mrows_per_s=round(fresh / 1e6, 2),
+                   recovery_frac=round(reb / fresh, 3),
+                   valid_rows=valid, padded_rows=padded)
+        del cl, cl2, ct, ct2, cqp, cqp2        # release pools before next k
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    if args.quick:
+        common.QUICK = True
+    run()
+    common.print_csv()
+    if args.json:
+        common.write_json(args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -69,6 +69,22 @@ def timeit(fn, *, repeat: int = 5, warmup: int = 2) -> float:
     return ts[len(ts) // 2]
 
 
+def cluster_padding(*ctables) -> tuple[int, int]:
+    """(valid_rows, padded_rows) across cluster tables: what the nodes'
+    pow2 shape-bucketed executables actually run vs the rows that carry
+    data. The gap is the ROADMAP's bucketing-waste item — hash partitions
+    of pow2 tables land at n/k+eps rows and round up to the next bucket —
+    reported per bench row so the waste stays visible in BENCH json."""
+    from repro.core.operators import pow2_bucket
+    valid = padded = 0
+    for ct in ctables:
+        for p in ct.parts:
+            if p is not None and p.n_rows:
+                valid += p.n_rows
+                padded += pow2_bucket(p.n_rows)
+    return valid, padded
+
+
 def row(bench: str, name: str, us: float, **derived):
     r = {"bench": bench, "name": name, "us_per_call": round(us, 1)}
     r.update(derived)

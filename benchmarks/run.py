@@ -12,6 +12,9 @@
   bench_join        (§7 fut.) small-table in-memory join
   bench_resources   Table 1  per-operator resource budget
   bench_far_kv      (LM)     far-KV push-down economics
+  bench_cluster_scaleout     mixed-workload throughput at 1/2/4 nodes
+  bench_rebalance            skew-flip -> drift detect -> live migration
+                             -> throughput recovery vs a fresh map
 
 FV rows time the fused jitted request path with BLOCKING p50 timing (see
 common.timeit); shipped/read byte columns are exact and carry the paper's
@@ -37,8 +40,8 @@ import time
 from benchmarks import (bench_cluster_scaleout, bench_crypto, bench_far_kv,
                         bench_grouping, bench_join, bench_multiclient,
                         bench_multiclient_mixed, bench_projection,
-                        bench_rdma, bench_regex, bench_resources,
-                        bench_selection, common)
+                        bench_rdma, bench_rebalance, bench_regex,
+                        bench_resources, bench_selection, common)
 from benchmarks.common import print_csv, write_json
 
 ALL = {
@@ -54,6 +57,7 @@ ALL = {
     "resources": bench_resources.run,
     "far_kv": bench_far_kv.run,
     "cluster_scaleout": bench_cluster_scaleout.run,
+    "rebalance": bench_rebalance.run,
 }
 
 

@@ -6,7 +6,13 @@ Runs every operator class the paper evaluates — projection + smart
 addressing, selection at three selectivities, distinct, group-by with
 aggregation, regex matching, encryption — on one Farview node with six
 concurrent clients, printing the data-movement economics per query.
+
+FARVIEW_EXAMPLE_ROWS scales every table down proportionally (the tier-1
+example smoke test runs this script at a few hundred rows so the
+documented entry points cannot silently rot).
 """
+import os
+
 import numpy as np
 import jax.numpy as jnp
 
@@ -20,7 +26,13 @@ from repro.kernels import ops as kops
 
 node = FViewNode(256 * 2**20, n_regions=6)
 rng = np.random.default_rng(7)
-n = 16384
+n = int(os.environ.get("FARVIEW_EXAMPLE_ROWS", 16384))
+# the other clients' tables scale with n (floors keep the queries
+# meaningful at smoke-test sizes)
+n_wide = max(64, (n * 2048) // 16384)
+n_str = max(64, (n * 4096) // 16384)
+n_enc = max(64, (n * 4096) // 16384)
+n_join = max(128, (n * 8192) // 16384)
 
 
 def report(tag, res):
@@ -47,9 +59,10 @@ for pct, preds in [
 
 # -- client 2: projection vs smart addressing (Fig. 7) ----------------------
 qp2 = open_connection(node)
-wide = FTable("wide", tuple(Column(f"c{i}") for i in range(128)), n_rows=2048)
+wide = FTable("wide", tuple(Column(f"c{i}") for i in range(128)),
+              n_rows=n_wide)
 alloc_table_mem(qp2, wide)
-wdata = {f"c{i}": rng.normal(size=2048).astype(np.float32)
+wdata = {f"c{i}": rng.normal(size=n_wide).astype(np.float32)
          for i in range(128)}
 table_write(qp2, wide, wide.encode(wdata))
 print("SELECT c0,c1,c2 FROM wide  (512 B tuples)")
@@ -81,7 +94,7 @@ print(f"  verified against numpy: {len(groups)} groups exact")
 # -- client 4: regex matching (Fig. 10) -------------------------------------
 qp4 = open_connection(node)
 strs = []
-for i in range(4096):
+for i in range(n_str):
     s = bytes(rng.integers(97, 123, size=28).astype(np.uint8))
     strs.append((b"order-error" + s) if i % 2 else s)
 sft, mat, lens = string_table("logs", strs, 40)
@@ -93,9 +106,9 @@ print(f"  matched {int(np.asarray(rr.mask).sum())}/{len(strs)} rows, "
 
 # -- client 5: encrypted table, decrypt-on-read (Fig. 11) -------------------
 qp5 = open_connection(node)
-eft = FTable("enc", tuple(Column(f"c{i}") for i in range(8)), n_rows=4096)
+eft = FTable("enc", tuple(Column(f"c{i}") for i in range(8)), n_rows=n_enc)
 alloc_table_mem(qp5, eft)
-edata = db_table_columns(4096, seed=9)
+edata = db_table_columns(n_enc, seed=9)
 ewords = eft.encode(edata)
 u32 = jnp.asarray(ewords.reshape(-1), jnp.float32).view(jnp.uint32)
 enc = kops.crypt(u32, np.array([21, 42], np.uint32), 99)
@@ -112,10 +125,10 @@ report("decrypt+project verified", re_)
 # -- client 6: small-table join (paper §Conclusions future work) ------------
 qp6 = open_connection(node)
 orders = FTable("orders6", (Column("cust", "i32"), Column("amount")),
-                n_rows=8192)
+                n_rows=n_join)
 alloc_table_mem(qp6, orders)
-od = {"cust": rng.integers(0, 200, 8192).astype(np.int32),
-      "amount": rng.random(8192).astype(np.float32)}
+od = {"cust": rng.integers(0, 200, n_join).astype(np.int32),
+      "amount": rng.random(n_join).astype(np.float32)}
 table_write(qp6, orders, orders.encode(od))
 cust = FTable("customers6", (Column("cust", "i32"), Column("discount")),
               n_rows=50)

@@ -7,7 +7,13 @@
 3. push a selection+projection pipeline down to the memory,
 4. compare bytes shipped vs a plain RDMA read,
 5. run a group-by with client-side overflow merge.
+
+FARVIEW_EXAMPLE_ROWS scales the table down (the tier-1 example smoke test
+runs this script at a few hundred rows so the documented entry points
+cannot silently rot).
 """
+import os
+
 import numpy as np
 
 from repro.core import operators as op
@@ -22,7 +28,7 @@ qp = open_connection(node)
 
 # 2. an 8-column table (paper's base tables: 8 attributes)
 rng = np.random.default_rng(0)
-n = 8192
+n = int(os.environ.get("FARVIEW_EXAMPLE_ROWS", 8192))
 ft = FTable("orders", tuple(Column(f"c{i}") for i in range(8)), n_rows=n)
 alloc_table_mem(qp, ft)
 data = {f"c{i}": rng.normal(size=n).astype(np.float32) for i in range(8)}

@@ -124,7 +124,19 @@ class PendingRequest:
 
 
 class FViewNode:
-    """One smart disaggregated memory node (pool + regions + scheduler)."""
+    """One smart disaggregated memory node: a paged `FarPool`, a fixed
+    set of dynamic regions, and the bucket-batched request scheduler.
+
+    `capacity_bytes` sizes the pool (2 MiB page granularity); `n_regions`
+    bounds concurrent connections (each `open_connection` binds a QPair
+    to a free region — the paper evaluates 6, tested to 10); `n_shards`
+    stripes pool pages across device shards; `interpret=None` picks the
+    operator lowering automatically (Pallas kernels on TPU, XLA-native
+    elsewhere — byte-identical results either way). Requests queue via
+    `submit` and dispatch in `flush`'s scheduling rounds: one request per
+    QPair per round (§4.3 fair share), same-(signature, layout, shape
+    bucket) picks coalesced into ONE stacked executable. See
+    docs/architecture.md for the scheduler's bucketing rules."""
 
     def __init__(self, capacity_bytes: int = 64 * 2**20, *, n_regions: int = 6,
                  n_shards: int = 1, interpret: bool | None = None):
@@ -401,6 +413,16 @@ def close_connection(qp: QPair) -> None:
 
 # --------------------------------------------------------------------- memory
 def alloc_table_mem(qp: QPair, ft: FTable) -> FTable:
+    """Allocate pool pages for `ft` on the connection's node (paper §4.2).
+
+    `ft` carries the schema (columns/dtypes, `n_rows`, optional
+    `str_width` for byte-string tables); allocation fills its placement
+    (`table_id`, `pages` — striped across pool shards) and registers the
+    handle in the node's catalog so pipelines can resolve it by name
+    (join build tables are looked up this way at dispatch). Raises
+    `MemoryError` when the pool lacks free pages. The cluster-level
+    `FarCluster.alloc_table_mem` wraps this per node with a partition
+    map; see docs/cluster.md."""
     ft = qp.node.pool.alloc_table(ft)
     qp.node.tables[ft.name] = ft            # catalog entry (paper §4.1)
     return ft
@@ -419,6 +441,22 @@ def table_read(qp: QPair, ft: FTable) -> jnp.ndarray:
     rows = qp.node.pool.read_table(ft)
     qp._bytes_shipped += ft.n_bytes
     qp._bytes_read_pool += ft.n_bytes
+    qp.requests += 1
+    return rows
+
+
+def table_read_rows(qp: QPair, ft: FTable, row_idx) -> jnp.ndarray:
+    """Row-subset one-sided read: ships only the selected LOCAL rows.
+
+    The cluster's live migration copies partition rows node-to-node
+    through this verb (read from the source pool, written to the
+    destination), so the copy traffic is bounded by the rows actually
+    moving and shows up in the QPair/pool byte counters like any other
+    transfer."""
+    rows = qp.node.pool.read_rows(ft, row_idx)
+    n_bytes = int(np.asarray(row_idx).size) * ft.row_words * WORD_BYTES
+    qp._bytes_shipped += n_bytes
+    qp._bytes_read_pool += n_bytes
     qp.requests += 1
     return rows
 
@@ -443,13 +481,17 @@ def farview_request(qp: QPair, ft: FTable, pipeline: tuple,
                     row_ids: np.ndarray | None = None) -> PipelineResult:
     """The paper's extra one-sided verb: read + operator pipeline push-down.
 
-    One fused executable per (signature, layout) does page gather +
-    operators + byte accounting; the returned result is lazy — touch
-    `.count` / `.shipped_bytes` / `.groups` or call `.finalize()` to sync.
-
-    For word tables the rows come from the pool; string tables (regex) pass
-    their byte matrix + lengths explicitly (string ingest keeps a byte-exact
-    sideband since the pool stores f32 words).
+    `pipeline` is an ordered tuple of operator descriptors (see
+    docs/operators.md for every verb's payload and semantics). One fused
+    executable per (signature, layout) does page gather + operators +
+    byte accounting; the returned `PipelineResult` is lazy — touch
+    `.count` / `.shipped_bytes` / `.groups` or call `.finalize()` to
+    sync. Word tables stream from the pool; string tables (regex) pass
+    their byte matrix via `strings=` + `lengths=` (string ingest keeps a
+    byte-exact sideband since the pool stores f32 words). `row_ids`
+    marks a cluster partition dispatch: the rows' original-table indices,
+    which address the pre-crypt keystream and come back as `sel_ids` for
+    the order-restoring gather merge.
     """
     req = submit_request(qp, ft, pipeline, lengths=lengths, strings=strings,
                          row_ids=row_ids)

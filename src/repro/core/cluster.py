@@ -60,6 +60,18 @@ scheduler in its own thread (nodes are independent; XLA releases the GIL),
 which is what the scale-out benchmark (`bench_cluster_scaleout`) measures.
 Per-node read/shipped accounting stays on each node's QPair/pool; the
 ClusterQP and `cluster.stats` expose the aggregate.
+
+The partition map is kept HONEST online (PR 5): every `ClusterTable`
+carries a per-node heat ledger (rows touched at scatter, bytes shipped at
+gather), `check_drift` compares the observed load against the map's
+balanced ideal, and `rebalance` / `auto_rebalance` live-migrate a drifted
+table — moving rows through the pool read path, flipping the VERSIONED
+map (in-flight verbs splice under the map they were scattered with), and
+only then freeing source pages. Co-partitioned join builds are re-placed
+by the re-captured key rule in the same, atomic plan. A rekeying write
+(`table_write(..., keys=)`) routes rows by the captured rule so
+co-location survives data rewrites; the stale-rule pile-up it can cause
+is exactly what the detector flags. Full lifecycle: docs/cluster.md.
 """
 from __future__ import annotations
 
@@ -73,14 +85,26 @@ from repro.core import client as fv
 from repro.core import operators as op_ir
 from repro.core.pipeline import PipelineResult
 from repro.core.pool import PoolStats
-from repro.core.table import FTable, INT_EXACT_LIMIT
+from repro.core.table import FTable, INT_EXACT_LIMIT, WORD_BYTES
+from repro.distributed.rebalance import (MigrationPlan, TableHeat,
+                                         detect_drift, plan_rebalance)
 from repro.distributed.sharding import (CoPartition, co_partition_spec,
                                         partition_rows)
 
 
 @dataclass
 class ClusterTable:
-    """A logical table + its client-side partition map."""
+    """A logical table + its client-side partition map.
+
+    The map is *versioned*: every live-migration flip bumps `version`
+    and replaces `parts` / `part_rows` wholesale. In-flight verbs are
+    unaffected — a `ClusterPending` captures the map arrays it was
+    scattered under, so a dispatch issued at version v still splices
+    byte-identically after the table has moved on to v+1. `heat` is the
+    per-node load ledger the skew-drift detector reads; `keys` is the
+    CURRENT per-row partition-key column (stored client-side whenever the
+    caller provides one) that a rebalance re-runs the skew-aware
+    placement over."""
     schema: FTable                  # the un-partitioned table (schema, n_rows)
     parts: list                     # per-node FTable handle (None = no rows)
     part_rows: list                 # per-node original-row index arrays
@@ -88,6 +112,9 @@ class ClusterTable:
     replicated: bool = False        # full copy on every node (join builds)
     co_spec: CoPartition | None = None  # key->node rule (key partitioners);
     #                                     what a co-partitioned build reuses
+    keys: "np.ndarray | None" = None    # current per-row partition keys
+    version: int = 0                    # bumped on every migration flip
+    heat: TableHeat | None = None       # per-node load (drift detector input)
 
     @property
     def name(self) -> str:
@@ -96,6 +123,11 @@ class ClusterTable:
     @property
     def n_rows(self) -> int:
         return self.schema.n_rows
+
+    @property
+    def part_sizes(self) -> list:
+        """Rows per node under the current map."""
+        return [len(np.asarray(p)) for p in self.part_rows]
 
 
 class ClusterQP:
@@ -121,18 +153,30 @@ class ClusterQP:
 
 
 class ClusterPending:
-    """A scattered Farview verb awaiting its gather."""
+    """A scattered Farview verb awaiting its gather.
+
+    Captures the partition-map slices (`part_rows`) and per-node pending
+    requests it was scattered under, plus the map `version` at scatter
+    time: a live migration may flip the table's map while this verb is in
+    flight, and the gather must splice with the OLD map's row indices —
+    the ones the partitions were actually dispatched with."""
 
     def __init__(self, cluster: "FarCluster", ctable: ClusterTable,
-                 pipeline: tuple, pends: list, part_rows: list):
+                 pipeline: tuple, pends: list, part_rows: list,
+                 node_ids: list):
         self.cluster = cluster
         self.ctable = ctable
         self.pipeline = pipeline
         self.pends = pends          # per-node PendingRequests (owners only)
         self.part_rows = part_rows  # aligned original-row indices
+        self.node_ids = node_ids    # aligned owning-node indices
+        self.version = ctable.version   # map version at scatter time
+        self._merged: PipelineResult | None = None
 
     def wait(self) -> PipelineResult:
         """Flush every involved node and merge the partials."""
+        if self._merged is not None:
+            return self._merged
         flush_err: Exception | None = None
         try:
             self.cluster.flush()
@@ -150,14 +194,36 @@ class ClusterPending:
             # served whole from node 0: the partial IS the solo-shaped
             # response — merging would only rebuild (and for a post-crypt,
             # redundantly decrypt + re-encrypt) a byte-identical copy
-            return partials[0]
-        return fv.merge_group_partials(
-            self.ctable.schema, self.pipeline, partials,
-            n_rows=self.ctable.n_rows, part_rows=self.part_rows)
+            self._merged = partials[0]
+        else:
+            self._merged = fv.merge_group_partials(
+                self.ctable.schema, self.pipeline, partials,
+                n_rows=self.ctable.n_rows, part_rows=self.part_rows)
+            # response-side heat: partials are finalized by the merge, so
+            # the shipped counts are already materialized — recording them
+            # here adds no synchronization (replicated tables skip it and
+            # stay lazy; they have no partitions to rebalance)
+            heat = self.ctable.heat
+            if heat is not None:
+                for node_id, p in zip(self.node_ids, partials):
+                    heat.record_response(node_id, p.shipped_bytes or 0)
+        return self._merged
 
 
 class FarCluster:
-    """N smart memory nodes + client-side scatter-gather dispatch."""
+    """N smart memory nodes behind one verb surface: client-side
+    scatter-gather dispatch over per-table partition maps.
+
+    `n_nodes` independent `FViewNode`s are created with `capacity_bytes`
+    pools and `n_regions` connections each; `partitioner` sets the
+    default placement rule for `alloc_table_mem` (range | hash | skew);
+    `parallel=True` drains the nodes' schedulers in concurrent threads
+    during `flush` (nodes are independent; XLA releases the GIL). The
+    catalog maps table name -> `ClusterTable` (partition map + heat
+    ledger); `check_drift` / `rebalance` / `auto_rebalance` implement the
+    online skew-drift repair loop documented in docs/cluster.md. All
+    merges are byte-identical to a single node holding the whole table —
+    across partitioners, node counts, and live migrations."""
 
     def __init__(self, n_nodes: int, capacity_bytes: int = 64 * 2**20, *,
                  n_regions: int = 6, interpret: bool | None = None,
@@ -245,7 +311,8 @@ class FarCluster:
             parts = self._alloc_parts(cqp, ft, [len(i) for i in part_rows],
                                       alloc_empty=True)
             return self._register(ClusterTable(
-                ft, parts, part_rows, f"co[{spec.kind}]", co_spec=spec))
+                ft, parts, part_rows, f"co[{spec.kind}]", co_spec=spec,
+                keys=np.asarray(keys)))
         if replicate:
             parts = self._alloc_parts(
                 cqp, ft, [ft.n_rows] * self.n_nodes)
@@ -258,9 +325,11 @@ class FarCluster:
         parts = self._alloc_parts(cqp, ft, [len(i) for i in part_rows])
         return self._register(ClusterTable(
             ft, parts, part_rows, kind,
-            co_spec=co_partition_spec(kind, self.n_nodes, keys)))
+            co_spec=co_partition_spec(kind, self.n_nodes, keys),
+            keys=None if keys is None else np.asarray(keys)))
 
     def _register(self, ctable: ClusterTable) -> ClusterTable:
+        ctable.heat = TableHeat.zeros(self.n_nodes)
         self.catalog[ctable.name] = ctable
         return ctable
 
@@ -297,10 +366,24 @@ class FarCluster:
             del self.catalog[ctable.name]
 
     def table_write(self, cqp: ClusterQP, ctable: ClusterTable,
-                    words: np.ndarray) -> None:
+                    words: np.ndarray, *,
+                    keys: np.ndarray | None = None) -> None:
         """Scatter the row matrix to the owning nodes (or all, if
-        replicated). Rows land pre-split; nothing is written twice."""
+        replicated). Rows land pre-split; nothing is written twice.
+
+        `keys=` (one partition-key value per row) marks a REKEYING
+        rewrite: rows are re-routed by the table's captured key->node
+        rule so the co-location contract survives the new key column
+        (equal keys still share a node; co-partitioned join builds placed
+        by the same rule stay aligned — by construction, with no build
+        migration). The routing rule itself is NOT recomputed: a key
+        distribution the rule was never built for may now pile onto one
+        node — which is exactly the skew drift `check_drift` observes and
+        `rebalance` repairs."""
         words = np.asarray(words)
+        if keys is not None:
+            self._rekey(cqp, ctable, words, np.asarray(keys))
+            return
         if ctable.replicated:
             for qp, part in zip(cqp.qps, ctable.parts):
                 fv.table_write(qp, part, words)
@@ -308,6 +391,43 @@ class FarCluster:
         for qp, part, idx in zip(cqp.qps, ctable.parts, ctable.part_rows):
             if part is not None:
                 fv.table_write(qp, part, words[np.asarray(idx)])
+
+    def _rekey(self, cqp: ClusterQP, ctable: ClusterTable,
+               words: np.ndarray, keys: np.ndarray) -> None:
+        """Key-routed rewrite: re-place every row by the CAPTURED rule."""
+        if ctable.replicated:
+            raise ValueError("a replicated table has no key routing")
+        if ctable.co_spec is None:
+            raise ValueError(
+                f"table {ctable.name!r} is {ctable.partitioner}-partitioned "
+                "with no key rule — keys= routing needs a hash/skew/"
+                "co-partitioned table")
+        if keys.shape[0] != ctable.n_rows:
+            raise ValueError(
+                f"write keys cover {keys.shape[0]} rows, "
+                f"table has {ctable.n_rows}")
+        owner = ctable.co_spec.owners_of(keys)
+        idx = np.arange(ctable.n_rows, dtype=np.int64)
+        target = [idx[owner == p] for p in range(self.n_nodes)]
+        changed = any(
+            len(t) != len(c) or not np.array_equal(t, np.asarray(c))
+            for t, c in zip(target, ctable.part_rows))
+        if changed:
+            # the map moves: flip partitions to the new routing first
+            # (same spec object — co-location contracts are untouched),
+            # then write. Data travels once; old partitions' contents are
+            # dead (the caller is overwriting every row) so they are
+            # dropped, not copied.
+            self._retarget(cqp, ctable, target, ctable.co_spec,
+                           copy_data=False)
+            # heat describes load under the map it was observed on; a
+            # flip starts the ledger over so the drift detector judges
+            # the NEW placement on its own traffic
+            ctable.heat.reset()
+        ctable.keys = keys
+        for qp, part, pidx in zip(cqp.qps, ctable.parts, ctable.part_rows):
+            if part is not None and part.n_rows:
+                fv.table_write(qp, part, words[np.asarray(pidx)])
 
     def table_read(self, cqp: ClusterQP, ctable: ClusterTable) -> jnp.ndarray:
         """Plain gather-read: fetch every partition, restore original row
@@ -342,10 +462,10 @@ class FarCluster:
                 lengths=lengths, strings=strings)
             cqp.requests += 1
             return ClusterPending(self, ctable, pipeline, [pend],
-                                  [ctable.part_rows[0]])
-        pends, prows = [], []
-        for node, qp, part, idx in zip(self.nodes, cqp.qps, ctable.parts,
-                                       ctable.part_rows):
+                                  [ctable.part_rows[0]], [0])
+        pends, prows, pnodes = [], [], []
+        for i, (node, qp, part, idx) in enumerate(
+                zip(self.nodes, cqp.qps, ctable.parts, ctable.part_rows)):
             if part is None or part.n_rows == 0:
                 continue
             idx = np.asarray(idx)
@@ -356,8 +476,14 @@ class FarCluster:
             pends.append(node.submit(qp, part, pipeline,
                                      row_ids=idx.astype(np.int32), **kwargs))
             prows.append(idx)
+            pnodes.append(i)
+            # scatter-side heat: the partition sizes ARE the per-node work
+            # of this verb and are already client-side metadata — one
+            # integer add per owning node, no device sync
+            ctable.heat.record_dispatch(i, len(idx))
         cqp.requests += 1
-        return ClusterPending(self, ctable, pipeline, pends, prows)
+        ctable.heat.requests += 1
+        return ClusterPending(self, ctable, pipeline, pends, prows, pnodes)
 
     def _check_join_locality(self, ctable: ClusterTable,
                              pipeline: tuple) -> None:
@@ -436,6 +562,372 @@ class FarCluster:
         pend = self.submit_request(cqp, ctable, pipeline,
                                    lengths=lengths, strings=strings)
         return pend.wait()
+
+    # ------------------------------------------------------------ rebalancing
+    def check_drift(self, *, threshold: float = 1.5) -> dict:
+        """Run the skew-drift detector over the catalog.
+
+        Returns a `DriftReport` per non-replicated table: the observed
+        per-node load (heat counters when the table has traffic, the
+        partition sizes otherwise) against the best share a re-placement
+        over the table's current keys could achieve — an inherently
+        skewed but LPT-optimal table reads ~1.0 and stays put. Pure
+        client-side metadata — no node traffic, no syncs (the achievable
+        share costs one LPT pass over each key-partitioned table's
+        keys)."""
+        return {name: detect_drift(name, t.heat, t.part_sizes,
+                                   keys=t.keys, threshold=threshold)
+                for name, t in self.catalog.items() if not t.replicated}
+
+    def _dependents(self, ctable: ClusterTable) -> list:
+        """Tables co-partitioned BY this table's rule (join builds placed
+        with `co_partition=ctable`): they share the very spec object, and
+        they must move whenever the rule is re-captured."""
+        if ctable.co_spec is None:
+            return []
+        return [t for t in self.catalog.values()
+                if t is not ctable and t.co_spec is ctable.co_spec]
+
+    def plan_table_rebalance(self, ctable: ClusterTable, *,
+                             keys: np.ndarray | None = None,
+                             max_step_bytes: int | None = None
+                             ) -> MigrationPlan:
+        """Plan (but do not execute) a rebalance — see `rebalance`."""
+        if ctable.replicated:
+            raise ValueError(
+                f"table {ctable.name!r} is replicated; every node already "
+                "holds a full copy — nothing to rebalance")
+        if ctable.partitioner.startswith("co["):
+            raise fv.FarviewError(
+                f"table {ctable.name!r} is co-partitioned with a probe; "
+                "rebalance the probe table — its plan re-places this build "
+                "by the same re-captured rule")
+        keys = ctable.keys if keys is None else np.asarray(keys)
+        deps = self._dependents(ctable)
+        return plan_rebalance(
+            ctable.name, ctable.part_rows, ctable.n_rows,
+            ctable.schema.row_words * WORD_BYTES, n_nodes=self.n_nodes,
+            keys=keys, max_step_bytes=max_step_bytes,
+            co_tables=tuple(t.name for t in deps))
+
+    def rebalance(self, cqp: ClusterQP, ctable: ClusterTable, *,
+                  keys: np.ndarray | None = None,
+                  max_step_bytes: int | None = None) -> MigrationPlan:
+        """Live skew-drift repair: migrate a table to a freshly-captured
+        placement while serving traffic.
+
+        The target comes from `distributed.rebalance.plan_rebalance`: the
+        skew-aware LPT placement re-run over the table's CURRENT keys
+        (`keys=` overrides the stored column) when it is key-partitioned,
+        minimal-move row-count balancing otherwise. Execution copies the
+        moving rows node-to-node through the pool read path (`table_read_
+        rows` — the traffic bills like any other transfer), flips the
+        versioned partition map, and only then frees the source pages;
+        verbs in flight at the flip were scattered under the old map and
+        still splice byte-identically (`ClusterPending` captures its map).
+        Join builds co-partitioned with this table are re-placed by the
+        re-captured rule in the SAME plan — atomically with the probe, so
+        a local join never sees a probe row whose build row has not moved
+        yet. `max_step_bytes` bounds the rows moved per map flip for
+        standalone tables (co-groups always flip whole: a bounded interim
+        map would break build-probe locality mid-plan). Heat counters
+        reset after the flip so the detector sees post-migration traffic.
+        """
+        plan = self.plan_table_rebalance(ctable, keys=keys,
+                                         max_step_bytes=max_step_bytes)
+        deps = self._dependents(ctable)
+        if plan.empty and plan.new_spec is None:
+            return plan
+        if deps:
+            self._flip_group(cqp, ctable, plan, deps)
+        elif plan.new_spec is not None:
+            # stepping is safe without dependents, but the stale rule must
+            # not be captured by a co_partition= alloc mid-plan: a build
+            # placed by it would chase rows that already moved. Blank it;
+            # co_partition= falls back to replicate (safe) until the new
+            # rule lands. If a step fails, the table keeps serving
+            # byte-identically from the interim map with NO key rule (the
+            # truthful state: a half-moved map follows neither rule —
+            # keys= rewrites are refused and co_partition= replicates);
+            # a later rebalance() re-plans from the stored keys and
+            # completes the migration.
+            old_spec, done = ctable.co_spec, 0
+            ctable.co_spec = None
+            try:
+                for step in plan.steps:
+                    self._apply_step(cqp, ctable, step)
+                    done += 1
+            except Exception:
+                if done == 0:
+                    ctable.co_spec = old_spec   # nothing moved: still exact
+                ctable.heat.reset()     # observations predate the interim map
+                raise
+            ctable.co_spec = plan.new_spec
+            ctable.partitioner = plan.new_spec.kind
+        else:
+            try:
+                for step in plan.steps:
+                    self._apply_step(cqp, ctable, step)
+            except Exception:
+                ctable.heat.reset()
+                raise
+        if keys is not None:
+            ctable.keys = np.asarray(keys)
+        ctable.heat.reset()
+        for t in deps:
+            t.heat.reset()
+        return plan
+
+    def auto_rebalance(self, cqp: ClusterQP, *, threshold: float = 1.5,
+                       max_step_bytes: int | None = None) -> dict:
+        """Detector-driven sweep: rebalance every catalog table whose
+        observed load imbalance exceeds `threshold`. Co-partitioned
+        builds are carried by their probe's plan, never rebalanced alone.
+        Returns {table name: executed MigrationPlan}."""
+        out = {}
+        for name, report in self.check_drift(threshold=threshold).items():
+            ctable = self.catalog.get(name)
+            if (ctable is None or not report.drifted
+                    or ctable.partitioner.startswith("co[")):
+                continue
+            out[name] = self.rebalance(cqp, ctable,
+                                       max_step_bytes=max_step_bytes)
+        return out
+
+    def _read_all(self, cqp: ClusterQP, ctable: ClusterTable):
+        """Full original-order row matrix via the pool read path, or None
+        when there is nothing to copy (string shells carry their bytes
+        per-request; zero-row tables have no data)."""
+        if ctable.schema.str_width or ctable.n_rows == 0:
+            return None
+        return np.asarray(self.table_read(cqp, ctable))
+
+    def _flip_group(self, cqp: ClusterQP, ctable: ClusterTable,
+                    plan: MigrationPlan, deps: list) -> None:
+        """Atomic migration of a probe + its co-partitioned builds: one
+        settle, one flip, so build-probe locality holds at every dispatch
+        boundary. Work is per-NODE minimal: only partitions whose target
+        index array differs are read, reallocated and rewritten — an
+        unchanged node keeps its pages and never sees traffic (a fully
+        unchanged table is a pure spec-object swap). Rolls back cleanly
+        (old map untouched) if an affected node's pool cannot hold the
+        transient old+new copies."""
+        new_spec = plan.new_spec
+        jobs = []           # (table, target, changed-node mask)
+        for t, target in [(ctable, plan.target_part_rows)] + [
+                (dep, partition_rows(dep.n_rows, self.n_nodes,
+                                     keys=dep.keys, co_partition=new_spec))
+                for dep in deps]:
+            changed = [not np.array_equal(np.asarray(a), np.asarray(b))
+                       for a, b in zip(target, t.part_rows)]
+            if any(changed):
+                jobs.append((t, target, changed))
+            else:
+                # placement already matches the re-captured rule: adopt
+                # the new spec object (identity is what locality checks
+                # compare) without touching a single page
+                t.co_spec = new_spec
+                t.partitioner = (new_spec.kind if t is ctable
+                                 else f"co[{new_spec.kind}]")
+        if not jobs:
+            return
+        # drain in-flight dispatches first: they reference the old
+        # partitions' pages and resolve builds by name at dispatch time
+        self.settle()
+        datas = [self._read_nodes(cqp, t, changed)
+                 for t, _, changed in jobs]
+        news: list = []
+        try:
+            for t, target, changed in jobs:
+                news.append(self._alloc_parts_masked(
+                    cqp, t, [len(i) for i in target], changed,
+                    alloc_empty=t.partitioner.startswith("co[")))
+        except Exception:
+            for (t, _, changed), parts in zip(jobs, news):
+                for qp, part, ch in zip(cqp.qps, parts, changed):
+                    if ch and part is not None:
+                        fv.free_table_mem(qp, part)
+            self._restore_node_catalogs(jobs)
+            raise
+        for (t, target, changed), words, parts in zip(jobs, datas, news):
+            if words is None:
+                continue
+            for qp, part, idx, ch in zip(cqp.qps, parts, target, changed):
+                if ch and part is not None and part.n_rows:
+                    fv.table_write(qp, part, words[np.asarray(idx)])
+        for (t, target, changed), parts in zip(jobs, news):
+            old = t.parts
+            t.parts = parts
+            t.part_rows = [np.asarray(i) for i in target]
+            t.version += 1
+            t.co_spec = new_spec
+            t.partitioner = (new_spec.kind if t is ctable
+                             else f"co[{new_spec.kind}]")
+            for qp, part, ch in zip(cqp.qps, old, changed):
+                if ch and part is not None:
+                    fv.free_table_mem(qp, part)
+
+    def _read_nodes(self, cqp: ClusterQP, ctable: ClusterTable, changed):
+        """Row matrix holding the CHANGED partitions' rows at their
+        original positions (unchanged nodes' rows are neither read nor
+        needed — they stay where they are). None for string shells and
+        empty tables."""
+        if ctable.schema.str_width or ctable.n_rows == 0:
+            return None
+        out = np.zeros((ctable.n_rows, ctable.schema.row_words), np.float32)
+        for qp, part, idx, ch in zip(cqp.qps, ctable.parts,
+                                     ctable.part_rows, changed):
+            if ch and part is not None and part.n_rows:
+                out[np.asarray(idx)] = np.asarray(fv.table_read(qp, part))
+        return out
+
+    def _alloc_parts_masked(self, cqp: ClusterQP, ctable: ClusterTable,
+                            rows_per_node: list, changed, *,
+                            alloc_empty: bool) -> list:
+        """Like `_alloc_parts`, but nodes whose placement is unchanged
+        keep their existing partition object (no realloc, no traffic);
+        rolls back this call's own allocations on failure."""
+        sch = ctable.schema
+        parts: list = []
+        try:
+            for qp, cur, n, ch in zip(cqp.qps, ctable.parts,
+                                      rows_per_node, changed):
+                if not ch:
+                    parts.append(cur)       # carried forward untouched
+                    continue
+                if n == 0 and not alloc_empty:
+                    parts.append(None)
+                    continue
+                part = FTable(sch.name, sch.columns, n_rows=n,
+                              str_width=sch.str_width)
+                fv.alloc_table_mem(qp, part)
+                parts.append(part)
+        except Exception:
+            for qp, part, ch in zip(cqp.qps, parts, changed):
+                if ch and part is not None:
+                    fv.free_table_mem(qp, part)
+            raise
+        return parts
+
+    def _restore_node_catalogs(self, jobs) -> None:
+        """Rollback helper: a failed migration alloc may have overwritten
+        a node's name catalog with since-freed shards; point the entries
+        back at the still-serving old partitions so join build resolution
+        cannot touch freed pages."""
+        for t, _ in jobs:
+            for node, old in zip(self.nodes, t.parts):
+                if old is not None:
+                    node.tables[old.name] = old
+
+    def _retarget(self, cqp: ClusterQP, ctable: ClusterTable,
+                  target_part_rows: list, spec, *,
+                  copy_data: bool = True) -> None:
+        """Whole-table re-placement under an unchanged key rule (the
+        rekeying write path): settle, realloc to the target sizes,
+        optionally copy the old contents, flip, free."""
+        self.settle()
+        words = self._read_all(cqp, ctable) if copy_data else None
+        try:
+            parts = self._alloc_parts(
+                cqp, ctable.schema, [len(i) for i in target_part_rows],
+                alloc_empty=ctable.partitioner.startswith("co["))
+        except Exception:
+            self._restore_node_catalogs([(ctable, None)])
+            raise
+        if words is not None:
+            for qp, part, idx in zip(cqp.qps, parts, target_part_rows):
+                if part is not None and part.n_rows:
+                    fv.table_write(qp, part, words[np.asarray(idx)])
+        old = ctable.parts
+        ctable.parts = parts
+        ctable.part_rows = [np.asarray(i) for i in target_part_rows]
+        ctable.version += 1
+        ctable.co_spec = spec
+        for qp, part in zip(cqp.qps, old):
+            if part is not None:
+                fv.free_table_mem(qp, part)
+
+    def _apply_step(self, cqp: ClusterQP, ctable: ClusterTable,
+                    step) -> None:
+        """Execute one bounded migration step: copy `step.row_ids` from
+        node `src` to node `dst` via the pool read path, rebuild the two
+        affected partitions, flip the versioned map, free the old pages.
+        Results stay byte-identical at every step boundary — the map
+        always covers every row exactly once."""
+        src, dst = step.src, step.dst
+        src_rows = np.asarray(ctable.part_rows[src])
+        dst_rows = np.asarray(ctable.part_rows[dst])
+        moving = np.asarray(step.row_ids)
+        pos = np.searchsorted(src_rows, moving)
+        if (len(src_rows) == 0 or not np.all(pos < len(src_rows))
+                or not np.array_equal(src_rows[np.minimum(
+                    pos, len(src_rows) - 1)], moving)):
+            raise fv.FarviewError(
+                f"stale migration step for {ctable.name!r}: rows are no "
+                "longer on the source node (re-plan against the current "
+                "map version)")
+        keep = np.ones(len(src_rows), bool)
+        keep[pos] = False
+        new_src_rows = src_rows[keep]
+        merged = np.concatenate([dst_rows, moving])
+        order = np.argsort(merged, kind="stable")
+        new_dst_rows = merged[order]
+
+        # in-flight dispatches hold the old partitions' pages (and joins
+        # resolve build shards by name at dispatch time): drain before the
+        # extents change hands
+        self.settle()
+        is_str = bool(ctable.schema.str_width)
+        kept_words = moved_words = dst_words = None
+        if not is_str:
+            src_part = ctable.parts[src]
+            moved_words = np.asarray(
+                fv.table_read_rows(cqp.qps[src], src_part, pos))
+            kept_words = np.asarray(fv.table_read_rows(
+                cqp.qps[src], src_part, np.nonzero(keep)[0]))
+            if ctable.parts[dst] is not None and ctable.parts[dst].n_rows:
+                dst_words = np.asarray(
+                    fv.table_read(cqp.qps[dst], ctable.parts[dst]))
+        dmat = (moved_words if dst_words is None and moved_words is not None
+                else None)
+        if dst_words is not None:
+            dmat = np.concatenate([dst_words, moved_words])[order]
+
+        sch = ctable.schema
+        new_src = new_dst = None
+        allocd = []
+        try:
+            if len(new_src_rows):
+                new_src = FTable(sch.name, sch.columns,
+                                 n_rows=len(new_src_rows),
+                                 str_width=sch.str_width)
+                fv.alloc_table_mem(cqp.qps[src], new_src)
+                allocd.append((src, new_src))
+            new_dst = FTable(sch.name, sch.columns,
+                             n_rows=len(new_dst_rows),
+                             str_width=sch.str_width)
+            fv.alloc_table_mem(cqp.qps[dst], new_dst)
+            allocd.append((dst, new_dst))
+        except Exception:
+            for i, part in allocd:
+                fv.free_table_mem(cqp.qps[i], part)
+            self._restore_node_catalogs([(ctable, None)])
+            raise
+        if not is_str:
+            if new_src is not None and kept_words is not None:
+                fv.table_write(cqp.qps[src], new_src, kept_words)
+            if dmat is not None:
+                fv.table_write(cqp.qps[dst], new_dst, dmat)
+        old_src, old_dst = ctable.parts[src], ctable.parts[dst]
+        ctable.parts[src] = new_src
+        ctable.parts[dst] = new_dst
+        ctable.part_rows[src] = new_src_rows
+        ctable.part_rows[dst] = new_dst_rows
+        ctable.version += 1
+        if old_src is not None:
+            fv.free_table_mem(cqp.qps[src], old_src)
+        if old_dst is not None:
+            fv.free_table_mem(cqp.qps[dst], old_dst)
 
 
 def open_connection(cluster: FarCluster) -> ClusterQP:

@@ -141,7 +141,16 @@ class PipelineResult:
             self._callbacks.append(cb)
 
     def finalize(self) -> "PipelineResult":
-        """Materialize the response — the request path's only sync point."""
+        """Materialize the response — the request path's only sync point.
+
+        Converts the traced count/shipped scalars to Python ints, slices
+        the survivor-id column (`sel_ids`) and the packed group-overflow
+        collision rows out of the raw executable payload, and fires the
+        deferred accounting callbacks (QPair / pool byte counters).
+        Idempotent and cheap after the first call; everything before it —
+        dispatch, stacking, even the cluster's scatter — is free of host
+        synchronization. Benchmarks call it inside the timed region so
+        they measure completed work, never async dispatch."""
         if self._raw is not None:
             raw, self._raw = self._raw, None
             if self.kind == "rows":

@@ -182,6 +182,25 @@ class FarPool:
         self.stats.bytes_read += ft.n_bytes
         return rows
 
+    def read_rows(self, ft: FTable, row_idx) -> jnp.ndarray:
+        """Row-subset read -> (len(row_idx), row_words) f32.
+
+        Gathers only the selected rows' words through the page table
+        (page-indirect addressing, same mechanism as `gather_columns`), so
+        a partition-migration step that moves K rows off a node reads K
+        rows' worth of DRAM — not the whole extent. `row_idx` are LOCAL
+        row positions within this table. Bills exactly the subset."""
+        row_idx = np.asarray(row_idx, np.int64)
+        if row_idx.size == 0:
+            return jnp.zeros((0, ft.row_words), jnp.float32)
+        pages = np.asarray(ft.pages, np.int64)
+        w = (row_idx[:, None] * ft.row_words
+             + np.arange(ft.row_words, dtype=np.int64)[None, :])
+        vals = self.buf[jnp.asarray(pages[w // self.page_words], jnp.int32),
+                        jnp.asarray(w % self.page_words, jnp.int32)]
+        self.stats.bytes_read += int(row_idx.size) * ft.row_words * WORD_BYTES
+        return vals
+
     def read_columns(self, ft: FTable, col_idx: list[int]) -> jnp.ndarray:
         """Smart addressing (paper §5.2): per-column strided reads so only
         the projected columns' words leave DRAM. Returns (n_rows, k)."""

@@ -1,0 +1,313 @@
+"""Skew-drift detection and migration planning for `FarCluster` (PR 5).
+
+The cluster's partition map is decided once, at `alloc_table_mem` time,
+from the key distribution the table had *then*. When the distribution
+shifts — a rekeying rewrite routes most rows to whatever node the stale
+key rule assigns them — the paper's "central pool serving many small
+processing nodes" degenerates into one hot node: every scatter waits on
+the straggler that owns the hot partition. This module is the brain of
+the fix; `FarCluster.rebalance` (core/cluster.py) is the muscle.
+
+Three pieces, all pure client-side metadata (numpy only, no node traffic):
+
+  * `TableHeat` — cheap per-`(table, node)` load counters. Rows-touched is
+    recorded at scatter time (the partition sizes are already known
+    client-side, so this costs an integer add per node — no device sync);
+    bytes-shipped is recorded when a gather's partials finalize (the
+    merge already materializes those counts). Stored on the catalog's
+    `ClusterTable` entries.
+  * `detect_drift` — compares the observed per-node load against the
+    balanced ideal of the current partition map and reports the
+    max/mean imbalance ratio. `ratio > threshold` flags the table.
+  * `plan_rebalance` — emits a `MigrationPlan`: the target per-node row
+    assignment (skew-aware LPT over the current keys when the table is
+    key-partitioned, minimal-move count balancing otherwise), plus the
+    concrete `MigrationStep`s — which original-row ids move from which
+    node to which, chunked so no step copies more than
+    `max_step_bytes` — that `FarCluster.rebalance` executes live.
+
+The planner never touches data: correctness of the scatter-gather merge
+depends only on the partition map staying exact, so any target assignment
+is *safe*; the plan only decides which one is *fast*. Co-location is the
+exception — a key-partitioned table's new placement is captured as a new
+`CoPartition` spec so co-partitioned join builds can be re-placed by the
+same rule in the same plan (see `FarCluster.rebalance`).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.distributed.sharding import (CoPartition, _hash_keys,
+                                        _skew_owner_map, co_partition_spec,
+                                        partition_rows)
+
+
+# --------------------------------------------------------------------- heat
+@dataclass
+class TableHeat:
+    """Per-node load counters for one cluster table.
+
+    `rows_touched[i]` counts rows node `i`'s partition contributed to
+    dispatched verbs (recorded at scatter time — pure metadata, no sync);
+    `bytes_shipped[i]` counts response bytes node `i` actually shipped
+    (recorded when the gather's partials finalize). `requests` counts
+    cluster verbs. `reset()` is called after a migration so the detector
+    sees post-migration traffic only."""
+
+    rows_touched: np.ndarray
+    bytes_shipped: np.ndarray
+    requests: int = 0
+
+    @classmethod
+    def zeros(cls, n_nodes: int) -> "TableHeat":
+        return cls(np.zeros(n_nodes, np.int64), np.zeros(n_nodes, np.int64))
+
+    def record_dispatch(self, node: int, rows: int) -> None:
+        self.rows_touched[node] += int(rows)
+
+    def record_response(self, node: int, n_bytes: int) -> None:
+        self.bytes_shipped[node] += int(n_bytes)
+
+    def reset(self) -> None:
+        self.rows_touched[:] = 0
+        self.bytes_shipped[:] = 0
+        self.requests = 0
+
+
+def drift_ratio(loads) -> float:
+    """Imbalance of a per-node load vector: hottest node / mean load.
+
+    1.0 is perfectly balanced; k is "everything on one of k nodes". The
+    mean is over ALL nodes (idle nodes count — an empty node IS the
+    imbalance), so the ratio is exactly the scatter's straggler factor:
+    wall time of the slowest node over the balanced ideal."""
+    loads = np.asarray(loads, np.float64)
+    if loads.size == 0 or loads.sum() <= 0:
+        return 1.0
+    return float(loads.max() / loads.mean())
+
+
+@dataclass
+class DriftReport:
+    """Verdict of `detect_drift` for one table. `ratio` is the observed
+    straggler share divided by the best ACHIEVABLE share — 1.0 means the
+    current map is as good as a fresh re-placement could be, even when
+    the raw sizes are lopsided (a 60%-heavy key group cannot be split)."""
+    table: str
+    ratio: float                # observed / achievable straggler share
+    loads: np.ndarray           # the per-node load vector the ratio is from
+    threshold: float
+    achievable_share: float = 0.0   # best max-node share a re-place can hit
+
+    @property
+    def drifted(self) -> bool:
+        return self.ratio > self.threshold
+
+
+def achievable_share(n_nodes: int, keys: "np.ndarray | None") -> float:
+    """The smallest max-node load share any re-placement can reach.
+
+    Without a key rule any row can move anywhere: 1/k. With keys, key
+    groups must stay whole (co-location), so the floor is what the greedy
+    LPT placement itself achieves over the current key frequencies — the
+    same target `plan_rebalance` would emit. Judging drift against THIS,
+    not against perfect balance, is what stops the detector from flagging
+    an inherently skewed but already-optimal placement forever."""
+    if n_nodes <= 0:
+        return 1.0
+    if keys is None or len(np.asarray(keys)) == 0:
+        return 1.0 / n_nodes
+    _, _, owner = _skew_owner_map(_hash_keys(np.asarray(keys)), n_nodes)
+    sizes = np.bincount(owner, minlength=n_nodes)
+    return float(sizes.max() / max(1, sizes.sum()))
+
+
+def detect_drift(table: str, heat: TableHeat, part_sizes, *,
+                 keys: "np.ndarray | None" = None,
+                 threshold: float = 1.5) -> DriftReport:
+    """Compare observed load against the best placement still available.
+
+    Observed load is the heat counters when the table has seen traffic
+    (rows-touched: the straggler cost of a scatter is the rows the
+    hottest node scans), falling back to the partition sizes for a cold
+    table. The ratio divides the observed max-node share by
+    `achievable_share` (LPT over the table's current keys), so a table
+    whose skew is intrinsic to its key distribution reads ~1.0 and is
+    left alone, while a stale map that a re-placement would fix reads
+    > 1 in proportion to the winnable straggler time."""
+    loads = (np.asarray(heat.rows_touched)
+             if int(np.sum(heat.rows_touched)) > 0
+             else np.asarray(part_sizes, np.int64))
+    loads = np.asarray(loads, np.float64)
+    k = len(loads)
+    if loads.size == 0 or loads.sum() <= 0 or k == 0:
+        return DriftReport(table, 1.0, loads, threshold,
+                           1.0 / max(1, k))
+    share = float(loads.max() / loads.sum())
+    # cheap early-out: against PERFECT balance (ach >= 1/k always) the
+    # ratio is bounded by share*k — if even that bound clears nobody,
+    # skip the O(n-keys) LPT pass; periodic sweeps over healthy tables
+    # stay O(nodes)
+    if keys is None or share * k <= threshold:
+        return DriftReport(table, share * k, loads, threshold, 1.0 / k)
+    ach = achievable_share(k, keys)
+    if ach <= 0:
+        return DriftReport(table, 1.0, loads, threshold, ach)
+    return DriftReport(table, share / ach, loads, threshold, ach)
+
+
+# --------------------------------------------------------------------- plan
+@dataclass
+class MigrationStep:
+    """One bounded unit of live migration: move `row_ids` (original-table
+    indices, sorted) from node `src` to node `dst`. `n_bytes` is the moved
+    payload (rows x row bytes) — each step stays under the plan's
+    `max_step_bytes` so the transient copy traffic is bounded."""
+    table: str
+    src: int
+    dst: int
+    row_ids: np.ndarray
+    n_bytes: int
+
+
+@dataclass
+class MigrationPlan:
+    """What `FarCluster.rebalance` executes.
+
+    `target_part_rows` is the complete new partition map (one sorted
+    original-row index array per node); `steps` are the bounded moves that
+    transform the current map into it. `new_spec` is the re-captured
+    key->node rule when the table is key-partitioned — co-partitioned
+    join builds are re-placed by this same object in the same plan so the
+    identity-based co-location check keeps holding after the flip."""
+    table: str
+    target_part_rows: list
+    new_spec: CoPartition | None
+    steps: list = field(default_factory=list)
+    co_tables: tuple = ()           # co-partitioned builds moved in-plan
+
+    @property
+    def n_moved(self) -> int:
+        return sum(len(s.row_ids) for s in self.steps)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(s.n_bytes for s in self.steps)
+
+    @property
+    def empty(self) -> bool:
+        return not self.steps
+
+
+def _owner_of(part_rows, n_rows: int) -> np.ndarray:
+    owner = np.full(n_rows, -1, np.int64)
+    for i, p in enumerate(part_rows):
+        owner[np.asarray(p, np.int64)] = i
+    return owner
+
+
+def balance_counts(part_rows) -> list:
+    """Minimal-move row-count balancing (tables with no key rule).
+
+    Target sizes are total/k (+-1); the +1 remainders go to the nodes that
+    are currently largest so as few rows move as possible. Surplus rows are
+    taken from the tail of each over-full node's (sorted) index array and
+    handed to the under-full nodes; every array stays sorted."""
+    part_rows = [np.asarray(p, np.int64) for p in part_rows]
+    k = len(part_rows)
+    sizes = np.asarray([len(p) for p in part_rows], np.int64)
+    total = int(sizes.sum())
+    base, rem = divmod(total, k)
+    targets = np.full(k, base, np.int64)
+    # hand the +1 remainders to the currently-largest nodes (fewest moves)
+    for i in np.argsort(-sizes, kind="stable")[:rem]:
+        targets[i] += 1
+    surplus: list[np.ndarray] = []
+    keep = list(part_rows)
+    for i in range(k):
+        if sizes[i] > targets[i]:
+            cut = int(sizes[i] - targets[i])
+            keep[i] = part_rows[i][:-cut]
+            surplus.append(part_rows[i][-cut:])
+    pool = (np.concatenate(surplus) if surplus
+            else np.zeros(0, np.int64))
+    out = []
+    off = 0
+    for i in range(k):
+        need = int(targets[i] - len(keep[i]))
+        if need > 0:
+            out.append(np.sort(np.concatenate(
+                [keep[i], pool[off:off + need]])))
+            off += need
+        else:
+            out.append(keep[i])
+    return out
+
+
+def plan_moves(table: str, current_part_rows, target_part_rows,
+               row_bytes: int, *,
+               max_step_bytes: int | None = None) -> list:
+    """Diff two partition maps into bounded `MigrationStep`s.
+
+    Only rows whose owner changes move; moves are grouped per (src, dst)
+    pair and chunked so no single step copies more than `max_step_bytes`
+    of row payload (None = one step per pair, unbounded)."""
+    n_rows = sum(len(np.asarray(p)) for p in current_part_rows)
+    cur = _owner_of(current_part_rows, n_rows)
+    new = _owner_of(target_part_rows, n_rows)
+    if len(cur) != len(new) or (new < 0).any() or (cur < 0).any():
+        raise ValueError("partition maps must cover the same rows exactly")
+    steps: list[MigrationStep] = []
+    moving = cur != new
+    rows_per_step = None
+    if max_step_bytes is not None:
+        rows_per_step = max(1, int(max_step_bytes) // max(1, row_bytes))
+    for src in range(len(current_part_rows)):
+        for dst in range(len(target_part_rows)):
+            if src == dst:
+                continue
+            ids = np.nonzero(moving & (cur == src) & (new == dst))[0]
+            if not len(ids):
+                continue
+            chunks = ([ids] if rows_per_step is None else
+                      [ids[i:i + rows_per_step]
+                       for i in range(0, len(ids), rows_per_step)])
+            steps.extend(MigrationStep(table, src, dst, c.astype(np.int64),
+                                       len(c) * row_bytes)
+                         for c in chunks)
+    return steps
+
+
+def plan_rebalance(table: str, current_part_rows, n_rows: int,
+                   row_bytes: int, *, n_nodes: int,
+                   keys: "np.ndarray | None" = None,
+                   max_step_bytes: int | None = None,
+                   co_tables: tuple = ()) -> MigrationPlan:
+    """Build the full migration plan for one table.
+
+    With `keys` (the table's CURRENT per-row key column), the target is the
+    skew-aware greedy LPT placement re-run on today's key frequencies —
+    key groups stay whole (co-location survives) and land largest-first on
+    the least-loaded node, exactly what `alloc_table_mem(partitioner=
+    "skew")` would produce for a fresh table. The re-captured rule is
+    returned as `new_spec` so co-partitioned builds follow. Without keys
+    the target is minimal-move row-count balancing (no co-location to
+    preserve, so any row can move anywhere)."""
+    if keys is not None:
+        keys = np.asarray(keys)
+        if keys.shape[0] != n_rows:
+            raise ValueError(
+                f"rebalance keys cover {keys.shape[0]} rows, "
+                f"table has {n_rows}")
+        new_spec = co_partition_spec("skew", n_nodes, keys)
+        target = partition_rows(n_rows, n_nodes, keys=keys,
+                                co_partition=new_spec)
+    else:
+        new_spec = None
+        target = balance_counts(current_part_rows)
+    steps = plan_moves(table, current_part_rows, target, row_bytes,
+                       max_step_bytes=max_step_bytes)
+    return MigrationPlan(table, target, new_spec, steps,
+                         co_tables=tuple(co_tables))

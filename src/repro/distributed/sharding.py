@@ -354,6 +354,12 @@ def partition_rows(n_rows: int, n_parts: int, kind: str = "range", *,
     `co_partition=` (a CoPartition from `co_partition_spec`) overrides the
     kind: rows are placed wherever the REFERENCED table's partitioning put
     that key, co-locating the two tables for local build-probe joins.
+
+    The map this returns is the cluster's version-0 placement; online
+    rebalancing (`distributed.rebalance` + `FarCluster.rebalance`)
+    re-captures it when the key distribution drifts away from what it
+    was built for. See docs/cluster.md for the partitioner/rebalance
+    lifecycle.
     """
     if n_parts <= 0:
         raise ValueError("n_parts must be positive")

@@ -1,0 +1,44 @@
+"""Docs-drift guard as a tier-1 test (the same checks CI's lint job runs
+via ``tools/check_docs.py``): intra-repo markdown links must resolve, the
+documented tier-1 command must match the CI workflow, and the PR 5 docs
+suite must exist and be reachable from the README."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_check_docs_passes():
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "check_docs.py")],
+        capture_output=True, text=True, timeout=60)
+    assert proc.returncode == 0, proc.stderr + proc.stdout
+
+
+def test_docs_suite_exists():
+    for name in ("architecture.md", "cluster.md", "operators.md"):
+        assert os.path.exists(os.path.join(ROOT, "docs", name)), name
+
+
+def test_readme_links_docs_suite():
+    with open(os.path.join(ROOT, "README.md"), encoding="utf-8") as f:
+        readme = f.read()
+    for name in ("docs/architecture.md", "docs/cluster.md",
+                 "docs/operators.md"):
+        assert name in readme, f"README must link {name}"
+
+
+@pytest.mark.parametrize("bad", ["docs/no-such-file.md"])
+def test_guard_catches_broken_link(tmp_path, bad):
+    sys.path.insert(0, os.path.join(ROOT, "tools"))
+    try:
+        import check_docs
+    finally:
+        sys.path.pop(0)
+    md = tmp_path / "x.md"
+    md.write_text(f"see [here]({bad}) and [ok](https://example.com)")
+    broken = check_docs.broken_links(str(md), root=str(tmp_path))
+    assert len(broken) == 1 and broken[0][0] == bad

@@ -1,0 +1,35 @@
+"""Example smoke tests: the documented entry points must actually run.
+
+Each example executes as a subprocess the way the README tells users to
+run it (``PYTHONPATH=src python examples/<name>.py``), scaled down via
+FARVIEW_EXAMPLE_ROWS so the smoke stays cheap. The examples carry their
+own correctness asserts (numpy cross-checks), so exit code 0 means the
+documented workflow works end-to-end, not just that imports resolve."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_example(name: str, rows: int = 384) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["FARVIEW_EXAMPLE_ROWS"] = str(rows)
+    env["PYTHONPATH"] = (os.path.join(ROOT, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    return subprocess.run(
+        [sys.executable, os.path.join(ROOT, "examples", name)],
+        capture_output=True, text=True, env=env, timeout=600)
+
+
+@pytest.mark.parametrize("name,expect", [
+    ("quickstart.py", "push-down ships"),
+    ("farview_queries.py", "node totals:"),
+])
+def test_example_runs(name, expect):
+    proc = _run_example(name)
+    assert proc.returncode == 0, (
+        f"{name} failed\nstdout:\n{proc.stdout}\nstderr:\n{proc.stderr}")
+    assert expect in proc.stdout, proc.stdout

@@ -1,0 +1,534 @@
+"""Online skew-drift rebalancing (PR 5 tentpole).
+
+The contract under test: a `FarCluster` stays BYTE-IDENTICAL to a single
+node across the whole rebalancing lifecycle —
+
+(a) planner: drift detection flags a lopsided load, the skew-aware target
+    keeps key groups whole and balanced, count balancing moves the
+    minimum, steps respect the byte bound;
+(b) rekeying writes (`table_write(..., keys=)`) route rows by the captured
+    rule: co-location survives the new key column, and a hostile key
+    distribution piles onto one node — the induced skew flip;
+(c) live migration: verbs in flight at the flip (scattered under the old
+    map) still splice exactly; selection/group/regex/crypt parity holds
+    after the partitions move; the versioned map bumps per flip;
+(d) co-partitioned joins: the build moves in the probe's plan, the
+    re-captured rule is shared by identity, and the join stays local and
+    exact after the probe's partitions move;
+(e) failure: a pool too full for the transient old+new copies rolls back
+    without touching the serving map.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import operators as op
+from repro.core.client import (FarviewError, FViewNode, alloc_table_mem,
+                               farview_request, open_connection, table_write)
+from repro.core.cluster import FarCluster
+from repro.core.table import FTable, Column, string_table
+from repro.distributed.rebalance import (balance_counts, detect_drift,
+                                         drift_ratio, plan_moves,
+                                         plan_rebalance, TableHeat)
+from repro.kernels import ref as kref
+
+N = 640
+K = 4
+COLS = tuple(Column(f"c{i}", "i32" if i == 0 else "f32") for i in range(8))
+ROW_BYTES = len(COLS) * 4
+
+
+def make_data(keys, seed=0):
+    rng = np.random.default_rng(seed)
+    d = {"c0": np.asarray(keys, np.int32)}
+    for i in range(1, 8):
+        # integer-valued floats: aggregates merge exactly under any order
+        d[f"c{i}"] = rng.integers(-50, 50, len(keys)).astype(np.float32)
+    return d
+
+
+def solo_run(pipe, words, build=None):
+    node = FViewNode(64 * 2**20)
+    qp = open_connection(node)
+    if build is not None:
+        bft, bwords = build
+        b = FTable(bft.name, bft.columns, n_rows=bft.n_rows)
+        alloc_table_mem(qp, b)
+        table_write(qp, b, bwords)
+    ft = FTable("t", COLS, n_rows=words.shape[0])
+    alloc_table_mem(qp, ft)
+    table_write(qp, ft, words)
+    return farview_request(qp, ft, pipe).finalize()
+
+
+def assert_rows_identical(res, ref):
+    assert res.count == ref.count
+    np.testing.assert_array_equal(np.asarray(res.rows), np.asarray(ref.rows))
+    assert res.shipped_bytes == ref.shipped_bytes
+    assert res.read_bytes == ref.read_bytes
+
+
+def hot_cluster(seed=0):
+    """A hash-partitioned cluster table driven through an induced skew
+    flip: every rewritten key belongs to node 0 under the stale rule.
+    Returns (cluster, cqp, ctable, new words, new keys)."""
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, 64, N).astype(np.int32)
+    words = FTable("t", COLS, n_rows=N).encode(make_data(keys, seed))
+    cl = FarCluster(K)
+    cqp = cl.open_connection()
+    ct = cl.alloc_table_mem(cqp, FTable("t", COLS, n_rows=N),
+                            partitioner="hash", keys=keys)
+    cl.table_write(cqp, ct, words)
+    owners = ct.co_spec.owners_of(np.arange(64))
+    hot = np.arange(64)[owners == 0]
+    new_keys = hot[rng.integers(0, len(hot), N)].astype(np.int32)
+    new_words = FTable("t", COLS, n_rows=N).encode(
+        make_data(new_keys, seed + 1))
+    cl.table_write(cqp, ct, new_words, keys=new_keys)
+    return cl, cqp, ct, new_words, new_keys
+
+
+class TestPlanner:
+    def test_drift_ratio(self):
+        assert drift_ratio([100, 100, 100, 100]) == 1.0
+        assert drift_ratio([400, 0, 0, 0]) == 4.0
+        assert drift_ratio([]) == 1.0
+        assert drift_ratio([0, 0]) == 1.0
+
+    def test_detect_drift_prefers_heat_over_sizes(self):
+        heat = TableHeat.zeros(2)
+        cold = detect_drift("t", heat, [10, 90], threshold=1.5)
+        assert cold.drifted and cold.ratio == pytest.approx(1.8)
+        heat.record_dispatch(0, 50)
+        heat.record_dispatch(1, 50)
+        warm = detect_drift("t", heat, [10, 90], threshold=1.5)
+        assert not warm.drifted and warm.ratio == 1.0
+
+    def test_balance_counts_minimal_moves(self):
+        parts = [np.arange(90), np.arange(90, 100),
+                 np.arange(100, 110), np.arange(110, 120)]
+        target = balance_counts(parts)
+        assert sorted(len(p) for p in target) == [30, 30, 30, 30]
+        # only the overfull node gives rows away
+        for i in (1, 2, 3):
+            assert set(parts[i]) <= set(target[i])
+        got = np.sort(np.concatenate(target))
+        np.testing.assert_array_equal(got, np.arange(120))
+
+    def test_plan_moves_bounded_steps(self):
+        cur = [np.arange(100), np.zeros(0, np.int64)]
+        tgt = [np.arange(50), np.arange(50, 100)]
+        steps = plan_moves("t", cur, tgt, row_bytes=32,
+                           max_step_bytes=10 * 32)
+        assert len(steps) == 5
+        assert all(s.n_bytes <= 10 * 32 for s in steps)
+        assert all(s.src == 0 and s.dst == 1 for s in steps)
+        moved = np.sort(np.concatenate([s.row_ids for s in steps]))
+        np.testing.assert_array_equal(moved, np.arange(50, 100))
+
+    def test_plan_rebalance_lpt_keeps_groups_whole(self):
+        keys = np.asarray([0] * 300 + [1] * 100 + [2] * 100 + [3] * 140)
+        cur = [np.arange(640), np.zeros(0, np.int64),
+               np.zeros(0, np.int64), np.zeros(0, np.int64)]
+        plan = plan_rebalance("t", cur, 640, ROW_BYTES, n_nodes=4,
+                              keys=keys)
+        owner = np.full(640, -1)
+        for i, p in enumerate(plan.target_part_rows):
+            owner[np.asarray(p)] = i
+        for key in np.unique(keys):
+            assert len(np.unique(owner[keys == key])) == 1
+        sizes = sorted(len(p) for p in plan.target_part_rows)
+        assert sizes == [100, 100, 140, 300]    # LPT: heavy group alone
+        assert plan.new_spec is not None and plan.new_spec.kind == "skew"
+
+    def test_plan_rejects_mismatched_maps(self):
+        with pytest.raises(ValueError, match="same rows"):
+            plan_moves("t", [np.arange(10)], [np.arange(8)], 32)
+
+    def test_plan_rejects_short_keys(self):
+        with pytest.raises(ValueError, match="cover"):
+            plan_rebalance("t", [np.arange(10)], 10, 32, n_nodes=1,
+                           keys=np.arange(4))
+
+
+class TestSkewFlip:
+    def test_rekey_routes_by_captured_rule(self):
+        cl, cqp, ct, words, keys = hot_cluster()
+        # the stale hash rule piles every new key onto node 0
+        assert ct.part_sizes[0] == N
+        assert ct.version == 1
+        # co-location still holds (equal keys share a node)
+        owner = np.full(N, -1)
+        for i, p in enumerate(ct.part_rows):
+            owner[np.asarray(p)] = i
+        for key in np.unique(keys):
+            assert len(np.unique(owner[keys == key])) == 1
+
+    def test_rekey_keeps_results_identical(self):
+        cl, cqp, ct, words, keys = hot_cluster()
+        pipe = (op.Select((op.Predicate("c1", "<", 0.0),)),)
+        assert_rows_identical(cl.farview_request(cqp, ct, pipe).finalize(),
+                              solo_run(pipe, words))
+
+    def test_heat_and_detector_flag_the_hot_node(self):
+        cl, cqp, ct, words, keys = hot_cluster()
+        pipe = (op.Select((op.Predicate("c1", "<", 0.0),)),)
+        for _ in range(3):
+            cl.farview_request(cqp, ct, pipe).finalize()
+        assert ct.heat.rows_touched[0] == 3 * N
+        assert ct.heat.rows_touched[1:].sum() == 0
+        assert ct.heat.bytes_shipped[0] > 0
+        report = cl.check_drift()["t"]
+        # everything on one node while an LPT re-place could spread it:
+        # the ratio is the winnable straggler factor (~K, less LPT noise)
+        assert report.drifted and report.ratio > 0.8 * K
+
+    def test_rebalance_restores_balance_and_parity(self):
+        cl, cqp, ct, words, keys = hot_cluster()
+        pipe = (op.Select((op.Predicate("c1", "<", 0.0),)),)
+        ref = solo_run(pipe, words)
+        cl.farview_request(cqp, ct, pipe).finalize()
+        plans = cl.auto_rebalance(cqp)
+        assert "t" in plans and plans["t"].n_moved > 0
+        assert drift_ratio(ct.part_sizes) < 1.2
+        assert ct.partitioner == "skew" and ct.co_spec.kind == "skew"
+        assert cl.check_drift()["t"].ratio < 1.2     # heat was reset
+        assert_rows_identical(cl.farview_request(cqp, ct, pipe).finalize(),
+                              ref)
+
+    def test_intrinsic_skew_is_not_drift(self):
+        """A heavy-hitter key group cannot be split: the LPT-optimal
+        placement is lopsided by nature and must read ~1.0, so periodic
+        auto_rebalance sweeps leave it alone instead of re-migrating a
+        no-op plan forever."""
+        rng = np.random.default_rng(23)
+        keys = np.concatenate([np.zeros(int(N * 0.6), np.int64),
+                               rng.integers(1, 20, N - int(N * 0.6))])
+        words = FTable("t", COLS, n_rows=N).encode(make_data(keys, 23))
+        cl = FarCluster(K)
+        cqp = cl.open_connection()
+        ct = cl.alloc_table_mem(cqp, FTable("t", COLS, n_rows=N),
+                                partitioner="skew", keys=keys)
+        cl.table_write(cqp, ct, words)
+        report = cl.check_drift()["t"]           # cold: sizes fallback
+        assert not report.drifted and report.ratio == pytest.approx(1.0)
+        pipe = (op.Select((op.Predicate("c1", "<", 0.0),)),)
+        cl.farview_request(cqp, ct, pipe).finalize()
+        assert not cl.check_drift()["t"].drifted  # warm: heat, same verdict
+        v0 = ct.version
+        assert cl.auto_rebalance(cqp) == {}
+        assert ct.version == v0
+
+    def test_noop_rebalance_moves_no_pages(self):
+        """Rebalancing an already-optimal probe + co-build swaps the rule
+        object (identity keeps locality checks passing) without reading,
+        copying, or reallocating a single page."""
+        rng = np.random.default_rng(29)
+        pkeys = rng.integers(0, 64, N).astype(np.int32)
+        words = FTable("t", COLS, n_rows=N).encode(make_data(pkeys, 29))
+        bft = FTable("dim", (Column("k", "i32"), Column("v")), n_rows=32)
+        bkeys = rng.permutation(64)[:32].astype(np.int32)
+        bwords = bft.encode({"k": bkeys,
+                             "v": rng.integers(0, 9, 32).astype(np.float32)})
+        cl = FarCluster(K)
+        cqp = cl.open_connection()
+        ct = cl.alloc_table_mem(cqp, FTable("t", COLS, n_rows=N),
+                                partitioner="skew", keys=pkeys)
+        cl.table_write(cqp, ct, words)
+        cb = cl.alloc_table_mem(cqp, bft, co_partition=ct, keys=bkeys)
+        cl.table_write(cqp, cb, bwords)
+        read_before = cl.stats.bytes_read
+        v0, bv0 = ct.version, cb.version
+        plan = cl.rebalance(cqp, ct)
+        assert plan.empty
+        assert cl.stats.bytes_read == read_before     # no copy traffic
+        assert ct.version == v0 and cb.version == bv0  # map untouched
+        assert ct.co_spec is cb.co_spec is plan.new_spec  # rule re-captured
+        pipe = (op.JoinSmall(probe_key="c0", build_table="dim",
+                             build_key="k", build_cols=("v",)),)
+        assert_rows_identical(cl.farview_request(cqp, ct, pipe).finalize(),
+                              solo_run(pipe, words, build=(bft, bwords)))
+
+    def test_rekey_requires_key_rule(self):
+        cl = FarCluster(2)
+        cqp = cl.open_connection()
+        words = FTable("t", COLS, n_rows=N).encode(
+            make_data(np.zeros(N, np.int32)))
+        ct = cl.alloc_table_mem(cqp, FTable("t", COLS, n_rows=N))  # range
+        cl.table_write(cqp, ct, words)
+        with pytest.raises(ValueError, match="key rule"):
+            cl.table_write(cqp, ct, words, keys=np.zeros(N, np.int32))
+
+
+class TestLiveMigration:
+    PIPES = {
+        "selection": (op.Select((op.Predicate("c1", "<", 0.0),
+                                 op.Predicate("c2", ">", -20.0))),),
+        "crypt_post": (op.Select((op.Predicate("c2", ">", 0.0),)),
+                       op.Crypt(key=(3, 9), nonce=4, when="post")),
+    }
+
+    @pytest.mark.parametrize("name", sorted(PIPES))
+    def test_in_flight_requests_splice_under_old_map(self, name):
+        """Verbs queued before the flip are dispatched mid-migration and
+        must splice with the map they were scattered under."""
+        pipe = self.PIPES[name]
+        cl, cqp, ct, words, keys = hot_cluster()
+        ref = solo_run(pipe, words)
+        pend = cl.submit_request(cqp, ct, pipe)      # queued, not flushed
+        v0 = ct.version
+        plan = cl.rebalance(cqp, ct)
+        assert ct.version > v0 and pend.version == v0
+        assert_rows_identical(pend.wait().finalize(), ref)
+        after = cl.submit_request(cqp, ct, pipe)
+        assert after.version == ct.version
+        assert_rows_identical(after.wait().finalize(), ref)
+        assert plan.n_moved > 0
+
+    def test_group_aggregate_parity_after_migration(self):
+        pipe = (op.GroupBy("c0", ("c1", "c2"), n_buckets=128),)
+        cl, cqp, ct, words, keys = hot_cluster()
+        ref = solo_run(pipe, words)
+        from repro.core.client import merge_group_partials
+        ref_groups = merge_group_partials(
+            FTable("t", COLS, n_rows=N), pipe, [ref]).groups
+        pend = cl.submit_request(cqp, ct, pipe)
+        cl.rebalance(cqp, ct)
+        for res in (pend.wait().finalize(),
+                    cl.farview_request(cqp, ct, pipe).finalize()):
+            got = res.groups
+            assert set(got) == set(ref_groups)
+            for key in ref_groups:
+                rc, rs, rmn, rmx = ref_groups[key]
+                cc, cs, cmn, cmx = got[key]
+                assert rc == cc
+                np.testing.assert_array_equal(np.asarray(rs),
+                                              np.asarray(cs))
+
+    def test_crypt_pre_parity_after_migration(self):
+        """Encrypted-at-rest rows: the keystream is addressed by ORIGINAL
+        row offsets, so decryption survives rows changing nodes."""
+        key, nonce = (11, 22), 7
+        pipe = (op.Crypt(key=key, nonce=nonce, when="pre"),
+                op.Select((op.Predicate("c1", "<", 0.0),)))
+        rng = np.random.default_rng(3)
+        keys = rng.integers(0, 64, N).astype(np.int32)
+        words = FTable("t", COLS, n_rows=N).encode(make_data(keys, 3))
+        flat = jnp.asarray(words.reshape(-1))
+        enc = np.asarray(kref.ctr_crypt(
+            flat.view(jnp.uint32), jnp.asarray(key, jnp.uint32), nonce)
+        ).view(np.float32).reshape(words.shape)
+        ref = solo_run(pipe, enc)
+        assert ref.count > 0
+        cl = FarCluster(K)
+        cqp = cl.open_connection()
+        ct = cl.alloc_table_mem(cqp, FTable("t", COLS, n_rows=N),
+                                partitioner="hash", keys=keys)
+        cl.table_write(cqp, ct, enc)
+        assert_rows_identical(cl.farview_request(cqp, ct, pipe).finalize(),
+                              ref)
+        cl.rebalance(cqp, ct, keys=keys)        # re-place by LPT
+        assert ct.version > 0
+        assert_rows_identical(cl.farview_request(cqp, ct, pipe).finalize(),
+                              ref)
+
+    def test_regex_mask_parity_after_migration(self):
+        """String shells carry no pool data; migration re-shapes the
+        shells and the per-request byte scatter follows the new map."""
+        strs = [b"error: disk full", b"all fine", b"ERROR", b"warn: error",
+                b"errr", b"the error is late"]
+        rng = np.random.default_rng(5)
+        picks = [strs[j] for j in rng.integers(0, len(strs), 300)]
+        ft, mat, lens = string_table("s", picks, 24)
+        pipe = (op.RegexMatch("error"),)
+        node = FViewNode(64 * 2**20)
+        qp = open_connection(node)
+        part = FTable(ft.name, ft.columns, n_rows=ft.n_rows,
+                      str_width=ft.str_width)
+        alloc_table_mem(qp, part)
+        ref = farview_request(qp, part, pipe,
+                              strings=mat, lengths=lens).finalize()
+        skeys = rng.integers(0, 16, 300).astype(np.int32)
+        cl = FarCluster(3)
+        cqp = cl.open_connection()
+        ct = cl.alloc_table_mem(
+            cqp, FTable(ft.name, ft.columns, n_rows=ft.n_rows,
+                        str_width=ft.str_width),
+            partitioner="hash", keys=skeys)
+        res = cl.farview_request(cqp, ct, pipe,
+                                 strings=mat, lengths=lens).finalize()
+        np.testing.assert_array_equal(np.asarray(res.mask),
+                                      np.asarray(ref.mask))
+        cl.rebalance(cqp, ct, keys=skeys)
+        res2 = cl.farview_request(cqp, ct, pipe,
+                                  strings=mat, lengths=lens).finalize()
+        np.testing.assert_array_equal(np.asarray(res2.mask),
+                                      np.asarray(ref.mask))
+        assert res2.shipped_bytes == ref.shipped_bytes
+
+    def test_bounded_steps_flip_incrementally(self):
+        cl, cqp, ct, words, keys = hot_cluster()
+        pipe = (op.Select((op.Predicate("c1", "<", 0.0),)),)
+        ref = solo_run(pipe, words)
+        v0 = ct.version
+        step_bytes = 64 * ROW_BYTES
+        plan = cl.rebalance(cqp, ct, max_step_bytes=step_bytes)
+        assert len(plan.steps) > 1
+        assert all(s.n_bytes <= step_bytes for s in plan.steps)
+        # one map flip per step (versioned map is the migration journal)
+        assert ct.version == v0 + len(plan.steps)
+        assert_rows_identical(cl.farview_request(cqp, ct, pipe).finalize(),
+                              ref)
+
+    def test_count_balancing_for_range_tables(self):
+        """No key rule: rebalance moves the minimum rows to even counts
+        (forced lopsided via a hand-built map through the step executor)."""
+        cl = FarCluster(2)
+        cqp = cl.open_connection()
+        words = FTable("t", COLS, n_rows=N).encode(
+            make_data(np.arange(N) % 7))
+        ct = cl.alloc_table_mem(cqp, FTable("t", COLS, n_rows=N))  # range
+        cl.table_write(cqp, ct, words)
+        pipe = (op.Select((op.Predicate("c1", "<", 0.0),)),)
+        ref = solo_run(pipe, words)
+        # drain node 1 onto node 0 by planning against a lopsided target
+        from repro.distributed.rebalance import MigrationStep
+        move = np.asarray(ct.part_rows[1])
+        cl._apply_step(cqp, ct, MigrationStep(
+            "t", 1, 0, move, len(move) * ROW_BYTES))
+        assert ct.part_sizes == [N, 0]
+        assert_rows_identical(cl.farview_request(cqp, ct, pipe).finalize(),
+                              ref)
+        plan = cl.rebalance(cqp, ct)
+        assert plan.new_spec is None and plan.n_moved == N // 2
+        assert ct.part_sizes == [N // 2, N // 2]
+        assert_rows_identical(cl.farview_request(cqp, ct, pipe).finalize(),
+                              ref)
+
+    def test_migration_traffic_is_accounted(self):
+        cl, cqp, ct, words, keys = hot_cluster()
+        before = cl.stats.bytes_read
+        plan = cl.rebalance(cqp, ct)
+        assert plan.total_bytes > 0
+        # the copy went through the pool read path and billed at least
+        # the moved payload
+        assert cl.stats.bytes_read - before >= plan.total_bytes
+
+    def test_rollback_on_pool_exhaustion(self):
+        """A pool too full for the transient old+new copy must fail the
+        step WITHOUT corrupting the serving map."""
+        cl = FarCluster(2, 8 * 2**20)           # 4 x 2 MiB pages per node
+        cqp = cl.open_connection()
+        n = 120000                               # ~3.7 MiB -> 1 page short
+        rngk = np.random.default_rng(0)
+        keys = rngk.integers(0, 64, n).astype(np.int32)
+        words = FTable("t", COLS, n_rows=n).encode(make_data(keys))
+        ct = cl.alloc_table_mem(cqp, FTable("t", COLS, n_rows=n),
+                                partitioner="hash", keys=keys)
+        cl.table_write(cqp, ct, words)
+        # the all-equal rekey target is the LPT's least-loaded node 0:
+        # fill it so the incoming copy cannot allocate
+        hog = FTable("hog", COLS, n_rows=120000)
+        cl.nodes[0].pool.alloc_table(hog)
+        sizes = list(ct.part_sizes)
+        version = ct.version
+        spec = ct.co_spec
+        with pytest.raises(MemoryError):
+            cl.rebalance(cqp, ct, keys=np.zeros(n, np.int32))
+        assert ct.part_sizes == sizes and ct.version == version
+        # zero steps completed: the old key rule is still exact and stays
+        assert ct.co_spec is spec
+        # node name catalogs must point back at the still-serving shards
+        # (join build resolution must never see freed pages)
+        for node, part in zip(cl.nodes, ct.parts):
+            if part is not None:
+                assert node.tables[part.name] is part
+        pipe = (op.Select((op.Predicate("c1", "<", 0.0),)),)
+        assert_rows_identical(cl.farview_request(cqp, ct, pipe).finalize(),
+                              solo_run(pipe, words))
+
+
+class TestCoPartitionedJoin:
+    def _setup(self, seed=11):
+        rng = np.random.default_rng(seed)
+        pkeys = rng.integers(0, 64, N).astype(np.int32)
+        words = FTable("t", COLS, n_rows=N).encode(make_data(pkeys, seed))
+        bft = FTable("dim", (Column("k", "i32"), Column("v")), n_rows=40)
+        bkeys = rng.permutation(64)[:40].astype(np.int32)
+        bwords = bft.encode({"k": bkeys,
+                             "v": rng.integers(0, 99, 40).astype(np.float32)})
+        pipe = (op.JoinSmall(probe_key="c0", build_table="dim",
+                             build_key="k", build_cols=("v",)),)
+        cl = FarCluster(K)
+        cqp = cl.open_connection()
+        ct = cl.alloc_table_mem(cqp, FTable("t", COLS, n_rows=N),
+                                partitioner="hash", keys=pkeys)
+        cl.table_write(cqp, ct, words)
+        cb = cl.alloc_table_mem(cqp, bft, co_partition=ct, keys=bkeys)
+        cl.table_write(cqp, cb, bwords)
+        ref = solo_run(pipe, words, build=(bft, bwords))
+        return cl, cqp, ct, cb, pipe, ref, bkeys
+
+    def test_build_moves_in_probe_plan(self):
+        cl, cqp, ct, cb, pipe, ref, bkeys = self._setup()
+        assert_rows_identical(cl.farview_request(cqp, ct, pipe).finalize(),
+                              ref)
+        build_sizes = list(cb.part_sizes)
+        plan = cl.rebalance(cqp, ct)
+        assert plan.co_tables == ("dim",)
+        # the re-captured rule is shared BY IDENTITY: locality still passes
+        assert ct.co_spec is cb.co_spec
+        assert cb.version == 1 and cb.partitioner == "co[skew]"
+        # the build genuinely moved with the rule
+        assert list(cb.part_sizes) != build_sizes or plan.n_moved == 0
+        assert_rows_identical(cl.farview_request(cqp, ct, pipe).finalize(),
+                              ref)
+
+    def test_join_in_flight_across_group_flip(self):
+        cl, cqp, ct, cb, pipe, ref, bkeys = self._setup(seed=13)
+        pend = cl.submit_request(cqp, ct, pipe)
+        cl.rebalance(cqp, ct)
+        assert_rows_identical(pend.wait().finalize(), ref)
+        assert_rows_identical(cl.farview_request(cqp, ct, pipe).finalize(),
+                              ref)
+
+    def test_build_alone_is_refused(self):
+        cl, cqp, ct, cb, pipe, ref, bkeys = self._setup(seed=17)
+        with pytest.raises(FarviewError, match="rebalance the probe"):
+            cl.rebalance(cqp, cb)
+
+    def test_replicated_is_refused(self):
+        cl = FarCluster(2)
+        cqp = cl.open_connection()
+        words = FTable("t", COLS, n_rows=64).encode(
+            make_data(np.zeros(64, np.int32)))
+        ct = cl.alloc_table_mem(cqp, FTable("t", COLS, n_rows=64),
+                                replicate=True)
+        cl.table_write(cqp, ct, words)
+        with pytest.raises(ValueError, match="replicated"):
+            cl.rebalance(cqp, ct)
+
+    def test_copartition_alloc_after_rebalance_uses_new_rule(self):
+        """A build allocated AFTER the probe rebalanced co-locates by the
+        re-captured rule."""
+        rng = np.random.default_rng(19)
+        pkeys = rng.integers(0, 64, N).astype(np.int32)
+        words = FTable("t", COLS, n_rows=N).encode(make_data(pkeys, 19))
+        cl = FarCluster(K)
+        cqp = cl.open_connection()
+        ct = cl.alloc_table_mem(cqp, FTable("t", COLS, n_rows=N),
+                                partitioner="hash", keys=pkeys)
+        cl.table_write(cqp, ct, words)
+        cl.rebalance(cqp, ct)
+        bft = FTable("dim2", (Column("k", "i32"), Column("v")), n_rows=40)
+        bkeys = rng.permutation(64)[:40].astype(np.int32)
+        bwords = bft.encode({"k": bkeys,
+                             "v": rng.integers(0, 99, 40).astype(np.float32)})
+        cb = cl.alloc_table_mem(cqp, bft, co_partition=ct, keys=bkeys)
+        cl.table_write(cqp, cb, bwords)
+        pipe = (op.JoinSmall(probe_key="c0", build_table="dim2",
+                             build_key="k", build_cols=("v",)),)
+        assert_rows_identical(cl.farview_request(cqp, ct, pipe).finalize(),
+                              solo_run(pipe, words, build=(bft, bwords)))

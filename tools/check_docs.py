@@ -1,0 +1,103 @@
+"""Docs drift guard (CI lint job + tier-1 via tests/test_docs.py).
+
+Two checks keep the documentation wired to reality:
+
+  1. every intra-repo markdown link (``[text](relative/path.md)``) in the
+     repo's ``*.md`` files resolves to an existing file — a renamed module
+     or a deleted doc breaks the build, not the reader;
+  2. the tier-1 verify command quoted in ROADMAP.md and README.md is the
+     same pytest invocation the CI workflow actually runs — the one
+     command a contributor is told to trust must be the one CI trusts.
+
+External URLs, anchors, and GitHub site-relative links (targets that
+resolve outside the repo, like the CI badge's ``../../actions/...``) are
+out of scope. Exit code 0 = clean, 1 = drift (each finding on stderr).
+
+    python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SKIP_DIRS = {".git", "__pycache__", ".claude", ".venv", "node_modules"}
+
+# the canonical tier-1 invocation; ROADMAP/README may prefix PYTHONPATH=…
+TIER1_CMD = "python -m pytest -x -q"
+TIER1_FILES = ("ROADMAP.md", "README.md")
+CI_WORKFLOW = os.path.join(".github", "workflows", "ci.yml")
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def markdown_files(root: str = ROOT) -> list[str]:
+    out = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        out.extend(os.path.join(dirpath, f) for f in filenames
+                   if f.endswith(".md"))
+    return sorted(out)
+
+
+def broken_links(md_path: str, root: str = ROOT) -> list[tuple[str, str]]:
+    """(target, reason) for every intra-repo link that does not resolve."""
+    with open(md_path, encoding="utf-8") as f:
+        text = f.read()
+    bad = []
+    for target in _LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        resolved = os.path.realpath(
+            os.path.join(os.path.dirname(md_path), path))
+        if not resolved.startswith(os.path.realpath(root) + os.sep):
+            continue        # GitHub site-relative (e.g. the CI badge)
+        if not os.path.exists(resolved):
+            bad.append((target, f"{os.path.relpath(md_path, root)} links "
+                                f"to missing {target!r}"))
+    return bad
+
+
+def tier1_drift(root: str = ROOT) -> list[str]:
+    """Places where the quoted tier-1 command and CI disagree."""
+    problems = []
+    for name in TIER1_FILES:
+        path = os.path.join(root, name)
+        if not os.path.exists(path):
+            problems.append(f"{name} is missing (tier-1 command lives there)")
+            continue
+        with open(path, encoding="utf-8") as f:
+            if TIER1_CMD not in f.read():
+                problems.append(
+                    f"{name} does not quote the tier-1 command "
+                    f"{TIER1_CMD!r}")
+    ci = os.path.join(root, CI_WORKFLOW)
+    if not os.path.exists(ci):
+        problems.append(f"{CI_WORKFLOW} is missing")
+    else:
+        with open(ci, encoding="utf-8") as f:
+            if TIER1_CMD not in f.read():
+                problems.append(
+                    f"{CI_WORKFLOW} does not run the tier-1 command "
+                    f"{TIER1_CMD!r} that ROADMAP/README promise")
+    return problems
+
+
+def main() -> int:
+    findings: list[str] = []
+    for md in markdown_files():
+        findings.extend(reason for _, reason in broken_links(md))
+    findings.extend(tier1_drift())
+    for f in findings:
+        print(f"docs-drift: {f}", file=sys.stderr)
+    n = len(markdown_files())
+    print(f"# checked {n} markdown files; {len(findings)} problems")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
