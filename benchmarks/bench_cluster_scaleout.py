@@ -127,6 +127,41 @@ def run() -> None:
                    mrows_per_s=round(thru / 1e6, 2),
                    speedup=round(thru / base, 2),
                    valid_rows=valid, padded_rows=padded)
+    _write_amplification()
+
+
+def _write_amplification() -> None:
+    """The price of surviving a node loss (PR 6): `replicas=2` writes
+    every partition twice, so ingest pays ~2x the pool bytes and wall
+    time of the single-copy layout. Reported side by side so the cost
+    of redundancy stays visible next to its failover benefit (see
+    bench_failover)."""
+    q = common.quick()
+    n = 1 << (13 if q else 18)
+    cols = tuple(Column(f"c{i}", "i32" if i == 0 else "f32")
+                 for i in range(8))
+    rng = np.random.default_rng(1)
+    words = FTable("t", cols, n_rows=n).encode(_word_data(rng, n, 64))
+    for k in (2,) if q else (2, 4):
+        bytes_by_rep, sec_by_rep = {}, {}
+        for rep in (1, 2):
+            cl = FarCluster(k, 128 * 2**20, replicas=rep)
+            cqp = cl.open_connection()
+            w0 = cl.stats.bytes_written
+            t0 = time.perf_counter()
+            ct = cl.alloc_table_mem(cqp, FTable("t", cols, n_rows=n))
+            cl.table_write(cqp, ct, words)
+            sec_by_rep[rep] = time.perf_counter() - t0
+            bytes_by_rep[rep] = cl.stats.bytes_written - w0
+            replica_bytes = (0 if ct.heat.replica_bytes_written is None
+                             else int(ct.heat.replica_bytes_written.sum()))
+            common.row("cluster_scaleout", f"write_k{rep}_{k}nodes",
+                       sec_by_rep[rep] * 1e6, nodes=k, rows=n, replicas=rep,
+                       bytes_written=int(bytes_by_rep[rep]),
+                       replica_bytes=replica_bytes,
+                       write_amplification=round(
+                           bytes_by_rep[rep] / bytes_by_rep[1], 2))
+            del cl, cqp, ct
 
 
 def main() -> None:

@@ -1,0 +1,176 @@
+"""Kill-a-node failover: dip and recovery under mixed load (PR 6).
+
+The availability story the replication tentpole exists for, measured
+end-to-end at 2 and 4 nodes with `replicas=2`:
+
+  pre_kill     hash-partitioned table, mixed selection + group-aggregate
+               rounds on a healthy cluster — the baseline throughput and
+               the byte-parity reference for every later phase.
+  during_kill  a node is killed BETWEEN submit and gather, so the
+               in-flight round eats the full failure path: dead dispatch,
+               health strike, reroute to the cyclic replica, re-sliced
+               resubmit, merge. The round must still return results
+               byte-identical to the healthy reference; its wall time is
+               the availability dip (dip_frac = during/pre throughput —
+               the guard is that it stays well above zero, i.e. the
+               cluster degrades instead of stalling).
+  heal         `FarCluster.heal` promotes replicas to primaries and
+               re-replicates onto the survivors; its wall time is the
+               recovery time (heal_s), reported per row.
+  post_heal    the same rounds on the healed map (dead node never
+               touched again). recovery_frac = post_heal/pre_kill
+               throughput; the acceptance bar is >= 0.9 at 4 nodes —
+               losing 1 of 4 overlap-only nodes must not cost more than
+               the lost overlap.
+
+Every during_kill / post_heal row asserts byte-identity against the
+healthy reference before it reports a time: a fast wrong answer is not a
+recovery.
+
+Standalone:  python -m benchmarks.bench_failover --json BENCH.json
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import operators as op
+from repro.core.cluster import FarCluster
+from repro.core.table import Column, FTable
+
+COLS = tuple(Column(f"c{i}", "i32" if i == 0 else "f32") for i in range(8))
+N_KEYS = 64
+
+PIPES = (
+    (op.Select((op.Predicate("c1", "<", 0.2),)),),
+    (op.GroupBy("c0", ("c1", "c2"), n_buckets=256),),
+)
+
+
+def _data(rng, keys):
+    d = {"c0": np.asarray(keys, np.int32)}
+    for i in range(1, 8):
+        # integer-valued floats: group sums are order-insensitive, so the
+        # byte-parity asserts are meaningful for the aggregate pipe too
+        d[f"c{i}"] = rng.integers(-50, 50, len(keys)).astype(np.float32)
+    return d
+
+
+def _round(cl, cqp, ct):
+    """One mixed scatter-gather round; returns the finalized results."""
+    pends = [cl.submit_request(cqp, ct, pipe) for pipe in PIPES]
+    return [p.wait().finalize() for p in pends]
+
+
+def _assert_parity(results, ref):
+    """Byte-identical to the healthy reference — zero wrong bytes."""
+    for res, r in zip(results, ref):
+        if res.kind == "groups":
+            assert set(res.groups) == set(r.groups)
+            for key in r.groups:
+                for a, b in zip(r.groups[key], res.groups[key]):
+                    np.testing.assert_array_equal(np.asarray(a),
+                                                  np.asarray(b))
+        else:
+            assert res.count == r.count
+            np.testing.assert_array_equal(np.asarray(res.rows),
+                                          np.asarray(r.rows))
+
+
+def _measure(cl, cqp, ct, n, repeat, ref=None):
+    """p50 round wall time and implied rows/s; parity-checked if ref."""
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        results = _round(cl, cqp, ct)
+        ts.append(time.perf_counter() - t0)
+        if ref is not None:
+            _assert_parity(results, ref)
+    sec = sorted(ts)[len(ts) // 2]
+    return sec, len(PIPES) * n / sec
+
+
+def run() -> None:
+    import gc
+
+    q = common.quick()
+    n = 1 << (14 if q else 18)
+    repeat = 1 if q else 5
+    node_counts = (2, 4)        # the 4-node row carries the recovery bar
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, N_KEYS, n).astype(np.int32)
+    words = FTable("t", COLS, n_rows=n).encode(_data(rng, keys))
+
+    for k in node_counts:
+        gc.collect()
+        cl = FarCluster(k, 128 * 2**20, replicas=2)
+        cqp = cl.open_connection()
+        ct = cl.alloc_table_mem(cqp, FTable("t", COLS, n_rows=n),
+                                partitioner="hash", keys=keys)
+        cl.table_write(cqp, ct, words)
+
+        ref = _round(cl, cqp, ct)               # warmup + parity reference
+        sec, base = _measure(cl, cqp, ct, n, repeat, ref)
+        common.row("failover", f"pre_kill_{k}nodes", sec * 1e6,
+                   nodes=k, rows=n, replicas=2,
+                   mrows_per_s=round(base / 1e6, 2))
+
+        # the failure round: kill AFTER submit, so the gather itself hits
+        # the dead node and pays detection + reroute + resubmit inline
+        victim = k - 1
+        t0 = time.perf_counter()
+        pends = [cl.submit_request(cqp, ct, pipe) for pipe in PIPES]
+        cl.fault.kill(victim)
+        results = [p.wait().finalize() for p in pends]
+        dip_sec = time.perf_counter() - t0
+        _assert_parity(results, ref)
+        assert cl.health.state(victim) == "dead"
+        dip_thru = len(PIPES) * n / dip_sec
+        common.row("failover", f"during_kill_{k}nodes", dip_sec * 1e6,
+                   nodes=k, rows=n, replicas=2, victim=victim,
+                   mrows_per_s=round(dip_thru / 1e6, 2),
+                   dip_frac=round(dip_thru / base, 3),
+                   failovers=int(ct.heat.failovers))
+
+        t0 = time.perf_counter()
+        report = cl.heal(cqp)
+        heal_sec = time.perf_counter() - t0
+        assert victim in report["dead_nodes"]
+        common.row("failover", f"heal_{k}nodes", heal_sec * 1e6,
+                   nodes=k, rows=n, replicas=2,
+                   promoted=len(report["promoted"]),
+                   re_replicated=len(report["re_replicated"]),
+                   heal_s=round(heal_sec, 3))
+
+        # healed map: the victim is never dispatched to again
+        before = cl.nodes[victim].dispatches
+        _round(cl, cqp, ct)                     # warmup the promoted routes
+        sec, thru = _measure(cl, cqp, ct, n, repeat, ref)
+        assert cl.nodes[victim].dispatches == before
+        common.row("failover", f"post_heal_{k}nodes", sec * 1e6,
+                   nodes=k, rows=n, replicas=2,
+                   mrows_per_s=round(thru / 1e6, 2),
+                   recovery_frac=round(thru / base, 3),
+                   heal_s=round(heal_sec, 3))
+        del cl, cqp, ct                         # release pools before next k
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    if args.quick:
+        common.QUICK = True
+    run()
+    common.print_csv()
+    if args.json:
+        common.write_json(args.json)
+
+
+if __name__ == "__main__":
+    main()

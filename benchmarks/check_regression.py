@@ -83,6 +83,31 @@ def compare(cur_rows: list[dict], base_rows: list[dict], *,
     return checked, failed
 
 
+def check_failover(cur_rows: list[dict], *, min_recovery: float,
+                   min_dip: float) -> list[str]:
+    """PR 6 chaos guards, checked against the CURRENT run only (no
+    baseline needed): every failover row that reports a recovery_frac
+    (post-heal throughput / pre-kill) must clear `min_recovery`, and
+    every dip_frac (during-kill throughput / pre-kill) must clear
+    `min_dip` — the cluster degrades under a node kill, it never
+    stalls. Returns human-readable failure lines."""
+    failures = []
+    for r in cur_rows:
+        if r.get("bench") != "failover":
+            continue
+        rec = r.get("recovery_frac")
+        if rec is not None and rec < min_recovery:
+            failures.append(
+                f"failover {r['name']}: recovery_frac {rec:.3f} "
+                f"< {min_recovery} (post-heal throughput did not recover)")
+        dip = r.get("dip_frac")
+        if dip is not None and dip < min_dip:
+            failures.append(
+                f"failover {r['name']}: dip_frac {dip:.3f} < {min_dip} "
+                f"(cluster stalled during the kill)")
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("current", help="fresh benchmarks.run --json output")
@@ -92,14 +117,30 @@ def main() -> int:
                     help="fail when current p50 > threshold x baseline")
     ap.add_argument("--floor", type=float, default=200.0,
                     help="skip baselines faster than this many us")
+    ap.add_argument("--min-recovery", type=float, default=0.75,
+                    help="fail when a failover row's post-heal throughput "
+                         "recovers to less than this fraction of pre-kill")
+    ap.add_argument("--min-dip", type=float, default=0.05,
+                    help="fail when during-kill throughput drops below "
+                         "this fraction of pre-kill (stall, not a dip)")
     args = ap.parse_args()
 
     cur_rows, cur_meta = load_rows(args.current)
+    chaos_failures = check_failover(cur_rows, min_recovery=args.min_recovery,
+                                    min_dip=args.min_dip)
+    n_chaos = sum(1 for r in cur_rows if r.get("bench") == "failover"
+                  and ("recovery_frac" in r or "dip_frac" in r))
+    for line in chaos_failures:
+        print(f"CHAOS GUARD FAILED: {line}")
+    if n_chaos:
+        print(f"# {n_chaos} failover rows checked "
+              f"(min-recovery {args.min_recovery}, min-dip {args.min_dip}), "
+              f"{len(chaos_failures)} failed")
     baseline = args.against or latest_committed_baseline(
         cur_meta.get("quick"))
     if baseline is None:
-        print("# no committed BENCH_*.json baseline; nothing to check")
-        return 0
+        print("# no committed BENCH_*.json baseline; nothing to diff")
+        return 1 if chaos_failures else 0
     base_rows, base_meta = load_rows(baseline)
     print(f"# current  {args.current} (quick={cur_meta.get('quick')}, "
           f"platform={cur_meta.get('platform')})")
@@ -114,7 +155,7 @@ def main() -> int:
               f"({ratio:5.2f}x){flag}")
     print(f"# {len(checked)} shared keys checked, {len(failed)} regressed "
           f"(threshold {args.threshold}x, floor {args.floor}us)")
-    return 1 if failed else 0
+    return 1 if failed or chaos_failures else 0
 
 
 if __name__ == "__main__":

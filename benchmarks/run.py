@@ -15,6 +15,8 @@
   bench_cluster_scaleout     mixed-workload throughput at 1/2/4 nodes
   bench_rebalance            skew-flip -> drift detect -> live migration
                              -> throughput recovery vs a fresh map
+  bench_failover             kill-a-node under mixed load: byte-identical
+                             failover dip -> heal -> throughput recovery
 
 FV rows time the fused jitted request path with BLOCKING p50 timing (see
 common.timeit); shipped/read byte columns are exact and carry the paper's
@@ -37,11 +39,11 @@ import argparse
 import sys
 import time
 
-from benchmarks import (bench_cluster_scaleout, bench_crypto, bench_far_kv,
-                        bench_grouping, bench_join, bench_multiclient,
-                        bench_multiclient_mixed, bench_projection,
-                        bench_rdma, bench_rebalance, bench_regex,
-                        bench_resources, bench_selection, common)
+from benchmarks import (bench_cluster_scaleout, bench_crypto, bench_failover,
+                        bench_far_kv, bench_grouping, bench_join,
+                        bench_multiclient, bench_multiclient_mixed,
+                        bench_projection, bench_rdma, bench_rebalance,
+                        bench_regex, bench_resources, bench_selection, common)
 from benchmarks.common import print_csv, write_json
 
 ALL = {
@@ -58,6 +60,7 @@ ALL = {
     "far_kv": bench_far_kv.run,
     "cluster_scaleout": bench_cluster_scaleout.run,
     "rebalance": bench_rebalance.run,
+    "failover": bench_failover.run,
 }
 
 

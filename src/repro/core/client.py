@@ -62,6 +62,18 @@ class FarviewError(RuntimeError):
     pass
 
 
+class NodeDeadError(FarviewError):
+    """The node is gone (killed host, dead NIC): every verb against it
+    fails until it is replaced. Cluster reads fail over to a replica;
+    `ReplicaUnavailableError` (distributed/health.py) is raised when no
+    replica survives. Carries the node identity for the health monitor."""
+
+    def __init__(self, node_id: int, *, op: str = "dispatch"):
+        super().__init__(f"node {node_id} is dead (failed {op})")
+        self.node_id = node_id
+        self.op = op
+
+
 class QPair:
     """Connection state: ids, region binding, transfer accounting.
 
@@ -139,8 +151,11 @@ class FViewNode:
     docs/architecture.md for the scheduler's bucketing rules."""
 
     def __init__(self, capacity_bytes: int = 64 * 2**20, *, n_regions: int = 6,
-                 n_shards: int = 1, interpret: bool | None = None):
+                 n_shards: int = 1, interpret: bool | None = None,
+                 node_id: int = 0, fault=None):
         self.pool = FarPool(capacity_bytes, n_shards=n_shards)
+        self.node_id = node_id      # cluster position (0 for a solo node)
+        self.fault = fault          # FaultInjector (duck-typed) or None
         self.regions = [DynamicRegion(i) for i in range(n_regions)]
         self._qp_counter = itertools.count()
         self._qpairs: dict[int, QPair] = {}
@@ -183,6 +198,16 @@ class FViewNode:
         self._queue = still
         self.regions[qp.region].busy_qp = None
         self._qpairs.pop(qp.qp_id, None)
+
+    # ----------------------------------------------------------------- faults
+    def check_fault(self, op: str = "dispatch") -> None:
+        """Consult the injected fault set (distributed/health.py) before
+        serving a verb: a killed node raises `NodeDeadError`, a slow node
+        sleeps, a drop budget raises the transient `DroppedDispatchError`.
+        Failures are first-class inputs — they hit exactly where a real
+        dead host or NIC timeout would, so failover is testable."""
+        if self.fault is not None:
+            self.fault.check(self.node_id, op)
 
     # -------------------------------------------------------------- scheduler
     @property
@@ -303,6 +328,7 @@ class FViewNode:
         return None
 
     def _dispatch(self, reqs: list[PendingRequest]) -> None:
+        self.check_fault("dispatch")
         ft0 = reqs[0].ft
         sig = op_ir.signature(reqs[0].pipeline)
         pipe = compile_pipeline(ft0, reqs[0].pipeline,
@@ -433,11 +459,13 @@ def free_table_mem(qp: QPair, ft: FTable) -> None:
 
 
 def table_write(qp: QPair, ft: FTable, words: np.ndarray) -> None:
+    qp.node.check_fault("table_write")
     qp.node.pool.write_table(ft, words)
 
 
 def table_read(qp: QPair, ft: FTable) -> jnp.ndarray:
     """Plain one-sided RDMA read: ships the whole table (no push-down)."""
+    qp.node.check_fault("table_read")
     rows = qp.node.pool.read_table(ft)
     qp._bytes_shipped += ft.n_bytes
     qp._bytes_read_pool += ft.n_bytes
@@ -453,6 +481,7 @@ def table_read_rows(qp: QPair, ft: FTable, row_idx) -> jnp.ndarray:
     destination), so the copy traffic is bounded by the rows actually
     moving and shows up in the QPair/pool byte counters like any other
     transfer."""
+    qp.node.check_fault("table_read")
     rows = qp.node.pool.read_rows(ft, row_idx)
     n_bytes = int(np.asarray(row_idx).size) * ft.row_words * WORD_BYTES
     qp._bytes_shipped += n_bytes

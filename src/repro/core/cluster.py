@@ -72,11 +72,38 @@ by the re-captured key rule in the same, atomic plan. A rekeying write
 (`table_write(..., keys=)`) routes rows by the captured rule so
 co-location survives data rewrites; the stale-rule pile-up it can cause
 is exactly what the detector flags. Full lifecycle: docs/cluster.md.
+
+The cluster SURVIVES node loss (PR 6). `alloc_table_mem(replicas=k)`
+writes every partition to k distinct nodes (replica r of partition i on
+node (i+r) mod N — the shared cyclic rule keeps a co-partitioned build's
+replicas on the same nodes as its probe's, so local joins stay local
+after a failover). Partition i's serving node is `ClusterTable.home[i]`
+(identity until a failure moves it); extra copies live in
+`ClusterTable.replicas[i]` and are registered in the holding node's
+catalog under the shard alias `"{name}@p{i}"` — the plain name on node n
+always means "node n's own partition n", which is what join build
+resolution relies on, so a dispatch served OFF its home node rewrites
+`JoinSmall.build_table` to the alias (`_localize_pipeline`). A
+`HealthMonitor` (distributed/health.py) classifies per-dispatch failures
+into the ALIVE → SUSPECT → DEAD lifecycle; scatter routes around DEAD
+nodes up front and `ClusterPending.wait` retries dropped dispatches on
+the same node (bounded backoff) or re-scatters a dead node's partitions
+to the next alive copy mid-flight — byte-identically, because the merge
+splice and the crypt keystream are keyed by the captured original-row
+indices, not by which node answered. `heal()` is the self-healing
+rebuild: promote a replica for every dead primary, re-replicate back to
+k copies on the survivors, flip the versioned map once per table —
+falling back to a cold-storage snapshot (`snapshot` / `restore_table`,
+via checkpoint.CheckpointManager) when every copy of a partition died.
+Failures themselves are injectable (`FarCluster.fault`, a FaultInjector
+threaded through every node's verb path) so all of this is testable.
 """
 from __future__ import annotations
 
 import threading
-from dataclasses import dataclass
+import time
+import warnings
+from dataclasses import dataclass, replace as dc_replace
 
 import jax.numpy as jnp
 import numpy as np
@@ -86,6 +113,9 @@ from repro.core import operators as op_ir
 from repro.core.pipeline import PipelineResult
 from repro.core.pool import PoolStats
 from repro.core.table import FTable, INT_EXACT_LIMIT, WORD_BYTES
+from repro.distributed.health import (DEAD, DroppedDispatchError,
+                                      FaultInjector, HealthMonitor,
+                                      ReplicaUnavailableError)
 from repro.distributed.rebalance import (MigrationPlan, TableHeat,
                                          detect_drift, plan_rebalance)
 from repro.distributed.sharding import (CoPartition, co_partition_spec,
@@ -115,6 +145,13 @@ class ClusterTable:
     keys: "np.ndarray | None" = None    # current per-row partition keys
     version: int = 0                    # bumped on every migration flip
     heat: TableHeat | None = None       # per-node load (drift detector input)
+    # replication (PR 6): partition i is SERVED by node `home[i]` (identity
+    # until a failure promotes a replica); `replicas[i]` maps node -> the
+    # extra copy it holds (registered there under the "{name}@p{i}" alias);
+    # `k_replicas` is the redundancy contract heal() restores after a loss.
+    home: "list[int] | None" = None
+    replicas: "list[dict] | None" = None
+    k_replicas: int = 1
 
     @property
     def name(self) -> str:
@@ -159,19 +196,120 @@ class ClusterPending:
     requests it was scattered under, plus the map `version` at scatter
     time: a live migration may flip the table's map while this verb is in
     flight, and the gather must splice with the OLD map's row indices —
-    the ones the partitions were actually dispatched with."""
+    the ones the partitions were actually dispatched with.
+
+    Failures resolve HERE, mid-flight (PR 6): each entry also remembers
+    its partition index, serving node and payload slice, so `wait()` can
+    classify a dispatch error — a `DroppedDispatchError` retries the SAME
+    node with bounded exponential backoff; a `NodeDeadError` marks the
+    node DEAD in the health monitor and re-scatters the partition to the
+    next alive copy (primary first, then replicas in placement order),
+    re-localizing the pipeline so a co-partitioned join resolves the
+    build shard on the new node. The rerouted gather stays byte-identical
+    because the captured row-index array keys both the merge splice and
+    the crypt keystream, and a replica holds the same bytes its primary
+    did. When every copy of a partition is dead the verb fails LOUDLY:
+    `ReplicaUnavailableError` with redundancy (k>1), the original
+    `NodeDeadError` without."""
+
+    MAX_SAME_NODE_RETRIES = 3       # DroppedDispatch retries per node
+    BACKOFF_S = 0.02                # doubled per retry, capped at 0.2 s
 
     def __init__(self, cluster: "FarCluster", ctable: ClusterTable,
                  pipeline: tuple, pends: list, part_rows: list,
-                 node_ids: list):
+                 node_ids: list, *, cqp=None, part_ids: list | None = None,
+                 handles: list | None = None,
+                 strings: "np.ndarray | None" = None,
+                 lengths: "np.ndarray | None" = None):
         self.cluster = cluster
         self.ctable = ctable
-        self.pipeline = pipeline
+        self.pipeline = pipeline    # base (un-localized) pipeline
         self.pends = pends          # per-node PendingRequests (owners only)
         self.part_rows = part_rows  # aligned original-row indices
-        self.node_ids = node_ids    # aligned owning-node indices
+        self.node_ids = node_ids    # aligned SERVING-node indices
+        self.cqp = cqp              # connection — needed to re-scatter
+        self.part_ids = list(node_ids) if part_ids is None else part_ids
+        self.handles = ([p.ft for p in pends] if handles is None
+                        else handles)
+        self.strings = strings      # full payload (re-sliced on failover)
+        self.lengths = lengths
         self.version = ctable.version   # map version at scatter time
         self._merged: PipelineResult | None = None
+
+    # ------------------------------------------------------------- failover
+    def _resubmit(self, k: int, node_id: int, handle) -> "fv.PendingRequest":
+        """Re-scatter entry k onto `node_id` and drain just that node."""
+        cluster, ct = self.cluster, self.ctable
+        idx = np.asarray(self.part_rows[k])
+        kwargs = {}
+        if ct.replicated:
+            if self.strings is not None:
+                kwargs = {"strings": self.strings, "lengths": self.lengths}
+            pend = cluster.nodes[node_id].submit(
+                self.cqp.qps[node_id], handle, self.pipeline, **kwargs)
+        else:
+            if self.strings is not None:
+                kwargs = {"strings": self.strings[idx],
+                          "lengths": self.lengths[idx]}
+            lp = cluster._localize_pipeline(
+                ct, self.pipeline, self.part_ids[k], node_id)
+            pend = cluster.nodes[node_id].submit(
+                self.cqp.qps[node_id], handle, lp,
+                row_ids=idx.astype(np.int32), **kwargs)
+            if ct.heat is not None:
+                ct.heat.record_dispatch(node_id, len(idx))
+                if node_id != ct.home[self.part_ids[k]]:
+                    ct.heat.record_failover(node_id, len(idx))
+        self.pends[k] = pend
+        self.node_ids[k] = node_id
+        self.handles[k] = handle
+        try:
+            cluster.nodes[node_id].flush()
+        except Exception:           # noqa: BLE001
+            pass    # the error (if ours) is on the pend; the loop inspects
+        return pend
+
+    def _settle_entry(self, k: int,
+                      flush_err: Exception | None) -> PipelineResult:
+        """Entry k's partial — retrying / failing over until it resolves."""
+        cluster, ct = self.cluster, self.ctable
+        health = cluster.health
+        pend = self.pends[k]
+        tried = {self.node_ids[k]}
+        retries = 0
+        while True:
+            if pend.error is None:
+                if pend.result is not None:
+                    return pend.result
+                raise flush_err or fv.FarviewError(
+                    "cluster partial was not dispatched")
+            err = pend.error
+            node_id = self.node_ids[k]
+            if isinstance(err, DroppedDispatchError):
+                state = health.record_failure(node_id, err)
+                if state != DEAD and retries < self.MAX_SAME_NODE_RETRIES:
+                    # transient: the node is still there — same-node retry
+                    time.sleep(min(self.BACKOFF_S * 2 ** retries, 0.2))
+                    retries += 1
+                    pend = self._resubmit(k, node_id, self.handles[k])
+                    continue
+            elif isinstance(err, fv.NodeDeadError):
+                health.record_failure(node_id, err)
+            else:
+                raise err       # not a node failure (bad pipeline, closed
+                #                 connection, ...): failover can't help
+            if self.cqp is None:
+                raise err
+            nxt = cluster._next_candidate(ct, self.part_ids[k], tried)
+            if nxt is None:     # redundancy exhausted — loud, never partial
+                if ct.replicated or ct.k_replicas > 1:
+                    raise ReplicaUnavailableError(
+                        f"table {ct.name!r}: every copy of partition "
+                        f"{self.part_ids[k]} is on a dead node") from err
+                raise err
+            tried.add(nxt[0])
+            retries = 0
+            pend = self._resubmit(k, nxt[0], nxt[1])
 
     def wait(self) -> PipelineResult:
         """Flush every involved node and merge the partials."""
@@ -182,14 +320,8 @@ class ClusterPending:
             self.cluster.flush()
         except Exception as e:      # may belong to another verb's partial
             flush_err = e
-        partials = []
-        for pend in self.pends:
-            if pend.error is not None:
-                raise pend.error
-            if pend.result is None:             # never dispatched
-                raise flush_err or fv.FarviewError(
-                    "cluster partial was not dispatched")
-            partials.append(pend.result)
+        partials = [self._settle_entry(k, flush_err)
+                    for k in range(len(self.pends))]
         if self.ctable.replicated:
             # served whole from node 0: the partial IS the solo-shaped
             # response — merging would only rebuild (and for a post-crypt,
@@ -227,13 +359,27 @@ class FarCluster:
 
     def __init__(self, n_nodes: int, capacity_bytes: int = 64 * 2**20, *,
                  n_regions: int = 6, interpret: bool | None = None,
-                 partitioner: str = "range", parallel: bool = True):
+                 partitioner: str = "range", parallel: bool = True,
+                 replicas: int = 1, dead_after: int = 3,
+                 slow_after_s: float = 300.0,
+                 fault: FaultInjector | None = None):
         if n_nodes < 1:
             raise ValueError("a cluster needs at least one node")
+        if not 1 <= replicas <= n_nodes:
+            raise ValueError(
+                f"replicas={replicas} needs 1..{n_nodes} (each copy of a "
+                "partition must land on a distinct node)")
+        # every node consults the SAME injector on every verb, so a test
+        # or bench kills a node in one call and every path sees it
+        self.fault = FaultInjector() if fault is None else fault
+        self.health = HealthMonitor(n_nodes, dead_after=dead_after,
+                                    slow_after_s=slow_after_s)
         self.nodes = [fv.FViewNode(capacity_bytes, n_regions=n_regions,
-                                   interpret=interpret)
-                      for _ in range(n_nodes)]
+                                   interpret=interpret, node_id=i,
+                                   fault=self.fault)
+                      for i in range(n_nodes)]
         self.partitioner = partitioner
+        self.replicas = int(replicas)   # default k for alloc_table_mem
         self.parallel = parallel and n_nodes > 1
         self.catalog: dict[str, ClusterTable] = {}  # name -> cluster handle
 
@@ -264,8 +410,17 @@ class FarCluster:
 
     def close_connection(self, cqp: ClusterQP) -> None:
         """Close the per-node QPairs; each node cancels the connection's
-        still-queued partition requests (their `wait()` raises)."""
+        still-queued partition requests (their `wait()` raises). A DEAD
+        node's QPair is skipped with a warning — the node is gone and so
+        is everything bound to it; raising here would wedge a teardown
+        that is already doing the right thing."""
         for node, qp in zip(self.nodes, cqp.qps):
+            if not self.health.is_alive(node.node_id):
+                warnings.warn(
+                    f"close_connection: node {node.node_id} is dead; "
+                    f"abandoning qp{qp.qp_id} without a close handshake",
+                    stacklevel=2)
+                continue
             node.close_connection(qp)
 
     # ---------------------------------------------------------------- memory
@@ -274,6 +429,7 @@ class FarCluster:
                         partitioner: str | None = None,
                         keys: np.ndarray | None = None,
                         co_partition: "ClusterTable | None" = None,
+                        replicas: int | None = None,
                         ) -> ClusterTable:
         """Partition (or replicate) a table across the nodes' pools.
 
@@ -289,7 +445,19 @@ class FarCluster:
         instead of N times. Falls back to `replicate=True` automatically
         when the referenced table carries no key rule (range-partitioned
         or replicated) — co-location is impossible there, and a silent
-        partition would drop join matches."""
+        partition would drop join matches.
+
+        `replicas=k` (default: the cluster's `replicas`) writes every
+        partition to k DISTINCT nodes — copy r of partition i lands on
+        node (i+r) mod N, so a probe and its co-partitioned build (same
+        rule, same k) keep their copies co-located and a failover join
+        stays local. Extra copies cost (k-1)x the write traffic and
+        footprint (`TableHeat.replica_bytes_written` itemizes it) and buy
+        node-loss survival: reads fail over, `heal()` re-replicates."""
+        k = self.replicas if replicas is None else int(replicas)
+        if not 1 <= k <= self.n_nodes:
+            raise ValueError(
+                f"replicas={k} needs 1..{self.n_nodes} distinct nodes")
         if ft.n_rows >= INT_EXACT_LIMIT:
             # row ids ride the fused packing as an f32 column (the same
             # exactness budget the DB enforces for i32 data at ingest);
@@ -310,9 +478,12 @@ class FarCluster:
             # build table by name when it joins its probe partition
             parts = self._alloc_parts(cqp, ft, [len(i) for i in part_rows],
                                       alloc_empty=True)
-            return self._register(ClusterTable(
+            ct = self._register(ClusterTable(
                 ft, parts, part_rows, f"co[{spec.kind}]", co_spec=spec,
-                keys=np.asarray(keys)))
+                keys=np.asarray(keys), k_replicas=k))
+            self._refresh_aliases(ct)
+            self._seed_replicas(cqp, ct)
+            return ct
         if replicate:
             parts = self._alloc_parts(
                 cqp, ft, [ft.n_rows] * self.n_nodes)
@@ -323,47 +494,234 @@ class FarCluster:
         kind = partitioner or self.partitioner
         part_rows = partition_rows(ft.n_rows, self.n_nodes, kind, keys=keys)
         parts = self._alloc_parts(cqp, ft, [len(i) for i in part_rows])
-        return self._register(ClusterTable(
+        ct = self._register(ClusterTable(
             ft, parts, part_rows, kind,
             co_spec=co_partition_spec(kind, self.n_nodes, keys),
-            keys=None if keys is None else np.asarray(keys)))
+            keys=None if keys is None else np.asarray(keys), k_replicas=k))
+        self._refresh_aliases(ct)
+        self._seed_replicas(cqp, ct)
+        return ct
 
     def _register(self, ctable: ClusterTable) -> ClusterTable:
         ctable.heat = TableHeat.zeros(self.n_nodes)
+        if ctable.home is None:
+            ctable.home = list(range(self.n_nodes))
+        if ctable.replicas is None:
+            ctable.replicas = [dict() for _ in range(self.n_nodes)]
         self.catalog[ctable.name] = ctable
         return ctable
 
     def _alloc_parts(self, cqp: ClusterQP, ft: FTable,
                      rows_per_node: list, *,
-                     alloc_empty: bool = False) -> list:
+                     alloc_empty: bool = False,
+                     homes: "list[int] | None" = None) -> list:
         """Allocate one partition per node (None for zero rows, unless
         `alloc_empty` — co-partitioned build shards register even when
         empty so probe-side joins resolve the name), rolling back the
         earlier nodes' allocations if a later pool is exhausted — a
-        half-scattered table would leak pages with no handle to free."""
+        half-scattered table would leak pages with no handle to free.
+        `homes` places partition i on node homes[i] (identity default —
+        non-identity only after a failover moved primaries)."""
         parts: list = []
         try:
-            for qp, n in zip(cqp.qps, rows_per_node):
+            for i, n in enumerate(rows_per_node):
                 if n == 0 and not alloc_empty:
                     parts.append(None)
                     continue
+                qp = cqp.qps[i if homes is None else homes[i]]
                 part = FTable(ft.name, ft.columns, n_rows=n,
                               str_width=ft.str_width)
                 fv.alloc_table_mem(qp, part)
                 parts.append(part)
         except Exception:
-            for qp, part in zip(cqp.qps, parts):
+            for i, part in enumerate(parts):
                 if part is not None:
-                    fv.free_table_mem(qp, part)
+                    fv.free_table_mem(
+                        cqp.qps[i if homes is None else homes[i]], part)
             raise
         return parts
 
-    def free_table_mem(self, cqp: ClusterQP, ctable: ClusterTable) -> None:
-        for qp, part in zip(cqp.qps, ctable.parts):
+    # ------------------------------------------------------- replica plumbing
+    def _seed_replicas(self, cqp: ClusterQP, ctable: ClusterTable) -> None:
+        """Create the k-1 extra copies at alloc time (empty until the
+        first `table_write` fills every copy); frees the whole table if a
+        pool can't hold its share — same all-or-nothing contract as
+        `_alloc_parts`."""
+        if ctable.k_replicas <= 1:
+            return
+        try:
+            self._replicate(ctable)
+        except Exception:
+            self.free_table_mem(cqp, ctable)
+            raise
+
+    def _replicate(self, ctable: ClusterTable, *,
+                   data: "np.ndarray | None" = None) -> list:
+        """Create the MISSING replica copies, cyclic placement on alive
+        nodes: partition i's next copy goes to the first alive node past
+        i (mod N) not already holding one. The rule is shared with
+        promotion in `heal`, so a probe and its co-partitioned build
+        (same rule, same k) keep co-located copies through any sequence
+        of failures. `data` (the full original-order row matrix) fills
+        the new copies — None at alloc time, the survivors' bytes during
+        a heal. Returns [(partition, node)] created."""
+        made: list = []
+        if ctable.replicated or ctable.k_replicas <= 1:
+            return made
+        n, sch = self.n_nodes, ctable.schema
+        for i, part in enumerate(ctable.parts):
+            if part is None:
+                continue
+            need = (ctable.k_replicas - 1) - len(ctable.replicas[i])
+            holders = {ctable.home[i], *ctable.replicas[i]}
+            for off in range(1, n):
+                if need <= 0:
+                    break
+                j = (i + off) % n
+                if j in holders or not self.health.is_alive(j):
+                    continue
+                rt = FTable(sch.name, sch.columns, n_rows=part.n_rows,
+                            str_width=sch.str_width)
+                node = self.nodes[j]
+                node.pool.alloc_table(rt)
+                node.tables[f"{ctable.name}@p{i}"] = rt
+                ctable.replicas[i][j] = rt
+                if data is not None and part.n_rows and not sch.str_width:
+                    node.pool.write_table(
+                        rt, data[np.asarray(ctable.part_rows[i])])
+                    if ctable.heat is not None:
+                        ctable.heat.record_replica_write(
+                            j, part.n_rows * sch.row_words * WORD_BYTES)
+                made.append((i, j))
+                need -= 1
+        return made
+
+    def _drop_replicas(self, ctable: ClusterTable) -> None:
+        """Free every extra copy (pages + catalog alias) — a migration is
+        about to re-place the partitions, so the copies are stale."""
+        for i, reps in enumerate(ctable.replicas):
+            for j, handle in list(reps.items()):
+                if self.health.is_alive(j):
+                    self.nodes[j].pool.free_table(handle)
+                    self.nodes[j].tables.pop(f"{ctable.name}@p{i}", None)
+            reps.clear()
+
+    def _rebuild_replicas(self, cqp: ClusterQP,
+                          ctable: ClusterTable) -> None:
+        """Restore the k-copy contract after a migration, filling the new
+        copies from the (post-flip) primaries."""
+        if ctable.replicated or ctable.k_replicas <= 1:
+            return
+        self._replicate(ctable, data=self._read_all(cqp, ctable))
+
+    def _refresh_aliases(self, ctable: ClusterTable) -> None:
+        """Re-point every node-catalog entry for this table.
+
+        Contract: `"{name}@p{i}"` on a node resolves partition i's copy
+        there (primary or replica); the PLAIN name on node n resolves
+        node n's own partition n — that is what `_resolve_build` reads
+        for a join dispatched on its home node, and what
+        `_localize_pipeline` relies on when it rewrites an off-home
+        dispatch to the alias."""
+        name = ctable.name
+        for node in self.nodes:
+            for i in range(len(ctable.parts)):
+                node.tables.pop(f"{name}@p{i}", None)
+        for i, part in enumerate(ctable.parts):
             if part is not None:
-                fv.free_table_mem(qp, part)
-        if self.catalog.get(ctable.name) is ctable:
-            del self.catalog[ctable.name]
+                self.nodes[ctable.home[i]].tables[f"{name}@p{i}"] = part
+            for j, handle in ctable.replicas[i].items():
+                self.nodes[j].tables[f"{name}@p{i}"] = handle
+        for n, node in enumerate(self.nodes):
+            if ctable.home[n] == n and ctable.parts[n] is not None:
+                node.tables[name] = ctable.parts[n]
+
+    # ---------------------------------------------------------- read routing
+    def _serving_candidates(self, ctable: ClusterTable,
+                            i: int) -> list:
+        """(node, handle) candidates for partition i: the primary first,
+        then replicas in cyclic placement order — DETERMINISTIC, so every
+        client (and the co-partitioned build's routing) picks the same
+        survivor for the same dead set."""
+        cands = [(ctable.home[i], ctable.parts[i])]
+        n = self.n_nodes
+        for j in sorted(ctable.replicas[i], key=lambda j: (j - i) % n):
+            cands.append((j, ctable.replicas[i][j]))
+        return cands
+
+    def _route(self, ctable: ClusterTable, i: int) -> tuple:
+        """First alive copy of partition i, or a loud typed error."""
+        cands = self._serving_candidates(ctable, i)
+        for node_id, handle in cands:
+            if self.health.is_alive(node_id):
+                return node_id, handle
+        if len(cands) > 1:
+            raise ReplicaUnavailableError(
+                f"table {ctable.name!r}: every copy of partition {i} "
+                f"(nodes {[c[0] for c in cands]}) is on a dead node")
+        raise fv.NodeDeadError(cands[0][0], op="submit")
+
+    def _next_candidate(self, ctable: ClusterTable, part_id: int,
+                        tried: set) -> "tuple | None":
+        """The next alive, untried copy for a mid-flight failover."""
+        if ctable.replicated:
+            for j in range(self.n_nodes):
+                if j not in tried and self.health.is_alive(j):
+                    return j, ctable.parts[j]
+            return None
+        for node_id, handle in self._serving_candidates(ctable, part_id):
+            if node_id not in tried and self.health.is_alive(node_id):
+                return node_id, handle
+        return None
+
+    def _localize_pipeline(self, ctable: ClusterTable, pipeline: tuple,
+                           part_id: int, node_id: int) -> tuple:
+        """Rewrite a join's build reference for an OFF-home dispatch.
+
+        On node n the plain build name resolves node n's own partition n;
+        partition `part_id` served anywhere else must resolve the build
+        through its shard alias. The home-node path returns the pipeline
+        object UNCHANGED, so healthy dispatch signatures — and the
+        scheduler's cross-client coalescing — are untouched."""
+        if node_id == part_id:
+            return pipeline
+        jop = op_ir.join_small_of(pipeline)
+        if jop is None:
+            return pipeline
+        bct = self.catalog.get(jop.build_table)
+        if bct is None or bct.replicated:
+            return pipeline
+        alias = f"{jop.build_table}@p{part_id}"
+        return tuple(dc_replace(o, build_table=alias) if o is jop else o
+                     for o in pipeline)
+
+    def free_table_mem(self, cqp: ClusterQP, ctable: ClusterTable) -> None:
+        """Free every copy (primaries and replicas). Copies stranded on a
+        DEAD node are skipped with a warning — their pages died with the
+        node; the cluster-side handles are dropped either way."""
+        name = ctable.name
+        if ctable.replicated:
+            copies = [(j, part) for j, part in enumerate(ctable.parts)]
+        else:
+            copies = [(ctable.home[i], part)
+                      for i, part in enumerate(ctable.parts)]
+            copies += [(j, h) for reps in ctable.replicas
+                       for j, h in reps.items()]
+        for j, handle in copies:
+            if handle is None:
+                continue
+            if not self.health.is_alive(j):
+                warnings.warn(
+                    f"free_table_mem: node {j} is dead; dropping a copy "
+                    f"of {name!r} without freeing its pages", stacklevel=2)
+                continue
+            fv.free_table_mem(cqp.qps[j], handle)
+        if not ctable.replicated:
+            for node in self.nodes:
+                for i in range(len(ctable.parts)):
+                    node.tables.pop(f"{name}@p{i}", None)
+        if self.catalog.get(name) is ctable:
+            del self.catalog[name]
 
     def table_write(self, cqp: ClusterQP, ctable: ClusterTable,
                     words: np.ndarray, *,
@@ -385,12 +743,59 @@ class FarCluster:
             self._rekey(cqp, ctable, words, np.asarray(keys))
             return
         if ctable.replicated:
-            for qp, part in zip(cqp.qps, ctable.parts):
-                fv.table_write(qp, part, words)
+            landed = 0
+            for j, (qp, part) in enumerate(zip(cqp.qps, ctable.parts)):
+                if self._write_copy(cqp, j, part, words, ctable):
+                    landed += 1
+            if not landed:
+                raise ReplicaUnavailableError(
+                    f"replicated table {ctable.name!r}: every node is dead")
             return
-        for qp, part, idx in zip(cqp.qps, ctable.parts, ctable.part_rows):
-            if part is not None:
-                fv.table_write(qp, part, words[np.asarray(idx)])
+        self._write_parts(cqp, ctable, words)
+
+    def _write_copy(self, cqp: ClusterQP, node_id: int, handle,
+                    data: np.ndarray, ctable: ClusterTable) -> bool:
+        """Write one copy; a DEAD node (known, or discovered by the write
+        itself) is skipped with a warning — its bytes died with it.
+        `heal` rebuilds redundancy; `revive` + rewrite refreshes a
+        resurrected node."""
+        if self.health.is_alive(node_id):
+            try:
+                fv.table_write(cqp.qps[node_id], handle, data)
+                return True
+            except fv.NodeDeadError as e:
+                self.health.record_failure(node_id, e)
+        warnings.warn(
+            f"table_write: node {node_id} is dead; its copy of "
+            f"{ctable.name!r} is not updated", stacklevel=3)
+        return False
+
+    def _write_parts(self, cqp: ClusterQP, ctable: ClusterTable,
+                     words: np.ndarray) -> None:
+        """Scatter rows to EVERY alive copy of each partition. A write
+        only fails when a partition has no alive copy at all — partial
+        redundancy degrades loudly (warning) but keeps serving."""
+        row_bytes = ctable.schema.row_words * WORD_BYTES
+        for i, (part, idx) in enumerate(zip(ctable.parts,
+                                            ctable.part_rows)):
+            if part is None or part.n_rows == 0:
+                continue
+            idx = np.asarray(idx)
+            data = words[idx]
+            copies = [(ctable.home[i], part)]
+            copies += sorted(ctable.replicas[i].items())
+            landed = 0
+            for node_id, handle in copies:
+                if not self._write_copy(cqp, node_id, handle, data, ctable):
+                    continue
+                landed += 1
+                if node_id != ctable.home[i] and ctable.heat is not None:
+                    ctable.heat.record_replica_write(
+                        node_id, len(idx) * row_bytes)
+            if not landed:
+                raise ReplicaUnavailableError(
+                    f"table {ctable.name!r}: no alive copy of partition "
+                    f"{i} to write")
 
     def _rekey(self, cqp: ClusterQP, ctable: ClusterTable,
                words: np.ndarray, keys: np.ndarray) -> None:
@@ -417,27 +822,63 @@ class FarCluster:
             # (same spec object — co-location contracts are untouched),
             # then write. Data travels once; old partitions' contents are
             # dead (the caller is overwriting every row) so they are
-            # dropped, not copied.
+            # dropped, not copied — replicas included (recreated empty
+            # below, filled by the write like any other copy).
+            self._drop_replicas(ctable)
             self._retarget(cqp, ctable, target, ctable.co_spec,
                            copy_data=False)
+            self._replicate(ctable)
             # heat describes load under the map it was observed on; a
             # flip starts the ledger over so the drift detector judges
             # the NEW placement on its own traffic
             ctable.heat.reset()
         ctable.keys = keys
-        for qp, part, pidx in zip(cqp.qps, ctable.parts, ctable.part_rows):
-            if part is not None and part.n_rows:
-                fv.table_write(qp, part, words[np.asarray(pidx)])
+        self._write_parts(cqp, ctable, words)
 
     def table_read(self, cqp: ClusterQP, ctable: ClusterTable) -> jnp.ndarray:
         """Plain gather-read: fetch every partition, restore original row
-        order via the partition map (ships the whole table — no push-down)."""
+        order via the partition map (ships the whole table — no
+        push-down). Fails over per partition: a dead primary's rows are
+        read from the first alive replica, loudly erroring only when a
+        partition has no surviving copy."""
         if ctable.replicated:
-            return fv.table_read(cqp.qps[0], ctable.parts[0])
+            last: Exception | None = None
+            for j in range(self.n_nodes):
+                if not self.health.is_alive(j):
+                    continue
+                try:
+                    return fv.table_read(cqp.qps[j], ctable.parts[j])
+                except fv.NodeDeadError as e:
+                    self.health.record_failure(j, e)
+                    last = e
+            raise ReplicaUnavailableError(
+                f"replicated table {ctable.name!r}: every node is dead"
+            ) from last
         out = np.zeros((ctable.n_rows, ctable.schema.row_words), np.float32)
-        for qp, part, idx in zip(cqp.qps, ctable.parts, ctable.part_rows):
-            if part is not None:
-                out[np.asarray(idx)] = np.asarray(fv.table_read(qp, part))
+        for i, (part, idx) in enumerate(zip(ctable.parts,
+                                            ctable.part_rows)):
+            if part is None or part.n_rows == 0:
+                continue
+            idx = np.asarray(idx)
+            served, last = False, None
+            for node_id, handle in self._serving_candidates(ctable, i):
+                if not self.health.is_alive(node_id):
+                    continue
+                try:
+                    out[idx] = np.asarray(
+                        fv.table_read(cqp.qps[node_id], handle))
+                    served = True
+                    break
+                except fv.NodeDeadError as e:
+                    self.health.record_failure(node_id, e)
+                    last = e
+            if not served:
+                if ctable.k_replicas > 1:
+                    raise ReplicaUnavailableError(
+                        f"table {ctable.name!r}: every copy of partition "
+                        f"{i} is on a dead node") from last
+                raise last or fv.NodeDeadError(ctable.home[i],
+                                               op="table_read")
         return jnp.asarray(out)
 
     # -------------------------------------------------------------- dispatch
@@ -456,34 +897,54 @@ class FarCluster:
         self._check_join_locality(ctable, pipeline)
         if ctable.replicated:
             # a replicated table has no partitions to scatter over: serve
-            # from node 0 exactly like a solo dispatch
-            pend = self.nodes[0].submit(
-                cqp.qps[0], ctable.parts[0], pipeline,
+            # whole from the first ALIVE copy (node 0 in a healthy
+            # cluster) exactly like a solo dispatch
+            serve = next((j for j in range(self.n_nodes)
+                          if self.health.is_alive(j)), None)
+            if serve is None:
+                raise ReplicaUnavailableError(
+                    f"replicated table {ctable.name!r}: every node is dead")
+            pend = self.nodes[serve].submit(
+                cqp.qps[serve], ctable.parts[serve], pipeline,
                 lengths=lengths, strings=strings)
             cqp.requests += 1
             return ClusterPending(self, ctable, pipeline, [pend],
-                                  [ctable.part_rows[0]], [0])
-        pends, prows, pnodes = [], [], []
-        for i, (node, qp, part, idx) in enumerate(
-                zip(self.nodes, cqp.qps, ctable.parts, ctable.part_rows)):
+                                  [ctable.part_rows[serve]], [serve],
+                                  cqp=cqp, part_ids=[serve],
+                                  handles=[ctable.parts[serve]],
+                                  strings=strings, lengths=lengths)
+        pends, prows, pnodes, pparts, phandles = [], [], [], [], []
+        for i, (part, idx) in enumerate(zip(ctable.parts,
+                                            ctable.part_rows)):
             if part is None or part.n_rows == 0:
                 continue
             idx = np.asarray(idx)
+            # route around known-DEAD nodes up front; mid-flight failures
+            # re-route in ClusterPending.wait
+            serve, handle = self._route(ctable, i)
             kwargs = {}
             if strings is not None:
                 kwargs["strings"] = strings[idx]
                 kwargs["lengths"] = lengths[idx]
-            pends.append(node.submit(qp, part, pipeline,
-                                     row_ids=idx.astype(np.int32), **kwargs))
+            lp = self._localize_pipeline(ctable, pipeline, i, serve)
+            pends.append(self.nodes[serve].submit(
+                cqp.qps[serve], handle, lp,
+                row_ids=idx.astype(np.int32), **kwargs))
             prows.append(idx)
-            pnodes.append(i)
+            pnodes.append(serve)
+            pparts.append(i)
+            phandles.append(handle)
             # scatter-side heat: the partition sizes ARE the per-node work
             # of this verb and are already client-side metadata — one
             # integer add per owning node, no device sync
-            ctable.heat.record_dispatch(i, len(idx))
+            ctable.heat.record_dispatch(serve, len(idx))
+            if serve != ctable.home[i]:
+                ctable.heat.record_failover(serve, len(idx))
         cqp.requests += 1
         ctable.heat.requests += 1
-        return ClusterPending(self, ctable, pipeline, pends, prows, pnodes)
+        return ClusterPending(self, ctable, pipeline, pends, prows, pnodes,
+                              cqp=cqp, part_ids=pparts, handles=phandles,
+                              strings=strings, lengths=lengths)
 
     def _check_join_locality(self, ctable: ClusterTable,
                              pipeline: tuple) -> None:
@@ -517,18 +978,29 @@ class FarCluster:
         """Drain every node's scheduler — concurrently when `parallel`
         (nodes are independent machines; here, independent executables
         whose dispatch threads overlap). Per-node dispatch errors stay
-        attached to their own requests; the first one re-raises after all
-        nodes drain, like a solo node's flush."""
+        attached to their own requests; each is captured WITH its node's
+        identity (`err.fv_node_id`, plus an exception note where the
+        runtime supports one) instead of dying opaquely inside a worker
+        thread, and the first re-raises after all nodes drain. Every
+        drain doubles as a health heartbeat: a clean drain records its
+        latency (slow = SUSPECT strike), an infrastructure failure
+        (`NodeDeadError` / `DroppedDispatchError`) feeds the lifecycle
+        state machine — request-level errors (a bad pipeline, a closed
+        connection) say nothing about node health and are not strikes."""
         pending = [node for node in self.nodes if node.has_queued]
         if not pending:
             return
         errors: list = [None] * len(pending)
+        drain_s: list = [0.0] * len(pending)
 
         def drain(i: int, node) -> None:
+            t0 = time.perf_counter()
             try:
                 node.flush()
             except Exception as e:          # noqa: BLE001 - re-raised below
                 errors[i] = e
+            finally:
+                drain_s[i] = time.perf_counter() - t0
 
         if self.parallel and len(pending) > 1:
             threads = [threading.Thread(target=drain, args=(i, node))
@@ -540,9 +1012,25 @@ class FarCluster:
         else:
             for i, node in enumerate(pending):
                 drain(i, node)
-        for err in errors:
-            if err is not None:
-                raise err
+        first: Exception | None = None
+        for node, err, dt in zip(pending, errors, drain_s):
+            if err is None:
+                self.health.heartbeat(node.node_id, dt)
+                continue
+            if isinstance(err, (fv.NodeDeadError, DroppedDispatchError)):
+                self.health.record_failure(node.node_id, err)
+            if getattr(err, "fv_node_id", None) is None:
+                try:
+                    err.fv_node_id = node.node_id
+                    if hasattr(err, "add_note"):    # Python >= 3.11
+                        err.add_note(
+                            f"raised draining cluster node {node.node_id}")
+                except Exception:       # noqa: BLE001 - slotted exceptions
+                    pass
+            if first is None:
+                first = err
+        if first is not None:
+            raise first
 
     def settle(self) -> None:
         """Flush + finalize in-flight responses on every node."""
@@ -633,11 +1121,34 @@ class FarCluster:
         map would break build-probe locality mid-plan). Heat counters
         reset after the flip so the detector sees post-migration traffic.
         """
+        dead = self.health.dead_nodes()
+        if dead:
+            raise fv.FarviewError(
+                f"cluster has dead nodes {dead}: run heal() (and revive or "
+                "replace the nodes) before rebalancing — the balancer "
+                "places over every node slot")
         plan = self.plan_table_rebalance(ctable, keys=keys,
                                          max_step_bytes=max_step_bytes)
         deps = self._dependents(ctable)
         if plan.empty and plan.new_spec is None:
             return plan
+        # migration re-places the partitions wholesale: the extra copies
+        # are stale the moment rows move, so drop them first and rebuild
+        # (from the post-flip primaries) on the way out — whatever map the
+        # migration ends on, even a failed one's interim map
+        group = [ctable] + deps
+        for t in group:
+            self._drop_replicas(t)
+        try:
+            self._rebalance_moves(cqp, ctable, plan, deps, keys)
+        finally:
+            for t in group:
+                self._rebuild_replicas(cqp, t)
+        return plan
+
+    def _rebalance_moves(self, cqp: ClusterQP, ctable: ClusterTable,
+                         plan: MigrationPlan, deps: list,
+                         keys: "np.ndarray | None") -> None:
         if deps:
             self._flip_group(cqp, ctable, plan, deps)
         elif plan.new_spec is not None:
@@ -676,7 +1187,6 @@ class FarCluster:
         ctable.heat.reset()
         for t in deps:
             t.heat.reset()
-        return plan
 
     def auto_rebalance(self, cqp: ClusterQP, *, threshold: float = 1.5,
                        max_step_bytes: int | None = None) -> dict:
@@ -693,6 +1203,188 @@ class FarCluster:
             out[name] = self.rebalance(cqp, ctable,
                                        max_step_bytes=max_step_bytes)
         return out
+
+    # ------------------------------------------------------------ self-healing
+    def _cyclic_alive(self, i: int) -> int:
+        """First alive node in cyclic order from i — the deterministic
+        placement rule shared by replication, promotion, and restore."""
+        for off in range(self.n_nodes):
+            j = (i + off) % self.n_nodes
+            if self.health.is_alive(j):
+                return j
+        raise ReplicaUnavailableError("every node in the cluster is dead")
+
+    def heal(self, cqp: ClusterQP, *, manager=None,
+             step: int | None = None) -> dict:
+        """Self-healing rebuild after node death: make every catalog
+        table fully served and fully redundant again, using only the
+        survivors.
+
+        Per table: (1) drop handles stranded on DEAD nodes; (2) promote
+        a replica for every dead primary — the first alive copy in
+        cyclic placement order, the same deterministic rule the replicas
+        were placed by, so a probe's partition i and its co-partitioned
+        build's partition i promote onto the SAME node and local joins
+        stay local; (3) re-replicate back to the k-copy contract,
+        copying bytes from the (post-promotion) primaries through the
+        pool read path; then flip the versioned map once — verbs in
+        flight splice under the map they were scattered with, exactly
+        like a rebalance flip. A partition whose every copy died is
+        re-materialized from the latest cold-storage snapshot when a
+        `CheckpointManager` is passed (`manager=`, optional `step=`),
+        and raises `ReplicaUnavailableError` otherwise — loud beats
+        silently serving holes. Idempotent; a no-op on a healthy
+        cluster. Returns a report dict (dead_nodes / promoted /
+        re_replicated / restored / under_replicated)."""
+        self.settle()
+        dead = set(self.health.dead_nodes())
+        report: dict = {"dead_nodes": sorted(dead), "promoted": [],
+                        "re_replicated": [], "restored": [],
+                        "under_replicated": []}
+        if not dead:
+            return report
+        for name, t in list(self.catalog.items()):
+            if t.replicated:
+                continue    # any alive node serves the full copy as-is
+            changed = False
+            for i in range(len(t.parts)):
+                for j in [j for j in t.replicas[i] if j in dead]:
+                    del t.replicas[i][j]    # pages died with the node
+                    changed = True
+            lost: list = []
+            for i, part in enumerate(t.parts):
+                if t.home[i] not in dead:
+                    continue
+                if part is None:            # no rows: nothing to lose,
+                    t.home[i] = self._cyclic_alive(i)   # re-home for later
+                    changed = True          # allocs (rekey/migration)
+                    continue
+                cands = sorted(t.replicas[i],
+                               key=lambda j: (j - i) % self.n_nodes)
+                if cands:
+                    j = cands[0]
+                    t.parts[i] = t.replicas[i].pop(j)
+                    t.home[i] = j
+                    report["promoted"].append((name, i, j))
+                    changed = True
+                else:
+                    lost.append(i)
+            if lost:
+                if manager is None:
+                    raise ReplicaUnavailableError(
+                        f"table {name!r}: partitions {lost} lost every "
+                        f"copy to dead nodes {sorted(dead)} and no "
+                        "snapshot manager was given — allocate with "
+                        "replicas>=2 or pass manager= to restore from "
+                        "cold storage")
+                self.restore_table(cqp, t, manager, step=step,
+                                   partitions=lost)
+                report["restored"].append((name, tuple(lost)))
+                changed = True
+            if t.k_replicas > 1:
+                made = self._replicate(t, data=self._read_all(cqp, t))
+                if made:
+                    report["re_replicated"].append((name, made))
+                    changed = True
+                short = [i for i, part in enumerate(t.parts)
+                         if part is not None
+                         and len(t.replicas[i]) < t.k_replicas - 1]
+                if short:
+                    report["under_replicated"].append((name, short))
+                    warnings.warn(
+                        f"heal: table {name!r} partitions {short} are "
+                        f"below {t.k_replicas} copies — not enough alive "
+                        "nodes", stacklevel=2)
+            if changed:
+                t.version += 1
+                self._refresh_aliases(t)
+                t.heat.reset()
+        return report
+
+    def snapshot(self, cqp: ClusterQP, manager,
+                 *, step: int | None = None) -> int:
+        """Consistent point-in-time snapshot of every catalog table to
+        simulated cold storage (a `checkpoint.CheckpointManager`).
+
+        Settles the cluster first so the captured bytes reflect every
+        acknowledged write, then gathers each table through the
+        failover-aware read path (a dead primary does not block the
+        snapshot while a replica survives) and saves one atomic step
+        directory. The snapshot is the LAST-RESORT recovery tier:
+        `heal(manager=...)` / `restore_table` re-materialize partitions
+        whose every live copy died. Returns the step written."""
+        self.settle()
+        if step is None:
+            last = manager.latest_step()
+            step = 0 if last is None else last + 1
+        tree: dict = {}
+        tables_meta: dict = {}
+        for name, t in self.catalog.items():
+            entry: dict = {}
+            if t.schema.str_width or t.n_rows == 0:
+                # string shells carry their bytes per-request; the pool
+                # holds no state worth shipping — snapshot the shape only
+                entry["words"] = np.zeros(
+                    (t.n_rows, t.schema.row_words), np.float32)
+            else:
+                entry["words"] = np.asarray(self.table_read(cqp, t))
+            if t.keys is not None:
+                entry["keys"] = np.asarray(t.keys)
+            tree[name] = entry
+            tables_meta[name] = {
+                "n_rows": int(t.n_rows), "partitioner": t.partitioner,
+                "replicated": bool(t.replicated),
+                "k_replicas": int(t.k_replicas),
+                "version": int(t.version),
+                "str_width": int(t.schema.str_width)}
+        manager.save(step, tree, {"kind": "farcluster",
+                                  "tables": tables_meta})
+        return step
+
+    def restore_table(self, cqp: ClusterQP, ctable: ClusterTable,
+                      manager, *, step: int | None = None,
+                      partitions: "list[int] | None" = None) -> list:
+        """Re-materialize lost partitions from a cold-storage snapshot.
+
+        `partitions` names the partition indices to rebuild (default:
+        every partition whose home node is DEAD). Each is re-allocated
+        on the first alive node in cyclic order, rewritten from the
+        snapshot's original-order row matrix, and flipped into the
+        versioned map. The bytes are as-of the snapshot — cold-storage
+        recovery trades recency for survival, which is why it is the
+        tier BELOW replica promotion. Returns the partitions rebuilt."""
+        tree, _meta = manager.restore(step)
+        if tree is None or ctable.name not in tree:
+            raise ReplicaUnavailableError(
+                f"no snapshot of table {ctable.name!r} under "
+                f"{manager.dir!r}")
+        words = np.asarray(tree[ctable.name]["words"], np.float32)
+        if words.shape[0] != ctable.n_rows:
+            raise fv.FarviewError(
+                f"snapshot of {ctable.name!r} covers {words.shape[0]} "
+                f"rows; the table has {ctable.n_rows}")
+        if partitions is None:
+            partitions = [i for i in range(len(ctable.parts))
+                          if not self.health.is_alive(ctable.home[i])]
+        sch = ctable.schema
+        restored: list = []
+        for i in partitions:
+            idx = np.asarray(ctable.part_rows[i])
+            if len(idx) == 0 and ctable.parts[i] is None:
+                continue
+            j = self._cyclic_alive(i)
+            rt = FTable(sch.name, sch.columns, n_rows=len(idx),
+                        str_width=sch.str_width)
+            fv.alloc_table_mem(cqp.qps[j], rt)
+            if len(idx) and not sch.str_width:
+                fv.table_write(cqp.qps[j], rt, words[idx])
+            ctable.parts[i] = rt
+            ctable.home[i] = j
+            restored.append(i)
+        if restored:
+            ctable.version += 1
+            self._refresh_aliases(ctable)
+        return restored
 
     def _read_all(self, cqp: ClusterQP, ctable: ClusterTable):
         """Full original-order row matrix via the pool read path, or None
@@ -744,17 +1436,18 @@ class FarCluster:
                     alloc_empty=t.partitioner.startswith("co[")))
         except Exception:
             for (t, _, changed), parts in zip(jobs, news):
-                for qp, part, ch in zip(cqp.qps, parts, changed):
+                for i, (part, ch) in enumerate(zip(parts, changed)):
                     if ch and part is not None:
-                        fv.free_table_mem(qp, part)
+                        fv.free_table_mem(cqp.qps[t.home[i]], part)
             self._restore_node_catalogs(jobs)
             raise
         for (t, target, changed), words, parts in zip(jobs, datas, news):
             if words is None:
                 continue
-            for qp, part, idx, ch in zip(cqp.qps, parts, target, changed):
+            for i, (part, idx, ch) in enumerate(zip(parts, target, changed)):
                 if ch and part is not None and part.n_rows:
-                    fv.table_write(qp, part, words[np.asarray(idx)])
+                    fv.table_write(cqp.qps[t.home[i]], part,
+                                   words[np.asarray(idx)])
         for (t, target, changed), parts in zip(jobs, news):
             old = t.parts
             t.parts = parts
@@ -763,9 +1456,10 @@ class FarCluster:
             t.co_spec = new_spec
             t.partitioner = (new_spec.kind if t is ctable
                              else f"co[{new_spec.kind}]")
-            for qp, part, ch in zip(cqp.qps, old, changed):
+            for i, (part, ch) in enumerate(zip(old, changed)):
                 if ch and part is not None:
-                    fv.free_table_mem(qp, part)
+                    fv.free_table_mem(cqp.qps[t.home[i]], part)
+            self._refresh_aliases(t)
 
     def _read_nodes(self, cqp: ClusterQP, ctable: ClusterTable, changed):
         """Row matrix holding the CHANGED partitions' rows at their
@@ -775,10 +1469,11 @@ class FarCluster:
         if ctable.schema.str_width or ctable.n_rows == 0:
             return None
         out = np.zeros((ctable.n_rows, ctable.schema.row_words), np.float32)
-        for qp, part, idx, ch in zip(cqp.qps, ctable.parts,
-                                     ctable.part_rows, changed):
+        for i, (part, idx, ch) in enumerate(zip(ctable.parts,
+                                                ctable.part_rows, changed)):
             if ch and part is not None and part.n_rows:
-                out[np.asarray(idx)] = np.asarray(fv.table_read(qp, part))
+                out[np.asarray(idx)] = np.asarray(
+                    fv.table_read(cqp.qps[ctable.home[i]], part))
         return out
 
     def _alloc_parts_masked(self, cqp: ClusterQP, ctable: ClusterTable,
@@ -790,8 +1485,8 @@ class FarCluster:
         sch = ctable.schema
         parts: list = []
         try:
-            for qp, cur, n, ch in zip(cqp.qps, ctable.parts,
-                                      rows_per_node, changed):
+            for i, (cur, n, ch) in enumerate(zip(ctable.parts,
+                                                 rows_per_node, changed)):
                 if not ch:
                     parts.append(cur)       # carried forward untouched
                     continue
@@ -800,24 +1495,22 @@ class FarCluster:
                     continue
                 part = FTable(sch.name, sch.columns, n_rows=n,
                               str_width=sch.str_width)
-                fv.alloc_table_mem(qp, part)
+                fv.alloc_table_mem(cqp.qps[ctable.home[i]], part)
                 parts.append(part)
         except Exception:
-            for qp, part, ch in zip(cqp.qps, parts, changed):
+            for i, (part, ch) in enumerate(zip(parts, changed)):
                 if ch and part is not None:
-                    fv.free_table_mem(qp, part)
+                    fv.free_table_mem(cqp.qps[ctable.home[i]], part)
             raise
         return parts
 
     def _restore_node_catalogs(self, jobs) -> None:
         """Rollback helper: a failed migration alloc may have overwritten
-        a node's name catalog with since-freed shards; point the entries
-        back at the still-serving old partitions so join build resolution
-        cannot touch freed pages."""
-        for t, _ in jobs:
-            for node, old in zip(self.nodes, t.parts):
-                if old is not None:
-                    node.tables[old.name] = old
+        a node's name catalog with since-freed shards; re-point the
+        entries (plain names AND shard aliases) at the still-serving old
+        partitions so join build resolution cannot touch freed pages."""
+        for t, *_ in jobs:
+            self._refresh_aliases(t)
 
     def _retarget(self, cqp: ClusterQP, ctable: ClusterTable,
                   target_part_rows: list, spec, *,
@@ -830,22 +1523,25 @@ class FarCluster:
         try:
             parts = self._alloc_parts(
                 cqp, ctable.schema, [len(i) for i in target_part_rows],
-                alloc_empty=ctable.partitioner.startswith("co["))
+                alloc_empty=ctable.partitioner.startswith("co["),
+                homes=ctable.home)
         except Exception:
             self._restore_node_catalogs([(ctable, None)])
             raise
         if words is not None:
-            for qp, part, idx in zip(cqp.qps, parts, target_part_rows):
+            for i, (part, idx) in enumerate(zip(parts, target_part_rows)):
                 if part is not None and part.n_rows:
-                    fv.table_write(qp, part, words[np.asarray(idx)])
+                    fv.table_write(cqp.qps[ctable.home[i]], part,
+                                   words[np.asarray(idx)])
         old = ctable.parts
         ctable.parts = parts
         ctable.part_rows = [np.asarray(i) for i in target_part_rows]
         ctable.version += 1
         ctable.co_spec = spec
-        for qp, part in zip(cqp.qps, old):
+        for i, part in enumerate(old):
             if part is not None:
-                fv.free_table_mem(qp, part)
+                fv.free_table_mem(cqp.qps[ctable.home[i]], part)
+        self._refresh_aliases(ctable)
 
     def _apply_step(self, cqp: ClusterQP, ctable: ClusterTable,
                     step) -> None:
@@ -855,6 +1551,8 @@ class FarCluster:
         Results stay byte-identical at every step boundary — the map
         always covers every row exactly once."""
         src, dst = step.src, step.dst
+        src_qp = cqp.qps[ctable.home[src]]
+        dst_qp = cqp.qps[ctable.home[dst]]
         src_rows = np.asarray(ctable.part_rows[src])
         dst_rows = np.asarray(ctable.part_rows[dst])
         moving = np.asarray(step.row_ids)
@@ -882,12 +1580,12 @@ class FarCluster:
         if not is_str:
             src_part = ctable.parts[src]
             moved_words = np.asarray(
-                fv.table_read_rows(cqp.qps[src], src_part, pos))
+                fv.table_read_rows(src_qp, src_part, pos))
             kept_words = np.asarray(fv.table_read_rows(
-                cqp.qps[src], src_part, np.nonzero(keep)[0]))
+                src_qp, src_part, np.nonzero(keep)[0]))
             if ctable.parts[dst] is not None and ctable.parts[dst].n_rows:
                 dst_words = np.asarray(
-                    fv.table_read(cqp.qps[dst], ctable.parts[dst]))
+                    fv.table_read(dst_qp, ctable.parts[dst]))
         dmat = (moved_words if dst_words is None and moved_words is not None
                 else None)
         if dst_words is not None:
@@ -901,23 +1599,23 @@ class FarCluster:
                 new_src = FTable(sch.name, sch.columns,
                                  n_rows=len(new_src_rows),
                                  str_width=sch.str_width)
-                fv.alloc_table_mem(cqp.qps[src], new_src)
-                allocd.append((src, new_src))
+                fv.alloc_table_mem(src_qp, new_src)
+                allocd.append((src_qp, new_src))
             new_dst = FTable(sch.name, sch.columns,
                              n_rows=len(new_dst_rows),
                              str_width=sch.str_width)
-            fv.alloc_table_mem(cqp.qps[dst], new_dst)
-            allocd.append((dst, new_dst))
+            fv.alloc_table_mem(dst_qp, new_dst)
+            allocd.append((dst_qp, new_dst))
         except Exception:
-            for i, part in allocd:
-                fv.free_table_mem(cqp.qps[i], part)
+            for qp, part in allocd:
+                fv.free_table_mem(qp, part)
             self._restore_node_catalogs([(ctable, None)])
             raise
         if not is_str:
             if new_src is not None and kept_words is not None:
-                fv.table_write(cqp.qps[src], new_src, kept_words)
+                fv.table_write(src_qp, new_src, kept_words)
             if dmat is not None:
-                fv.table_write(cqp.qps[dst], new_dst, dmat)
+                fv.table_write(dst_qp, new_dst, dmat)
         old_src, old_dst = ctable.parts[src], ctable.parts[dst]
         ctable.parts[src] = new_src
         ctable.parts[dst] = new_dst
@@ -925,9 +1623,10 @@ class FarCluster:
         ctable.part_rows[dst] = new_dst_rows
         ctable.version += 1
         if old_src is not None:
-            fv.free_table_mem(cqp.qps[src], old_src)
+            fv.free_table_mem(src_qp, old_src)
         if old_dst is not None:
-            fv.free_table_mem(cqp.qps[dst], old_dst)
+            fv.free_table_mem(dst_qp, old_dst)
+        self._refresh_aliases(ctable)
 
 
 def open_connection(cluster: FarCluster) -> ClusterQP:

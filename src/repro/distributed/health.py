@@ -1,0 +1,226 @@
+"""Node failure detection for `FarCluster` (PR 6).
+
+A pooled-memory node that dies takes its partitions with it — Maruf &
+Chowdhury (PAPERS.md) call exactly this resilience gap THE open problem
+of memory disaggregation. This module is the detection half of the fix:
+the replication / failover / self-healing half lives in
+`core/cluster.py` (k-replica placement, rerouted reads, `heal`).
+
+Three pieces:
+
+  * `HealthMonitor` — the node lifecycle state machine. Every node is
+    ALIVE until evidence says otherwise; transient dispatch failures or
+    slow drains move it to SUSPECT; a fatal error (`NodeDeadError`) or
+    `dead_after` consecutive strikes move it to DEAD. DEAD is terminal
+    for routing purposes until an explicit `revive` (a replaced node).
+    Evidence arrives from the dispatch path itself — every
+    `FarCluster.flush` drain doubles as a heartbeat (`heartbeat` records
+    the drain latency; a drain past `slow_after_s` is a SUSPECT strike),
+    so there is no separate prober thread to keep honest.
+  * `FaultInjector` — failures as first-class, testable inputs. A node
+    holds a reference and consults it on every dispatch / pool verb
+    (`FViewNode.check_fault`), so kill-node, slow-node and drop-dispatch
+    faults hit exactly where a real NIC timeout or dead host would.
+  * typed errors — `NodeDeadError` (the node is gone; reads must fail
+    over) vs `DroppedDispatchError` (transient; retry the same node) vs
+    `ReplicaUnavailableError` (redundancy exhausted: every copy of a
+    partition is on a DEAD node — loud, never silent).
+
+The monitor is pure client-side metadata, in keeping with the cluster's
+one-sided design: nodes never gossip about each other; the client that
+observes a failure is the one that records it.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+
+from repro.core.client import FarviewError, NodeDeadError
+
+ALIVE = "alive"
+SUSPECT = "suspect"
+DEAD = "dead"
+
+
+class DroppedDispatchError(FarviewError):
+    """A dispatch was lost in flight (injected or transient): the node is
+    still there, so the right response is a bounded same-node retry —
+    repeated drops escalate the node to SUSPECT and then DEAD."""
+
+    def __init__(self, node_id: int):
+        super().__init__(f"node {node_id}: dispatch dropped in flight")
+        self.node_id = node_id
+
+
+class ReplicaUnavailableError(FarviewError):
+    """Redundancy exhausted: every copy of a partition (primary and all
+    replicas) lives on a DEAD node. Raised loudly instead of serving a
+    partial result — zero wrong bytes beats availability here. The last
+    resort past this error is a cold-storage snapshot restore
+    (`FarCluster.heal(..., manager=)` / `restore_table`)."""
+
+
+# ------------------------------------------------------------------ injector
+class FaultInjector:
+    """Injectable failures, threaded through every node's verb path.
+
+    The cluster hands one injector to all of its `FViewNode`s; each node
+    calls `check(node_id)` before a dispatch or pool verb. Faults:
+
+      kill(i)               every verb on node i raises NodeDeadError
+                            until revive(i) — the dead-host case.
+      slow(i, seconds)      every verb on node i first sleeps — the
+                            degraded-NIC / overloaded-host case that the
+                            heartbeat latency check escalates to SUSPECT.
+      drop_dispatches(i, n) the next n verbs on node i raise
+                            DroppedDispatchError (transient; a same-node
+                            retry succeeds once the budget is spent).
+
+    Thread-safe: `FarCluster.flush` drains nodes in concurrent threads.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._killed: set[int] = set()
+        self._slow: dict[int, float] = {}
+        self._drop: dict[int, int] = {}
+
+    # -- fault controls (the test/bench-facing surface) ---------------------
+    def kill(self, node_id: int) -> None:
+        with self._lock:
+            self._killed.add(node_id)
+
+    def revive(self, node_id: int) -> None:
+        with self._lock:
+            self._killed.discard(node_id)
+            self._slow.pop(node_id, None)
+            self._drop.pop(node_id, None)
+
+    def slow(self, node_id: int, seconds: float) -> None:
+        with self._lock:
+            self._slow[node_id] = float(seconds)
+
+    def drop_dispatches(self, node_id: int, n: int = 1) -> None:
+        with self._lock:
+            self._drop[node_id] = self._drop.get(node_id, 0) + int(n)
+
+    def is_killed(self, node_id: int) -> bool:
+        with self._lock:
+            return node_id in self._killed
+
+    # -- the node-side check ------------------------------------------------
+    def check(self, node_id: int, op: str = "dispatch") -> None:
+        """Called by the node before serving a verb; raises the fault."""
+        with self._lock:
+            if node_id in self._killed:
+                raise NodeDeadError(node_id, op=op)
+            delay = self._slow.get(node_id, 0.0)
+            drop = False
+            if op == "dispatch" and self._drop.get(node_id, 0) > 0:
+                self._drop[node_id] -= 1
+                drop = True
+        if delay:
+            time.sleep(delay)
+        if drop:
+            raise DroppedDispatchError(node_id)
+
+
+# ------------------------------------------------------------------- monitor
+@dataclass
+class NodeHealth:
+    """One node's lifecycle record."""
+    state: str = ALIVE
+    strikes: int = 0                # consecutive failures / slow drains
+    last_error: Exception | None = None
+    last_latency_s: float = 0.0
+    heartbeats: int = 0
+    failures: int = 0
+
+
+class HealthMonitor:
+    """The ALIVE → SUSPECT → DEAD lifecycle, driven by dispatch outcomes.
+
+    `record_failure` classifies: a `NodeDeadError` is conclusive (DEAD
+    immediately — the node itself said so); anything else is a strike,
+    SUSPECT on the first and DEAD once `dead_after` consecutive strikes
+    accumulate. `record_success` clears strikes (SUSPECT heals back to
+    ALIVE; DEAD does not — a dead node that answers again is a split
+    brain, and only an explicit `revive` readmits it). `heartbeat`
+    records a drain latency; past `slow_after_s` it counts as a strike,
+    so a hung-but-not-gone node still escalates.
+    """
+
+    def __init__(self, n_nodes: int, *, dead_after: int = 3,
+                 slow_after_s: float = 30.0):
+        self.nodes = [NodeHealth() for _ in range(n_nodes)]
+        self.dead_after = int(dead_after)
+        self.slow_after_s = float(slow_after_s)
+        self._lock = threading.Lock()
+
+    # -- queries ------------------------------------------------------------
+    def state(self, node_id: int) -> str:
+        return self.nodes[node_id].state
+
+    def is_alive(self, node_id: int) -> bool:
+        """Routable: ALIVE or SUSPECT (a suspect still serves; it is just
+        one strike from losing that right)."""
+        return self.nodes[node_id].state != DEAD
+
+    def alive_nodes(self) -> list[int]:
+        return [i for i, h in enumerate(self.nodes) if h.state != DEAD]
+
+    def dead_nodes(self) -> list[int]:
+        return [i for i, h in enumerate(self.nodes) if h.state == DEAD]
+
+    def summary(self) -> dict[int, str]:
+        return {i: h.state for i, h in enumerate(self.nodes)}
+
+    # -- evidence -----------------------------------------------------------
+    def record_success(self, node_id: int) -> None:
+        with self._lock:
+            h = self.nodes[node_id]
+            if h.state == DEAD:
+                return              # only revive() readmits a dead node
+            h.strikes = 0
+            h.state = ALIVE
+            h.last_error = None
+
+    def record_failure(self, node_id: int, err: Exception) -> str:
+        with self._lock:
+            h = self.nodes[node_id]
+            h.failures += 1
+            h.last_error = err
+            if h.state == DEAD:
+                return DEAD
+            if isinstance(err, NodeDeadError):
+                h.state = DEAD      # conclusive: the node itself said so
+                return DEAD
+            h.strikes += 1
+            h.state = DEAD if h.strikes >= self.dead_after else SUSPECT
+            return h.state
+
+    def heartbeat(self, node_id: int, latency_s: float) -> None:
+        """A completed drain IS the heartbeat; a slow one is a strike."""
+        with self._lock:
+            h = self.nodes[node_id]
+            h.heartbeats += 1
+            h.last_latency_s = float(latency_s)
+        if latency_s > self.slow_after_s:
+            self.record_failure(node_id, FarviewError(
+                f"node {node_id}: drain took {latency_s:.2f}s "
+                f"(> {self.slow_after_s:.2f}s slow threshold)"))
+        else:
+            self.record_success(node_id)
+
+    def mark_dead(self, node_id: int) -> None:
+        with self._lock:
+            self.nodes[node_id].state = DEAD
+
+    def revive(self, node_id: int) -> None:
+        """Explicit readmission (a replaced/recovered node)."""
+        with self._lock:
+            h = self.nodes[node_id]
+            h.state = ALIVE
+            h.strikes = 0
+            h.last_error = None

@@ -59,13 +59,36 @@ class TableHeat:
     rows_touched: np.ndarray
     bytes_shipped: np.ndarray
     requests: int = 0
+    # replication ledger (PR 6): primary vs replica traffic per node.
+    # `replica_rows`[i] counts rows node i served AS A REPLICA (failover
+    # reads routed around a dead/refusing primary); `replica_bytes_written`
+    # [i] counts redundant write traffic node i absorbed for copies it
+    # holds of partitions primaried elsewhere — the write-amplification
+    # cost of `alloc_table_mem(replicas=k)` made visible per node.
+    replica_rows: "np.ndarray | None" = None
+    replica_bytes_written: "np.ndarray | None" = None
+    failovers: int = 0              # partition dispatches served by replicas
 
     @classmethod
     def zeros(cls, n_nodes: int) -> "TableHeat":
-        return cls(np.zeros(n_nodes, np.int64), np.zeros(n_nodes, np.int64))
+        return cls(np.zeros(n_nodes, np.int64), np.zeros(n_nodes, np.int64),
+                   replica_rows=np.zeros(n_nodes, np.int64),
+                   replica_bytes_written=np.zeros(n_nodes, np.int64))
 
     def record_dispatch(self, node: int, rows: int) -> None:
         self.rows_touched[node] += int(rows)
+
+    def record_failover(self, node: int, rows: int) -> None:
+        """A replica on `node` served a partition whose primary could not."""
+        if self.replica_rows is None:
+            self.replica_rows = np.zeros_like(self.rows_touched)
+        self.replica_rows[node] += int(rows)
+        self.failovers += 1
+
+    def record_replica_write(self, node: int, n_bytes: int) -> None:
+        if self.replica_bytes_written is None:
+            self.replica_bytes_written = np.zeros_like(self.rows_touched)
+        self.replica_bytes_written[node] += int(n_bytes)
 
     def record_response(self, node: int, n_bytes: int) -> None:
         self.bytes_shipped[node] += int(n_bytes)
@@ -74,6 +97,11 @@ class TableHeat:
         self.rows_touched[:] = 0
         self.bytes_shipped[:] = 0
         self.requests = 0
+        if self.replica_rows is not None:
+            self.replica_rows[:] = 0
+        if self.replica_bytes_written is not None:
+            self.replica_bytes_written[:] = 0
+        self.failovers = 0
 
 
 def drift_ratio(loads) -> float:

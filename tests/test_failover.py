@@ -1,0 +1,569 @@
+"""Replication, failure detection and self-healing (PR 6 tentpole).
+
+Contract under test: a FarCluster allocated with `replicas=k` survives
+the death of any single node with ZERO wrong bytes —
+
+(a) failover parity: a node killed while requests are IN FLIGHT makes
+    the gather reroute that node's partitions to a replica and the
+    merged result stays byte-identical to a healthy run, for selection,
+    group-aggregate, regex, crypt and co-partitioned join at 2 and 4
+    nodes;
+(b) health lifecycle: dropped dispatches retry on the SAME node and
+    strike it to SUSPECT; `dead_after` consecutive strikes (or one
+    NodeDeadError) escalate to DEAD; a success heals SUSPECT back to
+    ALIVE but never DEAD; a slow drain heartbeat is a strike;
+(c) self-healing: `heal()` promotes replicas to primaries, restores
+    k-fold redundancy on the survivors, bumps the table version, and
+    the healed cluster answers byte-identically;
+(d) redundancy exhausted is LOUD and typed: k=1 death raises
+    NodeDeadError; killing every holder of a partition raises
+    ReplicaUnavailableError; a cold-storage snapshot is the last
+    resort (`snapshot` + `heal(manager=)` round-trips the bytes);
+(e) teardown verbs tolerate the dead: `free_table_mem` and
+    `close_connection` skip DEAD nodes with a warning instead of
+    raising, and close racing an in-flight map flip stays clean.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import operators as op
+from repro.core.client import (FarviewError, FViewNode, NodeDeadError,
+                               alloc_table_mem, farview_request,
+                               merge_group_partials, open_connection,
+                               table_write)
+from repro.core.cluster import FarCluster
+from repro.core.table import FTable, Column, string_table
+from repro.checkpoint.manager import CheckpointManager
+from repro.distributed.health import (ALIVE, DEAD, SUSPECT,
+                                      DroppedDispatchError, FaultInjector,
+                                      HealthMonitor, ReplicaUnavailableError)
+from repro.kernels import ref as kref
+
+N = 600
+COLS = tuple(Column(f"c{i}", "i32" if i == 0 else "f32") for i in range(8))
+KEY, NONCE = (11, 22), 7
+NODE_COUNTS = (2, 4)
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(42)
+    d = {"c0": rng.integers(0, 13, N).astype(np.int32)}
+    for i in range(1, 8):
+        # integer-valued floats: sums are order-insensitive, so
+        # byte-identical is meaningful for aggregates too
+        d[f"c{i}"] = rng.integers(-50, 50, N).astype(np.float32)
+    return d
+
+
+def schema(name="t"):
+    return FTable(name, COLS, n_rows=N)
+
+
+def solo_run(pipe, words):
+    node = FViewNode(64 * 2**20)
+    qp = open_connection(node)
+    ft = schema()
+    alloc_table_mem(qp, ft)
+    table_write(qp, ft, words)
+    return farview_request(qp, ft, pipe).finalize()
+
+
+def replicated_cluster(words, k, *, partitioner="range", keys=None,
+                       replicas=2):
+    cl = FarCluster(k, partitioner=partitioner, replicas=replicas)
+    cqp = cl.open_connection()
+    ct = cl.alloc_table_mem(cqp, schema(), keys=keys)
+    cl.table_write(cqp, ct, words)
+    return cl, cqp, ct
+
+
+def assert_rows_identical(res, ref):
+    assert res.count == ref.count
+    np.testing.assert_array_equal(np.asarray(res.rows), np.asarray(ref.rows))
+    assert res.shipped_bytes == ref.shipped_bytes
+
+
+class TestFailoverParity:
+    """Kill a node while requests are in flight; results stay
+    byte-identical to a healthy run."""
+
+    @pytest.mark.parametrize("k", NODE_COUNTS)
+    def test_selection_mid_stream_kill(self, data, k):
+        pipe = (op.Select((op.Predicate("c1", "<", 0.0),
+                           op.Predicate("c2", ">", -20.0))),)
+        words = schema().encode(data)
+        ref = solo_run(pipe, words)
+        cl, cqp, ct = replicated_cluster(words, k)
+        pend = cl.submit_request(cqp, ct, pipe)
+        cl.fault.kill(k - 1)           # dies AFTER submit, BEFORE drain
+        res = pend.wait().finalize()
+        assert_rows_identical(res, ref)
+        assert cl.health.state(k - 1) == DEAD
+        assert ct.heat.failovers >= 1
+
+    @pytest.mark.parametrize("k", NODE_COUNTS)
+    def test_group_aggregate_mid_stream_kill(self, data, k):
+        pipe = (op.GroupBy("c0", ("c1", "c2"), n_buckets=128),)
+        words = schema().encode(data)
+        ref = merge_group_partials(schema(), pipe,
+                                   [solo_run(pipe, words)]).groups
+        cl, cqp, ct = replicated_cluster(words, k, partitioner="hash",
+                                         keys=data["c0"])
+        pend = cl.submit_request(cqp, ct, pipe)
+        cl.fault.kill(0)
+        got = pend.wait().finalize().groups
+        assert set(got) == set(ref)
+        for key in ref:
+            for a, b in zip(ref[key], got[key]):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    @pytest.mark.parametrize("k", NODE_COUNTS)
+    def test_crypt_post_mid_stream_kill(self, data, k):
+        """Rerouted partitions keep the keystream addressed by ORIGINAL
+        row offsets, so the spliced ciphertext is exact."""
+        pipe = (op.Select((op.Predicate("c2", ">", 0.0),)),
+                op.Crypt(key=KEY, nonce=NONCE, when="post"))
+        words = schema().encode(data)
+        ref = solo_run(pipe, words)
+        cl, cqp, ct = replicated_cluster(words, k, partitioner="hash",
+                                         keys=data["c0"])
+        pend = cl.submit_request(cqp, ct, pipe)
+        cl.fault.kill(k - 1)
+        assert_rows_identical(pend.wait().finalize(), ref)
+
+    @pytest.mark.parametrize("k", NODE_COUNTS)
+    def test_crypt_pre_mid_stream_kill(self, data, k):
+        """Encrypted-at-rest: the replica holds the same ciphertext bytes
+        as the primary, so the rerouted decrypt still lines up."""
+        pipe = (op.Crypt(key=KEY, nonce=NONCE, when="pre"),
+                op.Select((op.Predicate("c1", "<", 0.0),)))
+        flat = jnp.asarray(schema().encode(data).reshape(-1))
+        enc = np.asarray(kref.ctr_crypt(
+            flat.view(jnp.uint32), jnp.asarray(KEY, jnp.uint32), NONCE)
+        ).view(np.float32).reshape(N, len(COLS))
+        ref = solo_run(pipe, enc)
+        assert ref.count > 0
+        cl, cqp, ct = replicated_cluster(enc, k)
+        pend = cl.submit_request(cqp, ct, pipe)
+        cl.fault.kill(0)
+        assert_rows_identical(pend.wait().finalize(), ref)
+
+    @pytest.mark.parametrize("k", NODE_COUNTS)
+    def test_regex_mid_stream_kill(self, k):
+        strs = [b"error: disk full", b"all fine", b"ERROR", b"warn: error",
+                b"errr", b"the error is late"]
+        rng = np.random.default_rng(5)
+        ft, mat, lens = string_table(
+            "s", [strs[j] for j in rng.integers(0, len(strs), 300)], 24)
+        pipe = (op.RegexMatch("error"),)
+        node = FViewNode(64 * 2**20)
+        qp = open_connection(node)
+        solo_ft = FTable(ft.name, ft.columns, n_rows=ft.n_rows,
+                         str_width=ft.str_width)
+        alloc_table_mem(qp, solo_ft)
+        ref = farview_request(qp, solo_ft, pipe,
+                              strings=mat, lengths=lens).finalize()
+        cl = FarCluster(k, replicas=2)
+        cqp = cl.open_connection()
+        ct = cl.alloc_table_mem(
+            cqp, FTable(ft.name, ft.columns, n_rows=ft.n_rows,
+                        str_width=ft.str_width))
+        pend = cl.submit_request(cqp, ct, pipe, strings=mat, lengths=lens)
+        cl.fault.kill(k - 1)
+        res = pend.wait().finalize()
+        np.testing.assert_array_equal(np.asarray(res.mask),
+                                      np.asarray(ref.mask))
+
+    @pytest.mark.parametrize("k", NODE_COUNTS)
+    def test_copartitioned_join_mid_stream_kill(self, data, k):
+        """The cyclic replica rule keeps probe and build replicas
+        CO-LOCATED, so the rerouted node still answers the join from a
+        local build shard (via its `@p{i}` alias)."""
+        rng = np.random.default_rng(3)
+        bft = FTable("cust", (Column("k", "i32"), Column("v")), n_rows=40)
+        bd = {"k": rng.permutation(64)[:40].astype(np.int32),
+              "v": rng.integers(0, 99, 40).astype(np.float32)}
+        pipe = (op.JoinSmall(probe_key="c0", build_table="cust",
+                             build_key="k", build_cols=("v",)),)
+        jdata = dict(data)
+        jdata["c0"] = rng.integers(0, 64, N).astype(np.int32)
+        words = schema().encode(jdata)
+        node = FViewNode(64 * 2**20)
+        qp = open_connection(node)
+        b = FTable(bft.name, bft.columns, n_rows=bft.n_rows)
+        alloc_table_mem(qp, b)
+        table_write(qp, b, b.encode(bd))
+        ft = schema()
+        alloc_table_mem(qp, ft)
+        table_write(qp, ft, words)
+        ref = farview_request(qp, ft, pipe).finalize()
+
+        cl = FarCluster(k, replicas=2)
+        cqp = cl.open_connection()
+        ct = cl.alloc_table_mem(cqp, schema(), partitioner="hash",
+                                keys=jdata["c0"])
+        cl.table_write(cqp, ct, words)
+        cb = cl.alloc_table_mem(
+            cqp, FTable(bft.name, bft.columns, n_rows=bft.n_rows),
+            co_partition=ct, keys=bd["k"])
+        cl.table_write(cqp, cb, bft.encode(bd))
+        pend = cl.submit_request(cqp, ct, pipe)
+        cl.fault.kill(k - 1)
+        assert_rows_identical(pend.wait().finalize(), ref)
+        # and again after healing, from the promoted primaries
+        cl.heal(cqp)
+        assert_rows_identical(
+            cl.farview_request(cqp, ct, pipe).finalize(), ref)
+
+    def test_kill_before_submit_routes_around(self, data):
+        """A node already DEAD at submit time is never dispatched to."""
+        pipe = (op.Select((op.Predicate("c1", "<", 0.0),)),)
+        words = schema().encode(data)
+        ref = solo_run(pipe, words)
+        cl, cqp, ct = replicated_cluster(words, 3)
+        cl.fault.kill(1)
+        cl.health.mark_dead(1)
+        res = cl.farview_request(cqp, ct, pipe).finalize()
+        assert_rows_identical(res, ref)
+        assert cl.nodes[1].dispatches == 0
+
+    def test_table_read_fails_over(self, data):
+        words = schema().encode(data)
+        cl, cqp, ct = replicated_cluster(words, 3)
+        cl.fault.kill(2)
+        got = np.asarray(cl.table_read(cqp, ct))
+        np.testing.assert_array_equal(got, words.astype(np.float32))
+        assert cl.health.state(2) == DEAD
+
+
+class TestHealthLifecycle:
+    def test_dropped_dispatch_retries_same_node(self, data):
+        """A transient drop retries on the SAME node (no failover), the
+        result is exact, and the node is left SUSPECT, not DEAD."""
+        pipe = (op.Select((op.Predicate("c1", "<", 0.0),)),)
+        words = schema().encode(data)
+        ref = solo_run(pipe, words)
+        cl, cqp, ct = replicated_cluster(words, 2)
+        cl.fault.drop_dispatches(1, 1)
+        res = cl.farview_request(cqp, ct, pipe).finalize()
+        assert_rows_identical(res, ref)
+        assert cl.health.state(1) == SUSPECT
+        assert ct.heat.failovers == 0          # same-node retry, no reroute
+        # the next healthy round heals it back to ALIVE
+        cl.farview_request(cqp, ct, pipe)
+        assert cl.health.state(1) == ALIVE
+
+    def test_strikes_escalate_to_dead(self):
+        mon = HealthMonitor(2, dead_after=3)
+        err = FarviewError("transient")
+        assert mon.record_failure(1, err) == SUSPECT
+        assert mon.record_failure(1, err) == SUSPECT
+        assert mon.record_failure(1, err) == DEAD
+        assert mon.dead_nodes() == [1]
+        # success does NOT resurrect a dead node; revive() does
+        mon.record_success(1)
+        assert mon.state(1) == DEAD
+        mon.revive(1)
+        assert mon.state(1) == ALIVE and mon.alive_nodes() == [0, 1]
+
+    def test_node_dead_error_is_conclusive(self):
+        mon = HealthMonitor(3)
+        assert mon.record_failure(0, NodeDeadError(0)) == DEAD
+        assert mon.summary() == {0: DEAD, 1: ALIVE, 2: ALIVE}
+
+    def test_slow_heartbeat_is_a_strike(self):
+        mon = HealthMonitor(1, dead_after=2, slow_after_s=0.5)
+        mon.heartbeat(0, 0.1)
+        assert mon.state(0) == ALIVE
+        mon.heartbeat(0, 1.0)
+        assert mon.state(0) == SUSPECT
+        mon.heartbeat(0, 2.0)
+        assert mon.state(0) == DEAD
+        assert mon.nodes[0].heartbeats == 3
+
+    def test_slow_node_escalates_via_flush(self, data):
+        """An injected slow fault makes the drain latency trip the
+        heartbeat threshold — detection with no separate prober."""
+        pipe = (op.Select((op.Predicate("c1", "<", 0.0),)),)
+        words = schema().encode(data)
+        cl = FarCluster(2, replicas=2, slow_after_s=0.05, dead_after=2)
+        cqp = cl.open_connection()
+        ct = cl.alloc_table_mem(cqp, schema())
+        cl.table_write(cqp, ct, words)
+        cl.fault.slow(1, 0.2)
+        cl.farview_request(cqp, ct, pipe)
+        assert cl.health.state(1) in (SUSPECT, DEAD)
+
+    def test_user_error_is_not_a_strike(self, data):
+        """A bad pipeline is the USER's failure; the node that faithfully
+        reported it must stay ALIVE."""
+        words = schema().encode(data)
+        cl, cqp, ct = replicated_cluster(words, 2)
+        with pytest.raises(KeyError, match="nope"):
+            cl.farview_request(
+                cqp, ct, (op.Select((op.Predicate("nope", "<", 0.0),)),))
+        assert all(cl.health.state(i) == ALIVE for i in range(2))
+
+    def test_flush_error_carries_node_identity(self, data):
+        """Satellite (a): the per-node exception surfaced by flush names
+        the node that raised it."""
+        words = schema().encode(data)
+        cl = FarCluster(2)          # k=1: nothing to fail over to
+        cqp = cl.open_connection()
+        ct = cl.alloc_table_mem(cqp, schema())
+        cl.table_write(cqp, ct, words)
+        pend = cl.submit_request(
+            cqp, ct, (op.Select((op.Predicate("c1", "<", 0.0),)),))
+        cl.fault.kill(1)
+        with pytest.raises(NodeDeadError) as ei:
+            pend.wait()
+        assert ei.value.node_id == 1
+        assert getattr(ei.value, "fv_node_id", None) == 1
+
+
+class TestSelfHealing:
+    def test_heal_promotes_and_rereplicates(self, data):
+        words = schema().encode(data)
+        pipe = (op.Select((op.Predicate("c1", "<", 0.0),)),)
+        ref = solo_run(pipe, words)
+        cl, cqp, ct = replicated_cluster(words, 3)
+        v0 = ct.version
+        cl.fault.kill(1)
+        cl.farview_request(cqp, ct, pipe)            # detect via failover
+        report = cl.heal(cqp)
+        assert report["dead_nodes"] == [1]
+        assert ("t", 1, 2) in report["promoted"]     # cyclic successor
+        assert ct.version == v0 + 1
+        assert ct.home[1] == 2 and ct.parts[1] is not None
+        # full redundancy again: every partition has k=2 alive copies
+        for i in range(3):
+            holders = {ct.home[i]} | set(ct.replicas[i])
+            assert len(holders) == 2
+            assert all(cl.health.is_alive(j) for j in holders)
+        assert not report["under_replicated"]
+        # healed cluster answers byte-identically, without touching node 1
+        d1 = cl.nodes[1].dispatches
+        assert_rows_identical(
+            cl.farview_request(cqp, ct, pipe).finalize(), ref)
+        assert cl.nodes[1].dispatches == d1
+        # and survives ANOTHER death (the re-replicated copies are real)
+        pend = cl.submit_request(cqp, ct, pipe)
+        cl.fault.kill(2)
+        assert_rows_identical(pend.wait().finalize(), ref)
+
+    def test_heal_two_node_cluster_under_replicates(self, data):
+        """k=2 replicas on 2 nodes, one dies: heal promotes but CANNOT
+        restore redundancy — it must say so, not pretend."""
+        words = schema().encode(data)
+        cl, cqp, ct = replicated_cluster(words, 2)
+        cl.fault.kill(0)
+        cl.health.mark_dead(0)
+        with pytest.warns(UserWarning, match="below 2 copies"):
+            report = cl.heal(cqp)
+        assert report["under_replicated"]
+        pipe = (op.Select((op.Predicate("c1", "<", 0.0),)),)
+        assert_rows_identical(
+            cl.farview_request(cqp, ct, pipe).finalize(),
+            solo_run(pipe, words))
+
+    def test_heal_is_idempotent(self, data):
+        words = schema().encode(data)
+        cl, cqp, ct = replicated_cluster(words, 3)
+        cl.fault.kill(1)
+        cl.health.mark_dead(1)
+        cl.heal(cqp)
+        v1 = ct.version
+        report = cl.heal(cqp)                        # nothing left to do
+        assert not report["promoted"] and not report["re_replicated"]
+        assert ct.version == v1
+
+    def test_rebalance_refuses_dead_cluster(self, data):
+        words = schema().encode(data)
+        cl, cqp, ct = replicated_cluster(words, 3, partitioner="hash",
+                                         keys=data["c0"])
+        cl.fault.kill(2)
+        cl.health.mark_dead(2)
+        with pytest.raises(FarviewError, match="heal"):
+            cl.rebalance(cqp, ct, keys=data["c0"])
+
+
+class TestRedundancyExhausted:
+    def test_k1_death_raises_node_dead(self, data):
+        words = schema().encode(data)
+        cl = FarCluster(2)                           # replicas=1
+        cqp = cl.open_connection()
+        ct = cl.alloc_table_mem(cqp, schema())
+        cl.table_write(cqp, ct, words)
+        cl.fault.kill(0)
+        with pytest.raises(NodeDeadError):
+            cl.farview_request(
+                cqp, ct, (op.Select((op.Predicate("c1", "<", 0.0),)),))
+
+    def test_all_copies_dead_raises_replica_unavailable(self, data):
+        """k=2 on 2 nodes: kill both holders — typed, loud."""
+        words = schema().encode(data)
+        cl, cqp, ct = replicated_cluster(words, 2)
+        cl.fault.kill(0)
+        cl.fault.kill(1)
+        with pytest.raises(ReplicaUnavailableError):
+            cl.farview_request(
+                cqp, ct, (op.Select((op.Predicate("c1", "<", 0.0),)),))
+
+    def test_heal_without_manager_refuses_lost_partition(self, data):
+        words = schema().encode(data)
+        cl = FarCluster(3)                           # k=1: death = loss
+        cqp = cl.open_connection()
+        ct = cl.alloc_table_mem(cqp, schema())
+        cl.table_write(cqp, ct, words)
+        cl.fault.kill(0)
+        cl.health.mark_dead(0)
+        with pytest.raises(ReplicaUnavailableError, match="manager"):
+            cl.heal(cqp)
+
+    def test_snapshot_restore_roundtrip(self, data, tmp_path):
+        """The last resort: k=1, node dies, heal(manager=) re-materializes
+        the lost partition from the snapshot, byte-for-byte."""
+        pipe = (op.Select((op.Predicate("c1", "<", 0.0),)),)
+        words = schema().encode(data)
+        ref = solo_run(pipe, words)
+        cl = FarCluster(3)
+        cqp = cl.open_connection()
+        ct = cl.alloc_table_mem(cqp, schema())
+        cl.table_write(cqp, ct, words)
+        mgr = CheckpointManager(str(tmp_path / "ckpt"))
+        step = cl.snapshot(cqp, mgr)
+        assert mgr.latest_step() == step
+        cl.fault.kill(0)
+        cl.health.mark_dead(0)
+        cl.fault.revive(0)      # pages are gone either way (fresh host)
+        report = cl.heal(cqp, manager=mgr)
+        assert ("t", (0,)) in report["restored"]
+        assert ct.home[0] != 0 and ct.parts[0] is not None
+        assert_rows_identical(
+            cl.farview_request(cqp, ct, pipe).finalize(), ref)
+        got = np.asarray(cl.table_read(cqp, ct))
+        np.testing.assert_array_equal(got, words.astype(np.float32))
+
+
+class TestDeadTolerantTeardown:
+    def test_free_table_mem_skips_dead(self, data):
+        words = schema().encode(data)
+        cl, cqp, ct = replicated_cluster(words, 3)
+        cl.fault.kill(1)
+        cl.health.mark_dead(1)
+        with pytest.warns(UserWarning, match="dead"):
+            cl.free_table_mem(cqp, ct)
+        assert ct.name not in cl.catalog
+        # survivors' pages really freed: a same-size realloc fits
+        ct2 = cl.alloc_table_mem(cqp, schema("t2"))
+        cl.table_write(cqp, ct2, words)
+
+    def test_close_connection_skips_dead(self, data):
+        words = schema().encode(data)
+        cl, cqp, ct = replicated_cluster(words, 3)
+        cl.fault.kill(2)
+        cl.health.mark_dead(2)
+        with pytest.warns(UserWarning, match="dead"):
+            cl.close_connection(cqp)
+        with pytest.raises(FarviewError, match="closed"):
+            cl.submit_request(
+                cqp, ct, (op.Select((op.Predicate("c1", "<", 0.0),)),))
+
+    def test_close_racing_map_flip(self, data):
+        """Satellite (b): a connection closed between submit and settle of
+        a heal (map flip) neither deadlocks nor double-frees; the OTHER
+        tenant's table flips and keeps answering."""
+        pipe = (op.Select((op.Predicate("c1", "<", 0.0),)),)
+        words = schema().encode(data)
+        ref = solo_run(pipe, words)
+        cl = FarCluster(3, replicas=2)
+        doomed_qp = cl.open_connection()
+        alive_qp = cl.open_connection()
+        doomed_ct = cl.alloc_table_mem(doomed_qp, schema("d"))
+        alive_ct = cl.alloc_table_mem(alive_qp, schema("a"))
+        cl.table_write(doomed_qp, doomed_ct, words)
+        cl.table_write(alive_qp, alive_ct, words)
+        doomed = cl.submit_request(doomed_qp, doomed_ct, pipe)
+        cl.fault.kill(1)
+        cl.health.mark_dead(1)
+        cl.close_connection(doomed_qp)          # races the upcoming flip
+        cl.heal(alive_qp)                       # flips BOTH tables' maps
+        with pytest.raises(FarviewError, match="closed"):
+            doomed.wait()
+        assert alive_ct.home[1] != 1
+        assert_rows_identical(
+            cl.farview_request(alive_qp, alive_ct, pipe).finalize(), ref)
+
+    def test_writes_skip_dead_copies(self, data):
+        """table_write lands on every ALIVE copy and warns about the dead
+        one; reads after heal still see the new bytes."""
+        words = schema().encode(data)
+        cl, cqp, ct = replicated_cluster(words, 3)
+        cl.fault.kill(1)
+        cl.health.mark_dead(1)
+        words2 = words + 1.0
+        with pytest.warns(UserWarning, match="dead"):
+            cl.table_write(cqp, ct, words2)
+        cl.heal(cqp)
+        got = np.asarray(cl.table_read(cqp, ct))
+        np.testing.assert_array_equal(got, words2.astype(np.float32))
+
+
+class TestReplicaPlacement:
+    def test_cyclic_layout_and_aliases(self, data):
+        """Copy r of partition i lands on (i + r) % n, and every copy is
+        cataloged under the `name@p{i}` alias on its holder."""
+        words = schema().encode(data)
+        cl, cqp, ct = replicated_cluster(words, 3)
+        assert ct.k_replicas == 2
+        for i in range(3):
+            assert ct.home[i] == i
+            assert list(ct.replicas[i]) == [(i + 1) % 3]
+            assert f"t@p{i}" in cl.nodes[i].tables
+            assert f"t@p{i}" in cl.nodes[(i + 1) % 3].tables
+
+    def test_replica_bytes_accounted(self, data):
+        """Write amplification is visible: replica bytes are tracked per
+        node, separately from primary traffic."""
+        words = schema().encode(data)
+        cl, cqp, ct = replicated_cluster(words, 3)
+        assert ct.heat.replica_bytes_written is not None
+        assert int(ct.heat.replica_bytes_written.sum()) > 0
+
+    def test_replicas_validate_bounds(self):
+        with pytest.raises(ValueError):
+            FarCluster(2, replicas=3)
+        with pytest.raises(ValueError):
+            FarCluster(2, replicas=0)
+
+    def test_default_k1_layout_unchanged(self, data):
+        """replicas=1 (the default) keeps the PR3-PR5 layout: no replica
+        dicts populated, identity homes, plain names resolve."""
+        words = schema().encode(data)
+        cl = FarCluster(3)
+        cqp = cl.open_connection()
+        ct = cl.alloc_table_mem(cqp, schema())
+        cl.table_write(cqp, ct, words)
+        assert ct.home == [0, 1, 2]
+        assert all(not r for r in ct.replicas)
+        assert all("t" in cl.nodes[i].tables for i in range(3))
+
+    def test_fault_injector_is_shared_and_scoped(self, data):
+        """One injector serves all nodes; reviving clears every fault."""
+        cl = FarCluster(2, replicas=2)
+        assert all(node.fault is cl.fault for node in cl.nodes)
+        cl.fault.kill(0)
+        cl.fault.slow(0, 9.0)
+        assert cl.fault.is_killed(0)
+        cl.fault.revive(0)
+        assert not cl.fault.is_killed(0)
+        inj = FaultInjector()
+        inj.drop_dispatches(0, 2)
+        with pytest.raises(DroppedDispatchError):
+            inj.check(0, "dispatch")
+        with pytest.raises(DroppedDispatchError):
+            inj.check(0, "dispatch")
+        inj.check(0, "dispatch")               # budget spent: clean
