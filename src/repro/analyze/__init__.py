@@ -1,0 +1,19 @@
+"""farlint: repo-specific static analysis (lock discipline, host-sync,
+retrace hazards). See docs/analysis.md. Stdlib-only — importable without
+jax, which is how the CI lint job runs it."""
+from repro.analyze.core import (
+    Finding,
+    RULES,
+    SourceFile,
+    analyze_paths,
+    analyze_source,
+    apply_baseline,
+    load_baseline,
+    rule_id,
+    save_baseline,
+)
+
+__all__ = [
+    "Finding", "RULES", "SourceFile", "analyze_paths", "analyze_source",
+    "apply_baseline", "load_baseline", "rule_id", "save_baseline",
+]

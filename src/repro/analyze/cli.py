@@ -1,0 +1,91 @@
+"""farlint command line: `farlint [paths...] [--baseline FILE]`.
+
+Exit codes: 0 clean (no new findings), 1 new findings (or malformed
+suppressions), 2 bad invocation. `--update-baseline` rewrites the
+baseline to grandfather everything currently found — a deliberate act
+recorded in the diff, not something CI ever does.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from repro.analyze.core import (
+    RULES,
+    analyze_paths,
+    apply_baseline,
+    load_baseline,
+    save_baseline,
+)
+
+DEFAULT_PATHS = ("src", "benchmarks", "tests")
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="farlint",
+        description="repo-specific static analysis: lock discipline, "
+                    "host-sync on the fused dispatch path, jit retrace "
+                    "hazards (docs/analysis.md)")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files or directories (default: src benchmarks "
+                         "tests, those that exist)")
+    ap.add_argument("--baseline", metavar="FILE", default=None,
+                    help="JSON baseline of grandfathered findings; only "
+                         "NEW findings fail the run")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite --baseline to cover all current findings")
+    ap.add_argument("--root", default=None,
+                    help="directory findings are reported relative to "
+                         "(default: cwd)")
+    ap.add_argument("--rules", action="store_true",
+                    help="list rules and exit")
+    args = ap.parse_args(argv)
+
+    if args.rules:
+        for rid, (alias, desc) in sorted(RULES.items()):
+            print(f"{rid} ({alias}): {desc}")
+        return 0
+
+    root = os.path.abspath(args.root or os.getcwd())
+    paths = args.paths or [p for p in DEFAULT_PATHS
+                           if os.path.isdir(os.path.join(root, p))]
+    if not paths:
+        print("farlint: nothing to analyze", file=sys.stderr)
+        return 2
+    if args.update_baseline and not args.baseline:
+        print("farlint: --update-baseline requires --baseline",
+              file=sys.stderr)
+        return 2
+
+    findings = analyze_paths(paths, root)
+
+    if args.update_baseline:
+        save_baseline(args.baseline, findings)
+        print(f"farlint: baseline updated with {len(findings)} finding(s) "
+              f"-> {args.baseline}")
+        return 0
+
+    entries = load_baseline(args.baseline) if args.baseline else []
+    res = apply_baseline(findings, entries)
+
+    for f in res.new:
+        print(f.render())
+    for e in res.stale:
+        print(f"stale baseline entry ({e.get('rule')} {e.get('path')}): "
+              f"the finding it covered is gone — remove it or run "
+              f"--update-baseline")
+    n_new, n_old, n_stale = len(res.new), len(res.grandfathered), \
+        len(res.stale)
+    summary = f"farlint: {n_new} new finding(s)"
+    if n_old:
+        summary += f", {n_old} baselined"
+    if n_stale:
+        summary += f", {n_stale} stale baseline entr(y/ies)"
+    print(summary)
+    return 1 if res.new else 0
+
+
+if __name__ == "__main__":    # pragma: no cover - exercised via subprocess
+    sys.exit(main())

@@ -1,0 +1,315 @@
+"""farlint core: findings, suppressions, baseline — the pass framework.
+
+farlint is the repo-specific static-analysis suite (see docs/analysis.md).
+It exists because the invariants this codebase lives by — "shared cluster
+state is only touched under its lock", "the fused dispatch path never
+syncs to the host before `finalize()`", "jit static args are hashable and
+every compile-affecting input is in the cache key" — are exactly the kind
+reviewers enforce until the day they don't. Each invariant is a pass over
+the AST (`locks`, `hostsync`, `retrace`); this module is the machinery
+they share:
+
+  * `SourceFile` — parsed module + token-accurate comment map (the
+    `# guarded-by:` / `# farlint:` conventions live in comments, which
+    `ast` alone drops);
+  * suppressions — `# farlint: ok <rule> -- <justification>` on the
+    flagged line (or alone on the line above) waives a finding; the
+    justification is REQUIRED, and a suppression without one is itself a
+    finding (FL000) so "shut it up" can never masquerade as "reviewed";
+  * baseline — `baseline.json` grandfathers pre-existing findings by
+    content fingerprint (rule + path + source text + occurrence, NOT line
+    number, so unrelated edits don't invalidate it); CI fails only on
+    NEW findings, and entries whose code is gone are reported stale.
+
+Stdlib-only on purpose: the CI lint job runs farlint without installing
+jax, and `tools/analyze` bootstraps `src/` onto `sys.path` itself.
+"""
+from __future__ import annotations
+
+import ast
+import hashlib
+import io
+import json
+import os
+import re
+import tokenize
+from dataclasses import dataclass, field
+
+# ---------------------------------------------------------------------- rules
+#: rule id -> (alias, one-line description). The alias is what suppression
+#: comments and docs use; both forms are accepted everywhere a rule is named.
+RULES: dict[str, tuple[str, str]] = {
+    "FL000": ("bad-suppression",
+              "a `# farlint: ok` suppression is missing its rule list or "
+              "`-- <justification>` string"),
+    "FL001": ("lock-discipline",
+              "an attribute declared `# guarded-by: <lock>` is read or "
+              "written outside a `with <lock>:` block (and outside "
+              "__init__)"),
+    "FL002": ("host-sync",
+              "a host synchronization (np.asarray / jax.device_get / "
+              ".block_until_ready / int()/float()/.tolist() on a device "
+              "value) inside a fused-dispatch-path function that is not a "
+              "finalize boundary"),
+    "FL003": ("static-args",
+              "a jax.jit static_argnames entry that is not a parameter of "
+              "the jitted function, or a call site passing an unhashable "
+              "value for a static arg"),
+    "FL004": ("jit-closure",
+              "jax.jit over a closure or bound method that captures "
+              "mutable state (retrace / stale-capture hazard)"),
+    "FL005": ("cache-key",
+              "a compile/cache key tuple that omits one of the enclosing "
+              "function's parameters (the interpret=None bug class)"),
+}
+
+_ALIAS_TO_ID = {alias: rid for rid, (alias, _) in RULES.items()}
+
+
+def rule_id(name: str) -> str | None:
+    """Normalize 'FL002' or 'host-sync' to the rule id (None if unknown)."""
+    name = name.strip()
+    if name in RULES:
+        return name
+    return _ALIAS_TO_ID.get(name)
+
+
+# ------------------------------------------------------------------- findings
+@dataclass(frozen=True)
+class Finding:
+    rule: str                   # "FL001"
+    path: str                   # repo-relative, '/'-separated
+    line: int                   # 1-based
+    message: str
+    fingerprint: str = ""       # content hash: survives line drift
+
+    @property
+    def alias(self) -> str:
+        return RULES.get(self.rule, ("?", ""))[0]
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule}({self.alias}) " \
+               f"{self.message}"
+
+
+def _with_fingerprints(findings: list[Finding],
+                       lines_of: dict[str, list[str]]) -> list[Finding]:
+    """Stamp each finding with a stable content fingerprint.
+
+    The hash covers (rule, path, stripped source line text, occurrence
+    index among same-text findings of the same rule) — NOT the line
+    number, so a baseline survives edits elsewhere in the file but a
+    second new violation on an identical-looking line still counts as
+    new."""
+    seen: dict[tuple, int] = {}
+    out = []
+    for f in sorted(findings, key=lambda f: (f.path, f.line, f.rule)):
+        lines = lines_of.get(f.path, [])
+        text = (lines[f.line - 1].strip()
+                if 0 < f.line <= len(lines) else "")
+        key = (f.rule, f.path, text)
+        occ = seen.get(key, 0)
+        seen[key] = occ + 1
+        digest = hashlib.sha1(
+            "|".join((f.rule, f.path, text, str(occ))).encode()).hexdigest()
+        out.append(Finding(f.rule, f.path, f.line, f.message, digest[:16]))
+    return out
+
+
+# ------------------------------------------------------------ comment parsing
+_SUPPRESS_RE = re.compile(
+    r"farlint:\s*ok\b\s*(?P<rules>[\w,\s-]*?)\s*"
+    r"(?:--\s*(?P<why>.*\S))?\s*$")
+_GUARD_RE = re.compile(r"guarded-by:\s*(?P<lock>\S+)")
+_BOUNDARY_RE = re.compile(r"farlint:\s*finalize-boundary\b")
+
+
+@dataclass
+class Suppression:
+    line: int                   # the comment's own line
+    rules: frozenset            # normalized rule ids
+    justification: str
+
+    def covers(self, finding_line: int) -> bool:
+        # on the flagged line, or alone on the line immediately above it
+        return finding_line in (self.line, self.line + 1)
+
+
+class SourceFile:
+    """One parsed module: AST + comments + the farlint annotations."""
+
+    def __init__(self, text: str, path: str, rel: str | None = None):
+        self.text = text
+        self.path = path
+        self.rel = (rel or path).replace(os.sep, "/")
+        self.lines = text.splitlines()
+        self.tree = ast.parse(text, filename=path)
+        self.comments: dict[int, str] = {}
+        self.code_lines: set[int] = set()   # lines holding non-comment code
+        try:
+            for tok in tokenize.generate_tokens(io.StringIO(text).readline):
+                if tok.type == tokenize.COMMENT:
+                    self.comments[tok.start[0]] = tok.string.lstrip("#")
+                elif tok.type not in (tokenize.NL, tokenize.NEWLINE,
+                                      tokenize.INDENT, tokenize.DEDENT,
+                                      tokenize.ENCODING,
+                                      tokenize.ENDMARKER):
+                    self.code_lines.add(tok.start[0])
+        except tokenize.TokenError:     # pragma: no cover - ast parsed OK
+            pass
+        self.suppressions, self.bad_suppressions = self._parse_suppressions()
+
+    # -- conventions --------------------------------------------------------
+    def _parse_suppressions(self) -> tuple[list[Suppression], list[Finding]]:
+        sups, bad = [], []
+        for line, comment in self.comments.items():
+            if "farlint:" not in comment or "ok" not in comment.split(
+                    "farlint:", 1)[1][:4]:
+                continue
+            m = _SUPPRESS_RE.search(comment)
+            why = (m.group("why") or "").strip() if m else ""
+            names = [n for n in re.split(r"[,\s]+",
+                                         (m.group("rules") if m else "") or
+                                         "") if n]
+            ids = [rule_id(n) for n in names]
+            if not m or not why or not ids or None in ids:
+                bad.append(Finding(
+                    "FL000", self.rel, line,
+                    "suppression must name known rule(s) and give a "
+                    "justification: `# farlint: ok <rule> -- <why>`"))
+                continue
+            sups.append(Suppression(line, frozenset(ids), why))
+        return sups, bad
+
+    def guard_comment(self, lineno: int) -> str | None:
+        """The `# guarded-by: <lock>` annotation for a statement at
+        `lineno`: on the line itself, or alone on the line above."""
+        for ln in (lineno, lineno - 1):
+            c = self.comments.get(ln)
+            if c is None:
+                continue
+            if ln != lineno and ln in self.code_lines:
+                continue        # the line above holds code: not ours
+            m = _GUARD_RE.search(c)
+            if m:
+                return m.group("lock")
+        return None
+
+    def boundary_marker(self, lineno: int) -> bool:
+        """True when `# farlint: finalize-boundary` marks this def line
+        (on it, or alone immediately above)."""
+        for ln in (lineno, lineno - 1):
+            c = self.comments.get(ln)
+            if c is None or (ln != lineno and ln in self.code_lines):
+                continue
+            if _BOUNDARY_RE.search(c):
+                return True
+        return False
+
+    def suppressed(self, finding: Finding) -> bool:
+        return any(finding.rule in s.rules and s.covers(finding.line)
+                   for s in self.suppressions)
+
+
+# ---------------------------------------------------------------------- engine
+def _passes():
+    # imported here so `core` stays importable from the passes themselves
+    from repro.analyze import hostsync, locks, retrace
+    return (locks.check, hostsync.check, retrace.check)
+
+
+def analyze_source(text: str, path: str,
+                   rel: str | None = None) -> list[Finding]:
+    """Run every pass over one module; returns unsuppressed findings
+    (plus FL000 for malformed suppressions), fingerprinted."""
+    try:
+        sf = SourceFile(text, path, rel)
+    except SyntaxError as e:
+        rel = (rel or path).replace(os.sep, "/")
+        return _with_fingerprints(
+            [Finding("FL000", rel, e.lineno or 1,
+                     f"file does not parse: {e.msg}")], {rel: []})
+    findings = list(sf.bad_suppressions)
+    for check in _passes():
+        findings.extend(f for f in check(sf) if not sf.suppressed(f))
+    return _with_fingerprints(findings, {sf.rel: sf.lines})
+
+
+def iter_py_files(paths: list[str], root: str) -> list[str]:
+    out = []
+    for p in paths:
+        full = p if os.path.isabs(p) else os.path.join(root, p)
+        if os.path.isfile(full) and full.endswith(".py"):
+            out.append(full)
+            continue
+        for dirpath, dirnames, filenames in os.walk(full):
+            dirnames[:] = [d for d in dirnames
+                           if d not in ("__pycache__", ".git")]
+            out.extend(os.path.join(dirpath, f)
+                       for f in filenames if f.endswith(".py"))
+    return sorted(out)
+
+
+def analyze_paths(paths: list[str], root: str | None = None) -> list[Finding]:
+    """Analyze every .py file under `paths` (files or directories),
+    reporting paths relative to `root` (default: cwd)."""
+    root = os.path.abspath(root or os.getcwd())
+    findings: list[Finding] = []
+    for path in iter_py_files(paths, root):
+        rel = os.path.relpath(path, root)
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        findings.extend(analyze_source(text, path, rel))
+    return findings
+
+
+# --------------------------------------------------------------------- baseline
+@dataclass
+class BaselineResult:
+    new: list[Finding] = field(default_factory=list)
+    grandfathered: list[Finding] = field(default_factory=list)
+    stale: list[dict] = field(default_factory=list)   # entries with no match
+
+
+def load_baseline(path: str) -> list[dict]:
+    if not os.path.exists(path):
+        return []
+    with open(path, encoding="utf-8") as f:
+        data = json.load(f)
+    return list(data.get("findings", []))
+
+
+def save_baseline(path: str, findings: list[Finding]) -> None:
+    data = {
+        "comment": "farlint baseline: grandfathered findings (see "
+                   "docs/analysis.md). Regenerate with "
+                   "`python -m tools.analyze --update-baseline`.",
+        "findings": [
+            {"rule": f.rule, "path": f.path, "line": f.line,
+             "message": f.message, "fingerprint": f.fingerprint}
+            for f in sorted(findings,
+                            key=lambda f: (f.path, f.line, f.rule))],
+    }
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(data, f, indent=2)
+        f.write("\n")
+
+
+def apply_baseline(findings: list[Finding],
+                   entries: list[dict]) -> BaselineResult:
+    """Split findings into new vs grandfathered; report stale entries.
+
+    Matching is by fingerprint (content-addressed). Each baseline entry
+    absorbs at most one finding, so a *second* identical violation is
+    still new. FL000 (malformed suppression) is never grandfathered —
+    a broken justification must be fixed, not baselined."""
+    res = BaselineResult()
+    unused = {e.get("fingerprint"): e for e in entries}
+    for f in findings:
+        if f.rule != "FL000" and f.fingerprint in unused:
+            res.grandfathered.append(f)
+            del unused[f.fingerprint]
+        else:
+            res.new.append(f)
+    res.stale = list(unused.values())
+    return res

@@ -1,0 +1,372 @@
+"""FL002 host-sync: the fused dispatch path stays lazy until finalize().
+
+PR 1's contract: a `farview_request` produces lazy device values and the
+ONLY host synchronization happens in `finalize()`. This pass machine
+checks it for the modules on that path — `core/pipeline.py`,
+`core/offload.py`, and everything under `kernels/` — using a small
+intraprocedural taint analysis so that legitimate host-side metadata
+math (shapes, page counts, bucket sizes) is not flagged.
+
+Taint model, per function:
+
+  sources      calls into jax/jnp/lax, `self._jit*` executables, bare
+               names defined at module level in the same file (kernel
+               entry points calling each other), and dotted calls whose
+               root was imported from a `repro.` module — all return
+               device values;
+  propagation  through subscripts, attributes, arithmetic, tuple/list
+               packing and unpacking, loops, and plain assignment;
+  sanitizers   `.shape` / `.ndim` / `.dtype` / `.size` and Python
+               literals are host metadata — untainted;
+  sinks        `np.asarray` / `np.array` / `int()` / `float()` /
+               `bool()` / `.tolist()` / `.item()` on a tainted value,
+               plus `jax.device_get(...)` and `.block_until_ready()`
+               unconditionally (those two exist only to sync).
+
+A function is exempt when it is a *finalize boundary*: its name
+contains `finalize`, it carries a `# farlint: finalize-boundary`
+comment on/above its `def`, or it is reachable ONLY from exempt
+functions in the same module (computed to a fixpoint over the
+module-local call graph) — the boundary covers its private helpers.
+Sink results are returned untainted so one violation reports once, not
+as a cascade.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analyze.core import Finding, SourceFile
+
+#: modules on the fused dispatch path (suffix match on the repo-relative
+#: '/'-separated path, plus any file under a `kernels/` directory)
+SCOPE_SUFFIXES = ("core/pipeline.py", "core/offload.py")
+
+_SANITIZING_ATTRS = {"shape", "ndim", "dtype", "size", "nbytes"}
+_SINK_CALLS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array"}
+_SINK_CASTS = {"int", "float", "bool"}
+_SINK_METHODS = {"tolist", "item"}
+_ALWAYS_SINK_METHODS = {"block_until_ready"}
+_ALWAYS_SINK_CALLS = {"jax.device_get"}
+
+
+def in_scope(rel: str) -> bool:
+    rel = rel.replace("\\", "/")
+    if rel.endswith(SCOPE_SUFFIXES):
+        return True
+    parts = rel.split("/")
+    return "kernels" in parts[:-1]
+
+
+# -------------------------------------------------------------- module survey
+def _module_defs(tree: ast.Module) -> list[ast.FunctionDef]:
+    """Every function def in the module, including methods and nested."""
+    return [n for n in ast.walk(tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+
+
+def _repro_aliases(tree: ast.Module) -> set[str]:
+    """Names bound by imports of repro modules (treated as device-value
+    producers when called through, e.g. `kops.group_aggregate(...)`)."""
+    out = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name.startswith("repro"):
+                    out.add((a.asname or a.name).split(".")[0])
+        elif isinstance(node, ast.ImportFrom):
+            if node.module and (node.module.startswith("repro")
+                                or node.level > 0):
+                for a in node.names:
+                    out.add(a.asname or a.name.split(".")[0])
+    return out
+
+
+def _called_names(fn: ast.FunctionDef) -> set[str]:
+    """Bare / self-relative callee names, for the module-local call graph."""
+    out = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Name):
+                out.add(f.id)
+            elif (isinstance(f, ast.Attribute)
+                  and isinstance(f.value, ast.Name)
+                  and f.value.id == "self"):
+                out.add(f.attr)
+    return out
+
+
+def _boundary_set(sf: SourceFile,
+                  defs: list[ast.FunctionDef]) -> set[ast.FunctionDef]:
+    """Finalize-boundary functions, closed over private-helper reachability."""
+    by_name: dict[str, list[ast.FunctionDef]] = {}
+    for fn in defs:
+        by_name.setdefault(fn.name, []).append(fn)
+    exempt = {fn for fn in defs
+              if "finalize" in fn.name.lower()
+              or sf.boundary_marker(fn.lineno)}
+    # lexical nesting inherits the boundary: a def inside an exempt def
+    # is part of that boundary's implementation
+    for fn in list(exempt):
+        for sub in ast.walk(fn):
+            if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                exempt.add(sub)
+    callers: dict[ast.FunctionDef, set[ast.FunctionDef]] = {
+        fn: set() for fn in defs}
+    for fn in defs:
+        for name in _called_names(fn):
+            for callee in by_name.get(name, ()):
+                if callee is not fn:
+                    callers[callee].add(fn)
+    changed = True
+    while changed:
+        changed = False
+        for fn in defs:
+            if fn in exempt or not callers[fn]:
+                continue
+            if callers[fn] <= exempt:
+                exempt.add(fn)
+                changed = True
+    return exempt
+
+
+# ------------------------------------------------------------- taint analysis
+class _FnTaint:
+    """Two-pass monotone taint walk over one function body."""
+
+    def __init__(self, sf: SourceFile, fn: ast.FunctionDef,
+                 module_fn_names: set[str], repro_aliases: set[str]):
+        self.sf = sf
+        self.fn = fn
+        self.module_fn_names = module_fn_names
+        self.repro_aliases = repro_aliases
+        self.env: dict[str, bool] = {}
+        self.findings: list[Finding] = []
+        self.reporting = False
+
+    def run(self) -> list[Finding]:
+        body = self.fn.body
+        self.reporting = False
+        self._visit_block(body)     # pass 1: reach the taint fixpoint
+        self._visit_block(body)
+        self.reporting = True
+        self._visit_block(body)     # pass 2: report sinks once
+        return self.findings
+
+    # -- statements ---------------------------------------------------------
+    def _visit_block(self, stmts) -> None:
+        for stmt in stmts:
+            self._visit_stmt(stmt)
+
+    def _visit_stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # nested defs are analyzed as their own functions; their body
+            # still shares our env read-only via closures — walk it for
+            # taint of assigned outer names only, which we approximate by
+            # skipping (nested defs on this path are pipeline stage fns).
+            return
+        if isinstance(stmt, ast.Assign):
+            t = self._taint(stmt.value)
+            for target in stmt.targets:
+                self._bind(target, t, stmt.value)
+        elif isinstance(stmt, ast.AnnAssign):
+            if stmt.value is not None:
+                self._bind(stmt.target, self._taint(stmt.value), stmt.value)
+        elif isinstance(stmt, ast.AugAssign):
+            t = self._taint(stmt.value) or self._taint(stmt.target)
+            self._bind(stmt.target, t, stmt.value)
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._bind(stmt.target, self._taint(stmt.iter), stmt.iter)
+            self._visit_block(stmt.body)
+            self._visit_block(stmt.orelse)
+        elif isinstance(stmt, (ast.While, ast.If)):
+            self._taint(stmt.test)
+            self._visit_block(stmt.body)
+            self._visit_block(stmt.orelse)
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                t = self._taint(item.context_expr)
+                if item.optional_vars is not None:
+                    self._bind(item.optional_vars, t, item.context_expr)
+            self._visit_block(stmt.body)
+        elif isinstance(stmt, ast.Try):
+            self._visit_block(stmt.body)
+            for handler in stmt.handlers:
+                self._visit_block(handler.body)
+            self._visit_block(stmt.orelse)
+            self._visit_block(stmt.finalbody)
+        elif isinstance(stmt, ast.Return):
+            if stmt.value is not None:
+                self._taint(stmt.value)
+        elif isinstance(stmt, ast.Expr):
+            self._taint(stmt.value)
+        elif isinstance(stmt, (ast.Assert, ast.Raise, ast.Delete)):
+            for child in ast.iter_child_nodes(stmt):
+                if isinstance(child, ast.expr):
+                    self._taint(child)
+        # Pass/Break/Continue/Import/Global/Nonlocal: nothing to do
+
+    def _bind(self, target: ast.expr, tainted: bool, value: ast.expr) -> None:
+        if isinstance(target, ast.Name):
+            if tainted:
+                self.env[target.id] = True
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            # unpacking a tainted aggregate taints every element
+            for elt in target.elts:
+                self._bind(elt, tainted, value)
+        elif isinstance(target, ast.Starred):
+            self._bind(target.value, tainted, value)
+        # stores into attributes/subscripts don't create new local names
+
+    # -- expressions --------------------------------------------------------
+    def _flag(self, node: ast.AST, what: str) -> None:
+        if self.reporting:
+            self.findings.append(Finding(
+                "FL002", self.sf.rel, node.lineno,
+                f"{what} inside `{self.fn.name}` on the fused dispatch "
+                f"path; move it behind a finalize boundary (see "
+                f"docs/analysis.md)"))
+
+    def _is_source_call(self, func: ast.expr, text: str) -> bool:
+        root = text.split(".", 1)[0]
+        if root in ("jnp", "lax") or text.startswith("jax."):
+            return True
+        if text.startswith("self._jit"):
+            return True
+        if isinstance(func, ast.Name):
+            return func.id in self.module_fn_names
+        if "." in text and root in self.repro_aliases:
+            return True
+        return False
+
+    def _taint(self, node: ast.expr) -> bool:
+        if isinstance(node, ast.Name):
+            return self.env.get(node.id, False)
+        if isinstance(node, ast.Constant):
+            return False
+        if isinstance(node, ast.Attribute):
+            base = self._taint(node.value)
+            if node.attr in _SANITIZING_ATTRS:
+                return False
+            return base
+        if isinstance(node, ast.Subscript):
+            self._taint(node.slice)
+            return self._taint(node.value)
+        if isinstance(node, ast.Call):
+            return self._taint_call(node)
+        if isinstance(node, ast.BinOp):
+            left = self._taint(node.left)
+            return self._taint(node.right) or left
+        if isinstance(node, ast.UnaryOp):
+            return self._taint(node.operand)
+        if isinstance(node, ast.BoolOp):
+            vals = [self._taint(v) for v in node.values]
+            return any(vals)
+        if isinstance(node, ast.Compare):
+            t = self._taint(node.left)
+            for comp in node.comparators:
+                t = self._taint(comp) or t
+            return t
+        if isinstance(node, ast.IfExp):
+            self._taint(node.test)
+            body = self._taint(node.body)
+            return self._taint(node.orelse) or body
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            vals = [self._taint(e) for e in node.elts]
+            return any(vals)
+        if isinstance(node, ast.Dict):
+            vals = [self._taint(v) for v in node.values if v is not None]
+            vals += [self._taint(k) for k in node.keys if k is not None]
+            return any(vals)
+        if isinstance(node, ast.Starred):
+            return self._taint(node.value)
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp,
+                             ast.DictComp)):
+            t = False
+            for gen in node.generators:
+                gt = self._taint(gen.iter)
+                self._bind(gen.target, gt, gen.iter)
+                t = t or gt
+                for cond in gen.ifs:
+                    self._taint(cond)
+            if isinstance(node, ast.DictComp):
+                t = self._taint(node.key) or t
+                t = self._taint(node.value) or t
+            else:
+                t = self._taint(node.elt) or t
+            return t
+        if isinstance(node, ast.JoinedStr):
+            for v in node.values:
+                if isinstance(v, ast.FormattedValue):
+                    self._taint(v.value)
+            return False
+        if isinstance(node, ast.Lambda):
+            return False
+        if isinstance(node, (ast.Slice,)):
+            for part in (node.lower, node.upper, node.step):
+                if part is not None:
+                    self._taint(part)
+            return False
+        if isinstance(node, ast.NamedExpr):
+            t = self._taint(node.value)
+            self._bind(node.target, t, node.value)
+            return t
+        return False
+
+    def _taint_call(self, node: ast.Call) -> bool:
+        func = node.func
+        try:
+            text = ast.unparse(func)
+        except Exception:   # pragma: no cover
+            text = ""
+        arg_taints = [self._taint(a) for a in node.args]
+        arg_taints += [self._taint(kw.value) for kw in node.keywords]
+        any_tainted = any(arg_taints)
+
+        # unconditional sinks
+        if text in _ALWAYS_SINK_CALLS:
+            self._flag(node, f"`{text}(...)` (device->host transfer)")
+            return False
+        if (isinstance(func, ast.Attribute)
+                and func.attr in _ALWAYS_SINK_METHODS):
+            self._flag(node, f"`.{func.attr}()` (blocks on the device)")
+            return False
+
+        # tainted-only sinks
+        if text in _SINK_CALLS:
+            if any_tainted:
+                self._flag(node, f"`{text}(...)` on a device value")
+            return False
+        if text in _SINK_CASTS:
+            if any_tainted:
+                self._flag(node, f"`{text}(...)` on a device value "
+                                 f"(implicit sync)")
+            return False
+        if (isinstance(func, ast.Attribute)
+                and func.attr in _SINK_METHODS
+                and self._taint(func.value)):
+            self._flag(node, f"`.{func.attr}()` on a device value")
+            return False
+
+        # sources
+        if self._is_source_call(func, text):
+            return True
+        # method call on a tainted receiver stays tainted (x.sum(), .at[].set)
+        if isinstance(func, ast.Attribute) and self._taint(func.value):
+            return True
+        return any_tainted
+
+
+def check(sf: SourceFile) -> list[Finding]:
+    if not in_scope(sf.rel):
+        return []
+    defs = _module_defs(sf.tree)
+    exempt = _boundary_set(sf, defs)
+    module_fn_names = {fn.name for fn in defs}
+    aliases = _repro_aliases(sf.tree)
+    findings: list[Finding] = []
+    for fn in defs:
+        if fn in exempt:
+            continue
+        findings.extend(_FnTaint(sf, fn, module_fn_names, aliases).run())
+    return findings

@@ -1,0 +1,193 @@
+"""FL001 lock-discipline: guarded attributes are only touched under their lock.
+
+Convention: the assignment that *introduces* a shared attribute carries a
+`# guarded-by: <lock-expr>` comment (same line, or alone on the line
+above). Three declaration sites are recognized:
+
+  * `self.attr = ...` inside `__init__` / `__post_init__`  -> instance
+    attribute of the enclosing class, lock usually `self._lock`;
+  * a class-body field (dataclass `attr: T = ...`)          -> same;
+  * a module-level `NAME = ...`                             -> module
+    global, lock names another module global (e.g. `_CACHE_LOCK`).
+
+The pass then walks every function in the SAME module and flags any load
+or store of a guarded attribute that is not lexically inside a
+`with <lock>:` block. `self.` in the lock expression is rebound to the
+actual receiver (`pending.heat` under `with pending._lock:` is fine).
+`__init__`/`__post_init__` of the declaring class are exempt — single
+threaded by construction. The check is module-local and lexical by
+design: aliasing the lock (`lk = self._lock; with lk:`) or reaching into
+another module's guarded state is not tracked, and the convention in
+this repo is simply not to do either (docs/analysis.md).
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+
+from repro.analyze.core import Finding, SourceFile
+
+_INIT_NAMES = ("__init__", "__post_init__")
+
+
+@dataclass(frozen=True)
+class GuardDecl:
+    cls: str | None     # declaring class; None for module globals
+    attr: str           # attribute or global name
+    lock: str           # lock expression as written, e.g. "self._lock"
+    line: int
+
+
+def _decl_comment(sf: SourceFile, node: ast.stmt) -> str | None:
+    return sf.guard_comment(node.lineno)
+
+
+def collect_decls(sf: SourceFile) -> list[GuardDecl]:
+    decls: list[GuardDecl] = []
+
+    def name_targets(node):
+        if isinstance(node, ast.Assign):
+            return [t for t in node.targets]
+        if isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+            return [node.target]
+        return []
+
+    for top in sf.tree.body:
+        if isinstance(top, (ast.Assign, ast.AnnAssign)):
+            lock = _decl_comment(sf, top)
+            if lock:
+                for t in name_targets(top):
+                    if isinstance(t, ast.Name):
+                        decls.append(GuardDecl(None, t.id, lock, top.lineno))
+        elif isinstance(top, ast.ClassDef):
+            for stmt in top.body:
+                if isinstance(stmt, (ast.Assign, ast.AnnAssign)):
+                    lock = _decl_comment(sf, stmt)
+                    if lock:
+                        for t in name_targets(stmt):
+                            if isinstance(t, ast.Name):
+                                decls.append(GuardDecl(
+                                    top.name, t.id, lock, stmt.lineno))
+                elif (isinstance(stmt, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef))
+                      and stmt.name in _INIT_NAMES):
+                    for sub in ast.walk(stmt):
+                        if not isinstance(sub, (ast.Assign, ast.AnnAssign)):
+                            continue
+                        lock = _decl_comment(sf, sub)
+                        if not lock:
+                            continue
+                        for t in name_targets(sub):
+                            if (isinstance(t, ast.Attribute)
+                                    and isinstance(t.value, ast.Name)
+                                    and t.value.id == "self"):
+                                decls.append(GuardDecl(
+                                    top.name, t.attr, lock, sub.lineno))
+    return decls
+
+
+def _required_lock(decl: GuardDecl, receiver: str) -> str:
+    """Rebind a `self.`-relative lock expression to the receiver used at
+    the access site (`self._lock` + receiver `pending` -> `pending._lock`)."""
+    if decl.lock.startswith("self.") and receiver != "self":
+        return receiver + decl.lock[len("self"):]
+    return decl.lock
+
+
+class _Checker(ast.NodeVisitor):
+    def __init__(self, sf: SourceFile, decls: list[GuardDecl]):
+        self.sf = sf
+        self.attr_decls: dict[str, list[GuardDecl]] = {}
+        self.global_decls: dict[str, GuardDecl] = {}
+        for d in decls:
+            if d.cls is None:
+                self.global_decls[d.attr] = d
+            else:
+                self.attr_decls.setdefault(d.attr, []).append(d)
+        self.findings: list[Finding] = []
+        self._class_stack: list[str] = []
+        self._func_stack: list[str] = []
+        self._with_stack: list[str] = []
+
+    # -- scope tracking -----------------------------------------------------
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self._class_stack.append(node.name)
+        self.generic_visit(node)
+        self._class_stack.pop()
+
+    def _visit_func(self, node) -> None:
+        self._func_stack.append(node.name)
+        self.generic_visit(node)
+        self._func_stack.pop()
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+    def visit_With(self, node: ast.With) -> None:
+        held = []
+        for item in node.items:
+            try:
+                held.append(ast.unparse(item.context_expr))
+            except Exception:   # pragma: no cover - unparse is total on py310
+                pass
+            if item.optional_vars is not None:
+                self.generic_visit(item.optional_vars)
+        for item in node.items:
+            self.generic_visit(item.context_expr)
+        self._with_stack.extend(held)
+        for stmt in node.body:
+            self.visit(stmt)
+        del self._with_stack[len(self._with_stack) - len(held):]
+
+    visit_AsyncWith = visit_With
+
+    # -- access checks ------------------------------------------------------
+    def _in_init_of(self, cls: str) -> bool:
+        return (bool(self._class_stack)
+                and self._class_stack[-1] == cls
+                and bool(self._func_stack)
+                and self._func_stack[-1] in _INIT_NAMES)
+
+    def _flag(self, node: ast.AST, what: str, lock: str) -> None:
+        self.findings.append(Finding(
+            "FL001", self.sf.rel, node.lineno,
+            f"`{what}` is guarded-by `{lock}` but accessed outside "
+            f"`with {lock}:`"))
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        decls = self.attr_decls.get(node.attr)
+        if decls and self._func_stack:
+            try:
+                receiver = ast.unparse(node.value)
+            except Exception:   # pragma: no cover
+                receiver = ""
+            # `self.X` only matches a decl of the class we're lexically
+            # inside; any other receiver matches an unambiguous decl
+            if receiver == "self":
+                decl = next(
+                    (d for d in decls if self._class_stack
+                     and d.cls == self._class_stack[-1]), None)
+            else:
+                decl = decls[0] if len(decls) == 1 else None
+            if decl is not None and not (
+                    receiver == "self" and self._in_init_of(decl.cls)):
+                required = _required_lock(decl, receiver)
+                if required not in self._with_stack:
+                    self._flag(node, f"{receiver}.{node.attr}", required)
+        self.generic_visit(node)
+
+    def visit_Name(self, node: ast.Name) -> None:
+        decl = self.global_decls.get(node.id)
+        if decl is not None and self._func_stack:
+            if decl.lock not in self._with_stack:
+                self._flag(node, node.id, decl.lock)
+        self.generic_visit(node)
+
+
+def check(sf: SourceFile) -> list[Finding]:
+    decls = collect_decls(sf)
+    if not decls:
+        return []
+    checker = _Checker(sf, decls)
+    checker.visit(sf.tree)
+    return checker.findings

@@ -1,0 +1,410 @@
+"""FL003/FL004/FL005 retrace hazards around jax.jit sites.
+
+Every retrace bug this repo has shipped falls in one of three classes,
+each its own rule:
+
+  FL003 static-args   `static_argnames` naming a parameter the jitted
+                      function doesn't have (silently ignored -> retrace
+                      per call), or a call site passing an unhashable
+                      value (list/dict/set/array literal) for a static
+                      arg (TypeError at trace time).
+  FL004 jit-closure   `jax.jit` over a closure or bound method whose
+                      captured state is mutated — jit snapshots nothing;
+                      mutations after the first trace either never take
+                      effect or take effect inconsistently across cached
+                      executables.
+  FL005 cache-key     a compile-cache key tuple built inside a function
+                      that omits one of the function's parameters — the
+                      PR 2 `interpret=None` bug class, where two configs
+                      that compile differently share one cache slot.
+                      Checked only for dicts whose name contains
+                      "cache" (the repo convention for compile caches).
+
+Recognized jit spellings: `jax.jit(f, ...)` / `@jax.jit` /
+`@functools.partial(jax.jit, ...)` / `@partial(jax.jit, ...)`. Sites
+whose wrapped callable is itself a call result (factories like
+`jax.jit(make_step(...))`) can't be resolved statically and are skipped.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+
+from repro.analyze.core import Finding, SourceFile
+
+_MUTATING_METHODS = {"append", "extend", "add", "update", "pop", "clear",
+                     "insert", "remove", "setdefault", "popitem",
+                     "appendleft", "discard"}
+_UNHASHABLE_CTORS = {"list", "dict", "set", "bytearray",
+                     "np.array", "np.asarray", "numpy.array",
+                     "numpy.asarray", "jnp.array", "jnp.asarray"}
+
+
+def _unparse(node: ast.AST) -> str:
+    try:
+        return ast.unparse(node)
+    except Exception:   # pragma: no cover - unparse is total on py310
+        return ""
+
+
+def _is_jax_jit(node: ast.expr) -> bool:
+    return _unparse(node) in ("jax.jit", "jit")
+
+
+def _jit_call_parts(call: ast.Call):
+    """For `jax.jit(f, ...)` or `functools.partial(jax.jit, ...)` return
+    (wrapped_expr_or_None, keywords). For partial the wrapped callable is
+    applied later (decorator), so wrapped is None there."""
+    if _is_jax_jit(call.func):
+        wrapped = call.args[0] if call.args else None
+        return wrapped, call.keywords
+    if (_unparse(call.func) in ("functools.partial", "partial")
+            and call.args and _is_jax_jit(call.args[0])):
+        return None, call.keywords
+    return False, None
+
+
+def _static_argnames(keywords) -> tuple[str, ...] | None:
+    """The literal static_argnames tuple, or None when absent/dynamic."""
+    for kw in keywords or ():
+        if kw.arg != "static_argnames":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, str):
+            return (v.value,)
+        if isinstance(v, (ast.Tuple, ast.List)):
+            names = []
+            for e in v.elts:
+                if not (isinstance(e, ast.Constant)
+                        and isinstance(e.value, str)):
+                    return None
+                names.append(e.value)
+            return tuple(names)
+        return None
+    return None
+
+
+def _param_names(fn: ast.FunctionDef) -> list[str]:
+    a = fn.args
+    return ([p.arg for p in a.posonlyargs] + [p.arg for p in a.args]
+            + [p.arg for p in a.kwonlyargs])
+
+
+def _is_unhashable_expr(node: ast.expr) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                         ast.DictComp, ast.SetComp, ast.GeneratorExp)):
+        return True
+    if isinstance(node, ast.Call):
+        return _unparse(node.func) in _UNHASHABLE_CTORS
+    return False
+
+
+@dataclass
+class _JitSite:
+    line: int
+    statics: tuple[str, ...] | None
+    fn: ast.FunctionDef | None      # resolved wrapped function, if any
+    call_names: list[str] = field(default_factory=list)  # how it's invoked
+
+
+def _mutated_names(fn: ast.FunctionDef,
+                   stop_at: ast.FunctionDef | None = None,
+                   after_line: int = 0) -> set[str]:
+    """Names the function mutates: rebinding, augmented assignment,
+    stores through subscript/attribute, or mutating method calls.
+    Nested function bodies are included (closures can mutate too),
+    except `stop_at` (the jitted def itself). Only mutations lexically
+    after `after_line` count — binding a value *before* the jitted def
+    is initialization the trace will see, not a stale capture."""
+    out: set[str] = set()
+
+    def root_name(e: ast.expr) -> str | None:
+        while isinstance(e, (ast.Subscript, ast.Attribute, ast.Starred)):
+            e = e.value
+        return e.id if isinstance(e, ast.Name) else None
+
+    def walk(node):
+        for child in ast.iter_child_nodes(node):
+            if child is stop_at:
+                continue
+            if (isinstance(child, ast.stmt)
+                    and getattr(child, "end_lineno", child.lineno)
+                    < after_line):
+                continue    # ends before the jitted def: initialization
+            if isinstance(child, ast.Assign):
+                for t in child.targets:
+                    if isinstance(t, (ast.Subscript, ast.Attribute)):
+                        n = root_name(t)
+                        if n:
+                            out.add(n)
+                    elif isinstance(t, ast.Name):
+                        out.add(t.id)
+            elif isinstance(child, ast.AugAssign):
+                n = root_name(child.target)
+                if n:
+                    out.add(n)
+            elif isinstance(child, ast.Call):
+                f = child.func
+                if (isinstance(f, ast.Attribute)
+                        and f.attr in _MUTATING_METHODS):
+                    n = root_name(f.value)
+                    if n:
+                        out.add(n)
+            walk(child)
+
+    walk(fn)
+    return out
+
+
+def _free_loads(fn: ast.FunctionDef) -> set[str]:
+    """Names loaded in `fn` that it neither binds nor receives as params."""
+    bound = set(_param_names(fn))
+    if fn.args.vararg:
+        bound.add(fn.args.vararg.arg)
+    if fn.args.kwarg:
+        bound.add(fn.args.kwarg.arg)
+    loads: set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name):
+            if isinstance(node.ctx, ast.Load):
+                loads.add(node.id)
+            else:
+                bound.add(node.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if node is not fn:
+                bound.add(node.name)
+        elif isinstance(node, ast.comprehension):
+            for sub in ast.walk(node.target):
+                if isinstance(sub, ast.Name):
+                    bound.add(sub.id)
+    return loads - bound
+
+
+class _Pass(ast.NodeVisitor):
+    def __init__(self, sf: SourceFile):
+        self.sf = sf
+        self.findings: list[Finding] = []
+        self._func_stack: list[ast.FunctionDef] = []
+        self._class_stack: list[ast.ClassDef] = []
+        self.sites: list[_JitSite] = []
+
+    # -- helpers ------------------------------------------------------------
+    def _flag(self, rule: str, line: int, msg: str) -> None:
+        self.findings.append(Finding(rule, self.sf.rel, line, msg))
+
+    def _resolve_callable(self, expr: ast.expr) -> ast.FunctionDef | None:
+        """Find the def a `jax.jit(X)` wraps: a bare name in an enclosing
+        scope, or `self.method` of the enclosing class."""
+        if isinstance(expr, ast.Name):
+            scopes: list[list[ast.stmt]] = [self.sf.tree.body]
+            scopes += [f.body for f in self._func_stack]
+            for body in reversed(scopes):
+                for stmt in body:
+                    if (isinstance(stmt, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef))
+                            and stmt.name == expr.id):
+                        return stmt
+        elif (isinstance(expr, ast.Attribute)
+              and isinstance(expr.value, ast.Name)
+              and expr.value.id == "self" and self._class_stack):
+            for stmt in self._class_stack[-1].body:
+                if (isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef))
+                        and stmt.name == expr.attr):
+                    return stmt
+        return None
+
+    # -- collection ---------------------------------------------------------
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self._class_stack.append(node)
+        self.generic_visit(node)
+        self._class_stack.pop()
+
+    def _visit_func(self, node) -> None:
+        self._handle_decorators(node)
+        self._func_stack.append(node)
+        self.generic_visit(node)
+        self._func_stack.pop()
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+    def _handle_decorators(self, fn) -> None:
+        for dec in fn.decorator_list:
+            statics: tuple[str, ...] | None = None
+            jitted = False
+            if _is_jax_jit(dec):
+                jitted = True
+            elif isinstance(dec, ast.Call):
+                wrapped, keywords = _jit_call_parts(dec)
+                if wrapped is False and keywords is None:
+                    continue
+                jitted = True
+                statics = _static_argnames(keywords)
+            if not jitted:
+                continue
+            site = _JitSite(dec.lineno, statics, fn)
+            site.call_names = [fn.name, f"self.{fn.name}"]
+            self.sites.append(site)
+            self._check_closure(site, fn)
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        if isinstance(node.value, ast.Call):
+            wrapped, keywords = _jit_call_parts(node.value)
+            if wrapped is not False:
+                statics = _static_argnames(keywords)
+                fn = (self._resolve_callable(wrapped)
+                      if wrapped is not None else None)
+                site = _JitSite(node.lineno, statics, fn)
+                for t in node.targets:
+                    name = _unparse(t)
+                    if name:
+                        site.call_names.append(name)
+                self.sites.append(site)
+                if fn is not None:
+                    self._check_closure(site, fn)
+                if (isinstance(wrapped, ast.Attribute)
+                        and isinstance(wrapped.value, ast.Name)
+                        and wrapped.value.id == "self"):
+                    self._flag(
+                        "FL004", node.lineno,
+                        f"jax.jit over bound method "
+                        f"`self.{wrapped.attr}` captures mutable instance "
+                        f"state; keep captured attributes write-once or "
+                        f"suppress with a justification")
+        self.generic_visit(node)
+
+    # -- FL004: mutable closure capture --------------------------------------
+    def _check_closure(self, site: _JitSite, fn: ast.FunctionDef) -> None:
+        if not self._func_stack:
+            return      # module/class level: captures are module globals
+        enclosing = self._func_stack[-1]
+        free = _free_loads(fn)
+        mutated = _mutated_names(enclosing, stop_at=fn,
+                                 after_line=fn.lineno)
+        for name in sorted(free & mutated):
+            self._flag(
+                "FL004", site.line,
+                f"jitted `{fn.name}` closes over `{name}`, which the "
+                f"enclosing `{enclosing.name}` mutates — jit will not see "
+                f"the mutation (stale capture)")
+
+    # -- FL005: cache-key completeness ---------------------------------------
+    def _check_cache_keys(self) -> None:
+        for fn in [n for n in ast.walk(self.sf.tree)
+                   if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]:
+            params = [p for p in _param_names(fn) if p not in ("self", "cls")]
+            if not params:
+                continue
+            # key-tuple assignments: k = (a, b, ...)
+            key_vars: dict[str, ast.Assign] = {}
+            for node in ast.walk(fn):
+                if (isinstance(node, ast.Assign)
+                        and isinstance(node.value, ast.Tuple)
+                        and len(node.targets) == 1
+                        and isinstance(node.targets[0], ast.Name)):
+                    key_vars[node.targets[0].id] = node
+            if not key_vars:
+                continue
+            used_on_cache = self._cache_keyed_vars(fn, set(key_vars))
+            for name in sorted(used_on_cache):
+                assign = key_vars[name]
+                contributing = {n.id for n in ast.walk(assign.value)
+                                if isinstance(n, ast.Name)}
+                # one level of local indirection: x = norm(param); (x, ...)
+                for node in ast.walk(fn):
+                    if (isinstance(node, ast.Assign)
+                            and len(node.targets) == 1
+                            and isinstance(node.targets[0], ast.Name)
+                            and node.targets[0].id in contributing):
+                        contributing |= {n.id for n in ast.walk(node.value)
+                                         if isinstance(n, ast.Name)}
+                missing = [p for p in params if p not in contributing]
+                if missing:
+                    self._flag(
+                        "FL005", assign.lineno,
+                        f"cache key `{name}` in `{fn.name}` omits "
+                        f"parameter(s) {', '.join(repr(m) for m in missing)}"
+                        f" — configs differing only there will collide")
+
+    @staticmethod
+    def _cache_keyed_vars(fn: ast.FunctionDef,
+                          candidates: set[str]) -> set[str]:
+        """Key variables actually used to index a *cache* dict
+        (`k in CACHE`, `CACHE[k]`, `CACHE.get(k)`)."""
+        used: set[str] = set()
+
+        def is_cache_name(e: ast.expr) -> bool:
+            return "cache" in _unparse(e).lower()
+
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Compare):
+                if (len(node.ops) == 1
+                        and isinstance(node.ops[0], (ast.In, ast.NotIn))
+                        and isinstance(node.left, ast.Name)
+                        and node.left.id in candidates
+                        and is_cache_name(node.comparators[0])):
+                    used.add(node.left.id)
+            elif isinstance(node, ast.Subscript):
+                if (isinstance(node.slice, ast.Name)
+                        and node.slice.id in candidates
+                        and is_cache_name(node.value)):
+                    used.add(node.slice.id)
+            elif isinstance(node, ast.Call):
+                f = node.func
+                if (isinstance(f, ast.Attribute)
+                        and f.attr in ("get", "setdefault", "pop")
+                        and is_cache_name(f.value)):
+                    for a in node.args[:1]:
+                        if isinstance(a, ast.Name) and a.id in candidates:
+                            used.add(a.id)
+        return used
+
+    # -- FL003 after collection ----------------------------------------------
+    def _check_sites(self) -> None:
+        for site in self.sites:
+            if site.statics and site.fn is not None:
+                params = set(_param_names(site.fn))
+                for s in site.statics:
+                    if s not in params:
+                        self._flag(
+                            "FL003", site.line,
+                            f"static_argnames entry '{s}' is not a "
+                            f"parameter of `{site.fn.name}` "
+                            f"({', '.join(sorted(params)) or 'no params'})"
+                            f" — jax silently ignores it")
+            if not site.statics or not site.call_names:
+                continue
+            pos_params = ([p.arg for p in site.fn.args.posonlyargs]
+                          + [p.arg for p in site.fn.args.args]
+                          if site.fn is not None else [])
+            names = set(site.call_names)
+            for node in ast.walk(self.sf.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                if _unparse(node.func) not in names:
+                    continue
+                for kw in node.keywords:
+                    if kw.arg in site.statics and \
+                            _is_unhashable_expr(kw.value):
+                        self._flag(
+                            "FL003", node.lineno,
+                            f"call passes unhashable "
+                            f"`{_unparse(kw.value)[:40]}` for static arg "
+                            f"'{kw.arg}' — TypeError at trace time")
+                for i, a in enumerate(node.args):
+                    if i < len(pos_params) \
+                            and pos_params[i] in site.statics \
+                            and _is_unhashable_expr(a):
+                        self._flag(
+                            "FL003", node.lineno,
+                            f"call passes unhashable "
+                            f"`{_unparse(a)[:40]}` for static arg "
+                            f"'{pos_params[i]}' — TypeError at trace time")
+
+
+def check(sf: SourceFile) -> list[Finding]:
+    p = _Pass(sf)
+    p.visit(sf.tree)
+    p._check_sites()
+    p._check_cache_keys()
+    return p.findings

@@ -381,7 +381,12 @@ class FarCluster:
         self.partitioner = partitioner
         self.replicas = int(replicas)   # default k for alloc_table_mem
         self.parallel = parallel and n_nodes > 1
-        self.catalog: dict[str, ClusterTable] = {}  # name -> cluster handle
+        # Guards the shared table catalog: parallel drain threads, a
+        # concurrent heal()/auto_rebalance, and alloc/free all touch it.
+        # RLock because the sweeps hold it while calling helpers
+        # (free_table_mem, check_drift) that take it again.
+        self._lock = threading.RLock()
+        self.catalog: dict[str, ClusterTable] = {}  # guarded-by: self._lock
 
     @property
     def n_nodes(self) -> int:
@@ -508,7 +513,8 @@ class FarCluster:
             ctable.home = list(range(self.n_nodes))
         if ctable.replicas is None:
             ctable.replicas = [dict() for _ in range(self.n_nodes)]
-        self.catalog[ctable.name] = ctable
+        with self._lock:
+            self.catalog[ctable.name] = ctable
         return ctable
 
     def _alloc_parts(self, cqp: ClusterQP, ft: FTable,
@@ -688,7 +694,8 @@ class FarCluster:
         jop = op_ir.join_small_of(pipeline)
         if jop is None:
             return pipeline
-        bct = self.catalog.get(jop.build_table)
+        with self._lock:
+            bct = self.catalog.get(jop.build_table)
         if bct is None or bct.replicated:
             return pipeline
         alias = f"{jop.build_table}@p{part_id}"
@@ -720,8 +727,9 @@ class FarCluster:
             for node in self.nodes:
                 for i in range(len(ctable.parts)):
                     node.tables.pop(f"{name}@p{i}", None)
-        if self.catalog.get(name) is ctable:
-            del self.catalog[name]
+        with self._lock:
+            if self.catalog.get(name) is ctable:
+                del self.catalog[name]
 
     def table_write(self, cqp: ClusterQP, ctable: ClusterTable,
                     words: np.ndarray, *,
@@ -941,7 +949,7 @@ class FarCluster:
             if serve != ctable.home[i]:
                 ctable.heat.record_failover(serve, len(idx))
         cqp.requests += 1
-        ctable.heat.requests += 1
+        ctable.heat.record_request()
         return ClusterPending(self, ctable, pipeline, pends, prows, pnodes,
                               cqp=cqp, part_ids=pparts, handles=phandles,
                               strings=strings, lengths=lengths)
@@ -960,7 +968,8 @@ class FarCluster:
         jop = op_ir.join_small_of(pipeline)
         if jop is None:
             return
-        bct = self.catalog.get(jop.build_table)
+        with self._lock:
+            bct = self.catalog.get(jop.build_table)
         if bct is None:     # not cluster-allocated; nodes resolve (or raise)
             return
         if bct.replicated:
@@ -1063,9 +1072,12 @@ class FarCluster:
         client-side metadata — no node traffic, no syncs (the achievable
         share costs one LPT pass over each key-partitioned table's
         keys)."""
+        with self._lock:    # snapshot; the LPT pass runs lock-free below
+            tables = [(name, t) for name, t in self.catalog.items()
+                      if not t.replicated]
         return {name: detect_drift(name, t.heat, t.part_sizes,
                                    keys=t.keys, threshold=threshold)
-                for name, t in self.catalog.items() if not t.replicated}
+                for name, t in tables}
 
     def _dependents(self, ctable: ClusterTable) -> list:
         """Tables co-partitioned BY this table's rule (join builds placed
@@ -1073,8 +1085,9 @@ class FarCluster:
         they must move whenever the rule is re-captured."""
         if ctable.co_spec is None:
             return []
-        return [t for t in self.catalog.values()
-                if t is not ctable and t.co_spec is ctable.co_spec]
+        with self._lock:
+            return [t for t in self.catalog.values()
+                    if t is not ctable and t.co_spec is ctable.co_spec]
 
     def plan_table_rebalance(self, ctable: ClusterTable, *,
                              keys: np.ndarray | None = None,
@@ -1196,7 +1209,8 @@ class FarCluster:
         Returns {table name: executed MigrationPlan}."""
         out = {}
         for name, report in self.check_drift(threshold=threshold).items():
-            ctable = self.catalog.get(name)
+            with self._lock:
+                ctable = self.catalog.get(name)
             if (ctable is None or not report.drifted
                     or ctable.partitioner.startswith("co[")):
                 continue
@@ -1243,7 +1257,9 @@ class FarCluster:
                         "under_replicated": []}
         if not dead:
             return report
-        for name, t in list(self.catalog.items()):
+        with self._lock:
+            healing = list(self.catalog.items())
+        for name, t in healing:
             if t.replicated:
                 continue    # any alive node serves the full copy as-is
             changed = False
@@ -1319,7 +1335,9 @@ class FarCluster:
             step = 0 if last is None else last + 1
         tree: dict = {}
         tables_meta: dict = {}
-        for name, t in self.catalog.items():
+        with self._lock:    # point-in-time view; reads go via table_read
+            snap_tables = list(self.catalog.items())
+        for name, t in snap_tables:
             entry: dict = {}
             if t.schema.str_width or t.n_rows == 0:
                 # string shells carry their bytes per-request; the pool

@@ -59,6 +59,7 @@ def _segment_merge_groups(keys, cnt, sums, mins, maxs):
     return k, end, cs, ss, mns, mxs
 
 
+# farlint: finalize-boundary (the group merge IS the designed sync point)
 def merge_groups_device(groups: "list[dict]",
                         drop: "int | None") -> dict:
     """Concatenate N partials' (bucket entries + overflow rows) and

@@ -257,9 +257,15 @@ class CompiledPipeline:
                                   or self.distinct is not None) else "rows")
 
         # --- the fused executables (shape-specialized lazily by jit) --------
+        # Bound methods on purpose: every attribute the entries read is
+        # assigned exactly once, above, and never reassigned after __init__,
+        # so the traced capture cannot go stale.
+        # farlint: ok jit-closure -- captured attrs are write-once (__init__)
         self._jit_rows = jax.jit(self._rows_entry)
+        # farlint: ok jit-closure -- captured attrs are write-once (__init__)
         self._jit_pages = jax.jit(self._pages_entry,
                                   static_argnames=("n_rows", "row_words"))
+        # farlint: ok jit-closure -- captured attrs are write-once (__init__)
         self._jit_strings = jax.jit(self._strings_entry)
 
     def _col(self, name: str) -> int:
@@ -396,6 +402,9 @@ class CompiledPipeline:
         # the traced body the keys are Tracers and the check would be a
         # silent no-op (hash_join_xla picks an arbitrary duplicate)
         if not isinstance(bkeys, jax.core.Tracer):
+            # The traced path (Tracer) skips this branch, so the eager
+            # sync only happens once at build registration.
+            # farlint: ok host-sync -- deliberate eager uniqueness check
             bknp = np.asarray(bkeys)
             if len(np.unique(bknp)) != len(bknp):
                 raise ValueError(
@@ -674,7 +683,7 @@ class CompiledPipeline:
                 "ovf_count": keep_cnt, "shipped": shipped}
 
 
-_CACHE: dict = {}
+_CACHE: dict = {}                # guarded-by: _CACHE_LOCK
 _CACHE_LOCK = threading.Lock()   # cluster nodes flush from parallel threads
 
 
@@ -697,16 +706,24 @@ def compile_pipeline(schema: FTable, pipeline: tuple,
     # lets the scheduler width-bucket stacked regex rounds.
     key = (tuple((c.name, c.dtype) for c in schema.columns),
            bool(schema.str_width), op_ir.signature(pipeline), interpret)
-    if key not in _CACHE:
-        with _CACHE_LOCK:       # one build per key under concurrent flushes
-            if key not in _CACHE:
-                _CACHE[key] = CompiledPipeline(schema, pipeline, interpret)
-    return _CACHE[key]
+    # One build per key under concurrent flushes. The whole get-or-build
+    # runs under the lock: the old lock-free fast path read the dict while
+    # parallel drains were inserting, and a racing reader could see a
+    # half-initialized slot. Construction is cheap (jit wrapper creation;
+    # tracing happens at first call), so serializing builds costs nothing.
+    with _CACHE_LOCK:
+        pipe = _CACHE.get(key)
+        if pipe is None:
+            pipe = _CACHE[key] = CompiledPipeline(schema, pipeline,
+                                                  interpret)
+    return pipe
 
 
 def cache_info() -> int:
-    return len(_CACHE)
+    with _CACHE_LOCK:
+        return len(_CACHE)
 
 
 def clear_cache() -> None:
-    _CACHE.clear()
+    with _CACHE_LOCK:
+        _CACHE.clear()

@@ -82,9 +82,9 @@ class FaultInjector:
 
     def __init__(self) -> None:
         self._lock = threading.Lock()
-        self._killed: set[int] = set()
-        self._slow: dict[int, float] = {}
-        self._drop: dict[int, int] = {}
+        self._killed: set[int] = set()      # guarded-by: self._lock
+        self._slow: dict[int, float] = {}   # guarded-by: self._lock
+        self._drop: dict[int, int] = {}     # guarded-by: self._lock
 
     # -- fault controls (the test/bench-facing surface) ---------------------
     def kill(self, node_id: int) -> None:
@@ -153,28 +153,37 @@ class HealthMonitor:
 
     def __init__(self, n_nodes: int, *, dead_after: int = 3,
                  slow_after_s: float = 30.0):
-        self.nodes = [NodeHealth() for _ in range(n_nodes)]
+        self._lock = threading.Lock()
+        self.nodes = [NodeHealth() for _ in range(n_nodes)]    # guarded-by: self._lock
         self.dead_after = int(dead_after)
         self.slow_after_s = float(slow_after_s)
-        self._lock = threading.Lock()
 
     # -- queries ------------------------------------------------------------
+    # Queries take the lock too: routing decisions read `state` while the
+    # parallel drain threads are writing it, and an unlocked read of a
+    # NodeHealth mid-transition is exactly the race this monitor exists
+    # to prevent.
     def state(self, node_id: int) -> str:
-        return self.nodes[node_id].state
+        with self._lock:
+            return self.nodes[node_id].state
 
     def is_alive(self, node_id: int) -> bool:
         """Routable: ALIVE or SUSPECT (a suspect still serves; it is just
         one strike from losing that right)."""
-        return self.nodes[node_id].state != DEAD
+        with self._lock:
+            return self.nodes[node_id].state != DEAD
 
     def alive_nodes(self) -> list[int]:
-        return [i for i, h in enumerate(self.nodes) if h.state != DEAD]
+        with self._lock:
+            return [i for i, h in enumerate(self.nodes) if h.state != DEAD]
 
     def dead_nodes(self) -> list[int]:
-        return [i for i, h in enumerate(self.nodes) if h.state == DEAD]
+        with self._lock:
+            return [i for i, h in enumerate(self.nodes) if h.state == DEAD]
 
     def summary(self) -> dict[int, str]:
-        return {i: h.state for i, h in enumerate(self.nodes)}
+        with self._lock:
+            return {i: h.state for i, h in enumerate(self.nodes)}
 
     # -- evidence -----------------------------------------------------------
     def record_success(self, node_id: int) -> None:

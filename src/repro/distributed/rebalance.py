@@ -35,6 +35,7 @@ same rule in the same plan (see `FarCluster.rebalance`).
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -54,20 +55,29 @@ class TableHeat:
     `bytes_shipped[i]` counts response bytes node `i` actually shipped
     (recorded when the gather's partials finalize). `requests` counts
     cluster verbs. `reset()` is called after a migration so the detector
-    sees post-migration traffic only."""
+    sees post-migration traffic only.
 
-    rows_touched: np.ndarray
-    bytes_shipped: np.ndarray
-    requests: int = 0
+    Thread-safe: `FarCluster.flush` drains nodes from parallel threads,
+    and each drain records into the SAME per-table ledger — an unlocked
+    `+=` on the numpy counters loses increments under contention, which
+    silently skews the drift detector. All counter traffic goes through
+    the `record_*` methods, which take `_lock`; readers (`detect_drift`,
+    dashboards) snapshot under the same lock."""
+
+    rows_touched: np.ndarray                    # guarded-by: self._lock
+    bytes_shipped: np.ndarray                   # guarded-by: self._lock
+    requests: int = 0                           # guarded-by: self._lock
     # replication ledger (PR 6): primary vs replica traffic per node.
     # `replica_rows`[i] counts rows node i served AS A REPLICA (failover
     # reads routed around a dead/refusing primary); `replica_bytes_written`
     # [i] counts redundant write traffic node i absorbed for copies it
     # holds of partitions primaried elsewhere — the write-amplification
     # cost of `alloc_table_mem(replicas=k)` made visible per node.
-    replica_rows: "np.ndarray | None" = None
-    replica_bytes_written: "np.ndarray | None" = None
-    failovers: int = 0              # partition dispatches served by replicas
+    replica_rows: "np.ndarray | None" = None    # guarded-by: self._lock
+    replica_bytes_written: "np.ndarray | None" = None  # guarded-by: self._lock
+    failovers: int = 0                          # guarded-by: self._lock
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False, compare=False)
 
     @classmethod
     def zeros(cls, n_nodes: int) -> "TableHeat":
@@ -76,32 +86,47 @@ class TableHeat:
                    replica_bytes_written=np.zeros(n_nodes, np.int64))
 
     def record_dispatch(self, node: int, rows: int) -> None:
-        self.rows_touched[node] += int(rows)
+        with self._lock:
+            self.rows_touched[node] += int(rows)
+
+    def record_request(self) -> None:
+        """One cluster verb touched this table."""
+        with self._lock:
+            self.requests += 1
 
     def record_failover(self, node: int, rows: int) -> None:
         """A replica on `node` served a partition whose primary could not."""
-        if self.replica_rows is None:
-            self.replica_rows = np.zeros_like(self.rows_touched)
-        self.replica_rows[node] += int(rows)
-        self.failovers += 1
+        with self._lock:
+            if self.replica_rows is None:
+                self.replica_rows = np.zeros_like(self.rows_touched)
+            self.replica_rows[node] += int(rows)
+            self.failovers += 1
 
     def record_replica_write(self, node: int, n_bytes: int) -> None:
-        if self.replica_bytes_written is None:
-            self.replica_bytes_written = np.zeros_like(self.rows_touched)
-        self.replica_bytes_written[node] += int(n_bytes)
+        with self._lock:
+            if self.replica_bytes_written is None:
+                self.replica_bytes_written = np.zeros_like(self.rows_touched)
+            self.replica_bytes_written[node] += int(n_bytes)
 
     def record_response(self, node: int, n_bytes: int) -> None:
-        self.bytes_shipped[node] += int(n_bytes)
+        with self._lock:
+            self.bytes_shipped[node] += int(n_bytes)
+
+    def rows_snapshot(self) -> np.ndarray:
+        """A consistent copy of the rows-touched vector for readers."""
+        with self._lock:
+            return np.asarray(self.rows_touched).copy()
 
     def reset(self) -> None:
-        self.rows_touched[:] = 0
-        self.bytes_shipped[:] = 0
-        self.requests = 0
-        if self.replica_rows is not None:
-            self.replica_rows[:] = 0
-        if self.replica_bytes_written is not None:
-            self.replica_bytes_written[:] = 0
-        self.failovers = 0
+        with self._lock:
+            self.rows_touched[:] = 0
+            self.bytes_shipped[:] = 0
+            self.requests = 0
+            if self.replica_rows is not None:
+                self.replica_rows[:] = 0
+            if self.replica_bytes_written is not None:
+                self.replica_bytes_written[:] = 0
+            self.failovers = 0
 
 
 def drift_ratio(loads) -> float:
@@ -165,9 +190,8 @@ def detect_drift(table: str, heat: TableHeat, part_sizes, *,
     whose skew is intrinsic to its key distribution reads ~1.0 and is
     left alone, while a stale map that a re-placement would fix reads
     > 1 in proportion to the winnable straggler time."""
-    loads = (np.asarray(heat.rows_touched)
-             if int(np.sum(heat.rows_touched)) > 0
-             else np.asarray(part_sizes, np.int64))
+    rows = heat.rows_snapshot()
+    loads = rows if int(rows.sum()) > 0 else np.asarray(part_sizes, np.int64)
     loads = np.asarray(loads, np.float64)
     k = len(loads)
     if loads.size == 0 or loads.sum() <= 0 or k == 0:

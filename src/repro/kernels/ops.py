@@ -133,6 +133,13 @@ def group_aggregate_full(keys, values, *, n_buckets: int = 1024,
     """
     res = group_aggregate(keys, values, n_buckets=n_buckets,
                           block_rows=block_rows, interpret=interpret)
+    return _finalize_group_full(keys, values, res)
+
+
+def _finalize_group_full(keys, values, res):
+    """Finalize boundary: sync the kernel's lazy bucket outputs to the host
+    and merge collision overflow in "client software" (the paper's split).
+    The only host transfer in the group path lives here."""
     out: dict[int, tuple] = {}
     bkeys = np.asarray(res["bucket_keys"])
     cnts = np.asarray(res["count"])
@@ -163,6 +170,11 @@ def distinct(keys, *, n_buckets: int = 1024, block_rows: int = 256,
     vals = jnp.zeros((keys.shape[0], 1), jnp.float32)
     res = group_aggregate(keys, vals, n_buckets=n_buckets,
                           block_rows=block_rows, interpret=interpret)
+    return _finalize_distinct(keys, res)
+
+
+def _finalize_distinct(keys, res):
+    """Finalize boundary: host-side dedup of bucket keys + overflow rows."""
     bk = np.asarray(res["bucket_keys"])
     cnt = np.asarray(res["count"])
     found = set(bk[(bk != ref.KEY_SENTINEL) & (cnt > 0)].tolist())

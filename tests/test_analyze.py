@@ -1,0 +1,500 @@
+"""farlint (tools/analyze, repro.analyze) — the analyzer analyzed.
+
+Per rule: a positive fixture (the seeded violation is caught, with the
+right rule id on the right line) and a negative fixture (guarded /
+suppressed / finalize-boundary code passes). Plus the baseline
+add/expire lifecycle, and — the teeth — a run over the real `src/`
+tree asserting zero non-baselined findings, which makes this test file
+the tier-1 enforcement point for the repo's concurrency and laziness
+invariants (docs/analysis.md).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analyze import (
+    RULES,
+    analyze_paths,
+    analyze_source,
+    apply_baseline,
+    load_baseline,
+    rule_id,
+    save_baseline,
+)
+
+REPO = Path(__file__).resolve().parents[1]
+BASELINE = REPO / "tools" / "analyze" / "baseline.json"
+
+
+def run(src: str, path: str = "fixture.py"):
+    return analyze_source(textwrap.dedent(src), path)
+
+
+def lines_of(findings, rule):
+    return [f.line for f in findings if f.rule == rule]
+
+
+# ------------------------------------------------------------------ plumbing
+def test_rule_registry_and_aliases():
+    assert rule_id("FL001") == "FL001"
+    assert rule_id("lock-discipline") == "FL001"
+    assert rule_id("host-sync") == "FL002"
+    assert rule_id("no-such-rule") is None
+    assert set(RULES) == {"FL000", "FL001", "FL002", "FL003", "FL004",
+                          "FL005"}
+
+
+def test_syntax_error_is_reported_not_raised():
+    fs = run("def broken(:\n    pass\n")
+    assert [f.rule for f in fs] == ["FL000"]
+    assert "does not parse" in fs[0].message
+
+
+# ------------------------------------------------------- FL001 lock discipline
+_LOCKED_CLASS = """
+    import threading
+
+    class Monitor:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.entries = []        # guarded-by: self._lock
+
+        def bad_read(self):
+            return len(self.entries)            # line 10
+
+        def good_read(self):
+            with self._lock:
+                return len(self.entries)
+
+        def bad_write(self, x):
+            self.entries.append(x)              # line 17
+"""
+
+
+def test_lock_discipline_flags_unguarded_method_access():
+    fs = run(_LOCKED_CLASS)
+    assert lines_of(fs, "FL001") == [10, 17]
+    assert all("self._lock" in f.message for f in fs)
+
+
+def test_lock_discipline_init_and_guarded_access_pass():
+    fs = run("""
+    import threading
+
+    class Ok:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.state = {}          # guarded-by: self._lock
+            self.state["seed"] = 1   # still __init__: exempt
+
+        def read(self):
+            with self._lock:
+                return dict(self.state)
+    """)
+    assert lines_of(fs, "FL001") == []
+
+
+def test_lock_discipline_rebinds_receiver():
+    fs = run("""
+    import threading
+
+    class Heat:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.rows = [0, 0]       # guarded-by: self._lock
+
+    def drain(heat):
+        heat.rows[0] += 1                       # line 10: needs heat._lock
+        with heat._lock:
+            heat.rows[1] += 1
+    """)
+    assert lines_of(fs, "FL001") == [10]
+    assert "heat._lock" in fs[0].message
+
+
+def test_lock_discipline_module_global():
+    fs = run("""
+    import threading
+
+    _CACHE = {}                      # guarded-by: _CACHE_LOCK
+    _CACHE_LOCK = threading.Lock()
+
+    def get(key):
+        if key in _CACHE:                       # line 8
+            return _CACHE[key]                  # line 9
+
+    def get_locked(key):
+        with _CACHE_LOCK:
+            return _CACHE.get(key)
+    """)
+    assert lines_of(fs, "FL001") == [8, 9]
+
+
+def test_lock_discipline_other_class_same_attr_name_not_flagged():
+    fs = run("""
+    import threading
+
+    class Guarded:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.nodes = []          # guarded-by: self._lock
+
+    class Unrelated:
+        def __init__(self):
+            self.nodes = [1, 2]
+
+        def read(self):
+            return self.nodes[0]     # Unrelated.nodes is not guarded
+    """)
+    assert lines_of(fs, "FL001") == []
+
+
+def test_suppression_clears_finding_and_requires_justification():
+    ok = run("""
+    import threading
+
+    class M:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.xs = []             # guarded-by: self._lock
+
+        def racy_len(self):
+            # farlint: ok lock-discipline -- len() is atomic enough here
+            return len(self.xs)
+    """)
+    assert lines_of(ok, "FL001") == []
+    assert lines_of(ok, "FL000") == []
+
+    bad = run("""
+    import threading
+
+    class M:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.xs = []             # guarded-by: self._lock
+
+        def racy_len(self):
+            return len(self.xs)      # farlint: ok lock-discipline
+    """)
+    # no justification: suppression is invalid AND the finding stands
+    assert lines_of(bad, "FL000") == [10]
+    assert lines_of(bad, "FL001") == [10]
+
+
+# ------------------------------------------------------------ FL002 host-sync
+_SYNC_SRC = """
+    import jax.numpy as jnp
+    import numpy as np
+
+    def dispatch(keys):
+        res = jnp.cumsum(keys)
+        host = np.asarray(res)                  # line 7: flagged
+        n = int(res[0])                         # line 8: flagged
+        res.block_until_ready()                 # line 9: flagged
+        return host, n
+
+    def finalize_dispatch(keys):
+        res = jnp.cumsum(keys)
+        return np.asarray(res)                  # boundary by name: ok
+
+    def shapes_only(pages):
+        n = int(pages.shape[0])                 # sanitized: ok
+        return np.asarray([n])                  # host literal: ok
+"""
+
+
+def test_host_sync_flags_in_scope_and_respects_boundaries():
+    fs = run(_SYNC_SRC, path="kernels/fixture.py")
+    assert lines_of(fs, "FL002") == [7, 8, 9]
+
+
+def test_host_sync_only_applies_on_dispatch_path_modules():
+    assert run(_SYNC_SRC, path="distributed/fixture.py") == []
+
+
+def test_host_sync_boundary_marker_comment():
+    fs = run("""
+    import jax.numpy as jnp
+    import numpy as np
+
+    # farlint: finalize-boundary
+    def merge(parts):
+        return np.asarray(jnp.concatenate(parts))
+    """, path="core/offload.py")
+    assert lines_of(fs, "FL002") == []
+
+
+def test_host_sync_exempts_helpers_of_boundaries():
+    fs = run("""
+    import jax.numpy as jnp
+    import numpy as np
+
+    def _pull(res):
+        return np.asarray(res)       # called only from a finalize fn: ok
+
+    def finalize_all(res):
+        return _pull(jnp.cumsum(res))
+    """, path="kernels/fixture.py")
+    assert lines_of(fs, "FL002") == []
+
+
+def test_host_sync_params_are_untainted():
+    fs = run("""
+    import numpy as np
+
+    def pack(rows, n_valid):
+        out = np.asarray(rows)       # host-side param: not a device value
+        return out[: int(n_valid)]
+    """, path="kernels/fixture.py")
+    assert lines_of(fs, "FL002") == []
+
+
+# ------------------------------------------------------- FL003/4/5 retrace
+def test_static_argnames_must_name_a_parameter():
+    fs = run("""
+    import functools
+    import jax
+
+    @functools.partial(jax.jit, static_argnames=("n_rows", "typo_arg"))
+    def kernel(pages, n_rows):
+        return pages[:n_rows]
+    """)
+    assert lines_of(fs, "FL003") == [5]
+    assert "typo_arg" in fs[0].message
+
+
+def test_static_arg_call_site_must_be_hashable():
+    fs = run("""
+    import functools
+    import jax
+
+    @functools.partial(jax.jit, static_argnames=("widths",))
+    def kernel(pages, widths):
+        return pages
+
+    def caller(pages):
+        good = kernel(pages, widths=(8, 16))
+        bad = kernel(pages, widths=[8, 16])     # line 11: list is unhashable
+        return good, bad
+    """)
+    assert lines_of(fs, "FL003") == [11]
+
+
+def test_jit_over_bound_method_flagged_and_suppressible():
+    fs = run("""
+    import jax
+
+    class Pipe:
+        def __init__(self):
+            self._jit = jax.jit(self._entry)    # line 6
+
+        def _entry(self, x):
+            return x
+    """)
+    assert lines_of(fs, "FL004") == [6]
+
+    ok = run("""
+    import jax
+
+    class Pipe:
+        def __init__(self):
+            # farlint: ok jit-closure -- captured attrs are write-once
+            self._jit = jax.jit(self._entry)
+
+        def _entry(self, x):
+            return x
+    """)
+    assert lines_of(ok, "FL004") == []
+
+
+def test_jit_closure_over_mutated_state_flagged():
+    fs = run("""
+    import jax
+
+    def make(scale):
+        table = {"scale": scale}
+
+        @jax.jit
+        def step(x):                            # line 7
+            return x * table["scale"]
+
+        table["scale"] = scale + 1              # mutated AFTER the def
+        return step
+    """)
+    assert lines_of(fs, "FL004") == [7]
+    assert "table" in fs[0].message
+
+
+def test_jit_closure_initialized_before_def_passes():
+    fs = run("""
+    import jax
+
+    def make(scale):
+        cfg = dict(scale=scale)      # bound once, before the jitted def
+
+        @jax.jit
+        def step(x):
+            return x * cfg["scale"]
+
+        return step
+    """)
+    assert lines_of(fs, "FL004") == []
+
+
+def test_cache_key_must_cover_every_parameter():
+    fs = run("""
+    _CACHE = {}
+
+    def compile_thing(schema, signature, interpret):
+        key = (schema, signature)               # line 5: omits interpret
+        if key not in _CACHE:
+            _CACHE[key] = object()
+        return _CACHE[key]
+    """)
+    assert lines_of(fs, "FL005") == [5]
+    assert "interpret" in fs[0].message
+
+
+def test_cache_key_with_all_params_and_non_cache_dicts_pass():
+    fs = run("""
+    _CACHE = {}
+
+    def compile_thing(schema, signature, interpret):
+        norm = bool(interpret)
+        key = (schema, signature, norm)         # norm carries interpret
+        if key not in _CACHE:
+            _CACHE[key] = object()
+        return _CACHE[key]
+
+    def group_rows(rows, tag):
+        buckets = {}
+        key = (tag,)                 # grouping dict, not a compile cache
+        buckets[key] = rows
+        return buckets
+    """)
+    assert lines_of(fs, "FL005") == []
+
+
+# ------------------------------------------------------------------- baseline
+def test_baseline_grandfathers_then_expires(tmp_path):
+    src = textwrap.dedent(_LOCKED_CLASS)
+    findings = analyze_source(src, "mod.py")
+    assert len(findings) == 2
+
+    bl = tmp_path / "baseline.json"
+    save_baseline(str(bl), findings)
+    entries = load_baseline(str(bl))
+    assert len(entries) == 2
+
+    # same code: everything grandfathered, nothing new, nothing stale
+    res = apply_baseline(analyze_source(src, "mod.py"), entries)
+    assert res.new == [] and len(res.grandfathered) == 2
+    assert res.stale == []
+
+    # fix ONE violation: its entry goes stale; the other still matches
+    fixed = src.replace("return len(self.entries)            # line 10",
+                        "with self._lock:\n"
+                        "            return len(self.entries)")
+    res = apply_baseline(analyze_source(fixed, "mod.py"), entries)
+    assert res.new == [] and len(res.grandfathered) == 1
+    assert len(res.stale) == 1
+
+    # a NEW violation elsewhere is not absorbed by the baseline
+    worse = src + "\n    def sneak(self):\n        return self.entries\n"
+    res = apply_baseline(analyze_source(worse, "mod.py"), entries)
+    assert len(res.new) == 1 and len(res.grandfathered) == 2
+
+
+def test_baseline_fingerprints_survive_line_drift():
+    src = textwrap.dedent(_LOCKED_CLASS)
+    before = analyze_source(src, "mod.py")
+    drifted = analyze_source("# a new leading comment\n\n" + src, "mod.py")
+    assert ([f.fingerprint for f in before]
+            == [f.fingerprint for f in drifted])
+    assert [f.line for f in before] != [f.line for f in drifted]
+
+
+# ----------------------------------------------------------- the real repo
+def test_repo_src_is_clean_of_non_baselined_findings():
+    entries = load_baseline(str(BASELINE))
+    findings = analyze_paths(["src", "benchmarks", "tests"], root=str(REPO))
+    res = apply_baseline(findings, entries)
+    assert res.new == [], "\n".join(f.render() for f in res.new)
+    assert res.stale == [], f"stale baseline entries: {res.stale}"
+
+
+def test_cli_module_exits_zero_on_repo():
+    env = dict(os.environ)
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.analyze",
+         "--baseline", str(BASELINE)],
+        cwd=str(REPO), env=env, capture_output=True, text=True,
+        timeout=300)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "0 new finding(s)" in proc.stdout
+
+
+def test_cli_fails_on_a_seeded_violation(tmp_path):
+    bad = tmp_path / "kernels"
+    bad.mkdir()
+    (bad / "fix.py").write_text(textwrap.dedent("""
+        import jax.numpy as jnp
+        import numpy as np
+
+        def dispatch(x):
+            return np.asarray(jnp.cumsum(x))
+    """))
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.analyze", str(bad)],
+        cwd=str(REPO), capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 1
+    assert "FL002" in proc.stdout
+
+
+def test_cli_update_baseline_roundtrip(tmp_path):
+    bad = tmp_path / "kernels"
+    bad.mkdir()
+    (bad / "fix.py").write_text(textwrap.dedent("""
+        import jax.numpy as jnp
+        import numpy as np
+
+        def dispatch(x):
+            return np.asarray(jnp.cumsum(x))
+    """))
+    bl = tmp_path / "bl.json"
+    first = subprocess.run(
+        [sys.executable, "-m", "tools.analyze", str(bad),
+         "--baseline", str(bl), "--update-baseline"],
+        cwd=str(REPO), capture_output=True, text=True, timeout=300)
+    assert first.returncode == 0, first.stdout + first.stderr
+    assert json.loads(bl.read_text())["findings"]
+    second = subprocess.run(
+        [sys.executable, "-m", "tools.analyze", str(bad),
+         "--baseline", str(bl)],
+        cwd=str(REPO), capture_output=True, text=True, timeout=300)
+    assert second.returncode == 0, second.stdout + second.stderr
+    assert "1 baselined" in second.stdout
+
+
+def test_seed_annotations_exist_in_src():
+    """The conventions the issue seeds must stay present: losing the
+    annotations silently disables the whole lock-discipline pass."""
+    health = (REPO / "src/repro/distributed/health.py").read_text()
+    cluster = (REPO / "src/repro/core/cluster.py").read_text()
+    pipeline = (REPO / "src/repro/core/pipeline.py").read_text()
+    rebalance = (REPO / "src/repro/distributed/rebalance.py").read_text()
+    assert health.count("guarded-by: self._lock") >= 4
+    assert "guarded-by: self._lock" in cluster
+    assert "guarded-by: _CACHE_LOCK" in pipeline
+    assert rebalance.count("guarded-by: self._lock") >= 2
+
+
+if __name__ == "__main__":
+    sys.exit(pytest.main([__file__, "-q"]))

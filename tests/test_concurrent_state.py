@@ -1,0 +1,261 @@
+"""Concurrent regression tests for the farlint-found races (PR 7).
+
+Each test targets one real finding the lock-discipline pass surfaced in
+`src/` and that this PR fixed (rather than baselined):
+
+  * the compile cache (`core/pipeline.py`) did a lock-free double-checked
+    read — parallel drains could observe the dict mid-insert;
+  * `TableHeat` counters (`distributed/rebalance.py`) were bare numpy
+    `+=` — parallel node-drain threads recording into the same ledger
+    lost increments, silently skewing the drift detector;
+  * `FarCluster.catalog` (`core/cluster.py`) was iterated by
+    `check_drift`/`heal`/`snapshot` while alloc/free mutated it —
+    "dictionary changed size during iteration" under churn;
+  * `HealthMonitor` queries (`distributed/health.py`) read lifecycle
+    state unlocked while drain threads transitioned it.
+
+These tests drive the exact thread mix that hits each race. They must
+stay exact-assertion (no tolerances): the lock makes the outcome
+deterministic, and a tolerance would let the regression back in.
+"""
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import operators as op
+from repro.core.cluster import ClusterTable, FarCluster
+from repro.core.pipeline import cache_info, clear_cache, compile_pipeline
+from repro.core.table import Column, FTable
+from repro.distributed.health import ALIVE, DEAD, SUSPECT, HealthMonitor
+from repro.distributed.rebalance import TableHeat
+
+
+def run_threads(workers):
+    """Start/join `workers`; re-raise the first exception from any."""
+    errors: list[BaseException] = []
+
+    def wrap(fn):
+        def run():
+            try:
+                fn()
+            except BaseException as e:      # noqa: BLE001 - reported below
+                errors.append(e)
+        return run
+
+    threads = [threading.Thread(target=wrap(fn)) for fn in workers]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    if errors:
+        raise errors[0]
+
+
+# ------------------------------------------------------------- compile cache
+def test_compile_cache_single_build_under_contention():
+    """8 threads race compile_pipeline for one key: every caller must get
+    the SAME executable and the cache must hold exactly one entry."""
+    clear_cache()
+    ft = FTable("cc", tuple(Column(f"c{i}", "f32") for i in range(4)),
+                n_rows=64)
+    pipe = (op.Select((op.Predicate("c1", ">", 0.0),)),)
+    barrier = threading.Barrier(8)
+    got: list = []
+
+    def build():
+        barrier.wait()
+        got.append(compile_pipeline(ft, pipe, interpret=True))
+
+    run_threads([build] * 8)
+    assert len(got) == 8
+    assert len({id(p) for p in got}) == 1, "cache built duplicate executables"
+    assert cache_info() == 1
+    clear_cache()
+
+
+def test_compile_cache_distinct_keys_stay_distinct():
+    clear_cache()
+    ft = FTable("cc2", tuple(Column(f"c{i}", "f32") for i in range(4)),
+                n_rows=64)
+    pipes = [(op.Select((op.Predicate(f"c{i}", ">", 0.0),)),)
+             for i in range(4)]
+    barrier = threading.Barrier(8)
+    got: dict[int, list] = {i: [] for i in range(4)}
+
+    def build(i):
+        def run():
+            barrier.wait()
+            for _ in range(5):
+                got[i].append(compile_pipeline(ft, pipes[i], interpret=True))
+        return run
+
+    run_threads([build(i % 4) for i in range(8)])
+    assert cache_info() == 4
+    for i in range(4):
+        assert len({id(p) for p in got[i]}) == 1
+    clear_cache()
+
+
+# ------------------------------------------------------------------ TableHeat
+def test_table_heat_counters_exact_under_parallel_drains():
+    """8 'drain threads' record into one ledger; the unlocked += this
+    replaces lost increments here. Totals must be EXACT."""
+    n_nodes, n_threads, iters = 4, 8, 2000
+    heat = TableHeat.zeros(n_nodes)
+    barrier = threading.Barrier(n_threads)
+
+    def drain(node):
+        def run():
+            barrier.wait()
+            for _ in range(iters):
+                heat.record_dispatch(node, 3)
+                heat.record_response(node, 7)
+                heat.record_request()
+                heat.record_failover(node, 2)
+                heat.record_replica_write(node, 5)
+        return run
+
+    run_threads([drain(i % n_nodes) for i in range(n_threads)])
+    per_node = n_threads // n_nodes * iters
+    assert heat.rows_touched.tolist() == [3 * per_node] * n_nodes
+    assert heat.bytes_shipped.tolist() == [7 * per_node] * n_nodes
+    assert heat.requests == n_threads * iters
+    assert heat.replica_rows.tolist() == [2 * per_node] * n_nodes
+    assert heat.replica_bytes_written.tolist() == [5 * per_node] * n_nodes
+    assert heat.failovers == n_threads * iters
+
+
+def test_table_heat_reset_races_recorders_without_tearing():
+    """reset() concurrent with recorders: counters never go negative and
+    end up exactly what was recorded after the last reset completes."""
+    heat = TableHeat.zeros(2)
+    stop = threading.Event()
+
+    def recorder():
+        while not stop.is_set():
+            heat.record_dispatch(0, 1)
+
+    def resetter():
+        for _ in range(200):
+            heat.reset()
+        stop.set()
+
+    run_threads([recorder, recorder, resetter])
+    snap = heat.rows_snapshot()
+    assert (snap >= 0).all()
+    heat.reset()
+    assert heat.rows_snapshot().tolist() == [0, 0]
+
+
+# ----------------------------------------------------------- cluster catalog
+def test_catalog_survives_concurrent_alloc_free_and_drift_sweeps():
+    """Writers register/free page-less tables (pure catalog traffic) while
+    readers run check_drift sweeps. Pre-fix, the sweep iterated
+    `self.catalog` raw and died with 'dictionary changed size during
+    iteration' under exactly this churn."""
+    cl = FarCluster(2)
+    cqp = cl.open_connection()
+    cols = (Column("k", "i32"), Column("v"))
+    iters = 300
+    done = threading.Event()
+
+    def pageless(name: str) -> ClusterTable:
+        return ClusterTable(
+            FTable(name, cols, n_rows=0), [None] * cl.n_nodes,
+            [np.empty(0, np.int64) for _ in range(cl.n_nodes)], "range")
+
+    def writer(tag):
+        def run():
+            for i in range(iters):
+                ct = cl._register(pageless(f"t{tag}_{i}"))
+                cl.free_table_mem(cqp, ct)
+        return run
+
+    def reader():
+        while not done.is_set():
+            reports = cl.check_drift()
+            assert all(r.ratio >= 1.0 for r in reports.values())
+
+    def sweep_writers_then_signal():
+        run_threads([writer("a"), writer("b")])
+        done.set()
+
+    run_threads([sweep_writers_then_signal, reader, reader])
+    assert not any(k.startswith("t") for k in cl.catalog)  # all freed
+
+    keeper = cl._register(pageless("keeper"))
+    assert cl.catalog["keeper"] is keeper
+
+
+def test_free_table_mem_is_idempotent_under_race():
+    """Two threads double-free one table: the guarded check-then-del must
+    not raise and must not delete a successor registered under the name."""
+    cl = FarCluster(2)
+    cqp = cl.open_connection()
+    cols = (Column("k", "i32"), Column("v"))
+    for _ in range(50):
+        ct = ClusterTable(
+            FTable("dup", cols, n_rows=0), [None] * cl.n_nodes,
+            [np.empty(0, np.int64) for _ in range(cl.n_nodes)], "range")
+        cl._register(ct)
+        barrier = threading.Barrier(2)
+
+        def free():
+            barrier.wait()
+            cl.free_table_mem(cqp, ct)
+
+        run_threads([free, free])
+        assert "dup" not in cl.catalog
+
+
+# -------------------------------------------------------------- HealthMonitor
+def test_health_queries_race_lifecycle_writers():
+    """Readers poll routing queries while writers drive the lifecycle.
+    Every observed state must be a legal lifecycle value, and the final
+    (single-threaded) state must be deterministic."""
+    n = 4
+    mon = HealthMonitor(n, dead_after=3)
+    stop = threading.Event()
+    legal = {ALIVE, SUSPECT, DEAD}
+
+    def writer(node):
+        def run():
+            for i in range(500):
+                mon.record_failure(node, RuntimeError("strike"))
+                mon.heartbeat(node, latency_s=0.001)
+                mon.record_success(node)
+                if i % 50 == 0:
+                    mon.mark_dead(node)
+                    mon.revive(node)
+        return run
+
+    def reader():
+        while not stop.is_set():
+            assert set(mon.summary().values()) <= legal
+            for i in range(n):
+                assert mon.state(i) in legal
+            alive, dead = set(mon.alive_nodes()), set(mon.dead_nodes())
+            assert alive | dead <= set(range(n))
+
+    def writers_then_signal():
+        run_threads([writer(i) for i in range(n)])
+        stop.set()
+
+    run_threads([writers_then_signal, reader, reader])
+    # single-threaded epilogue: transitions still behave
+    for i in range(n):
+        mon.record_success(i)
+        assert mon.state(i) == ALIVE
+    mon.mark_dead(0)
+    assert not mon.is_alive(0)
+    assert mon.dead_nodes() == [0]
+    mon.revive(0)
+    assert mon.alive_nodes() == list(range(n))
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(pytest.main([__file__, "-q"]))

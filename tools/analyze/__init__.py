@@ -1,0 +1,12 @@
+"""`tools.analyze`: thin launcher for farlint (`repro.analyze`).
+
+Exists so `python -m tools.analyze` works from a bare checkout — CI's
+lint job runs it with no package installed and no jax. The real
+implementation lives in src/repro/analyze/ (stdlib-only)."""
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

@@ -1,0 +1,7 @@
+import sys
+
+import tools.analyze  # noqa: F401  (bootstraps src/ onto sys.path)
+from repro.analyze.cli import main
+
+if __name__ == "__main__":
+    sys.exit(main())
