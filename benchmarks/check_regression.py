@@ -108,6 +108,52 @@ def check_failover(cur_rows: list[dict], *, min_recovery: float,
     return failures
 
 
+def check_network(cur_rows: list[dict], *,
+                  max_p99_ratio: float) -> list[str]:
+    """PR 8 fan-in guard, checked against the CURRENT run only: the p99
+    request latency at the highest measured connection count up to 256
+    must stay within `max_p99_ratio` x the single-connection p50 —
+    connection count buys throughput, never an unbounded tail (an
+    event-loop stall or a broken batching window shows up here as a
+    runaway ratio). Also re-checks the shed invariants the bench
+    asserts: the latency sweep sheds nothing, the overload phase sheds
+    typed (shed > 0) without starving (completed > 0)."""
+    failures = []
+    subs = {r["connections"]: r for r in cur_rows
+            if r.get("bench") == "network"
+            and r.get("name", "").startswith("submit_c")}
+    base = subs.get(1)
+    fan_in = [c for c in subs if 1 < c <= 256]
+    if base is not None and fan_in:
+        c = max(fan_in)
+        p99 = subs[c].get("p99_us")
+        p50_1 = base["us_per_call"]
+        if p99 is not None and p50_1 > 0:
+            ratio = p99 / p50_1
+            if ratio > max_p99_ratio:
+                failures.append(
+                    f"network submit_c{c}: p99 {p99:.0f}us is "
+                    f"{ratio:.1f}x the 1-conn p50 ({p50_1:.0f}us), over "
+                    f"the {max_p99_ratio}x bound (tail latency collapse)")
+    for r in subs.values():
+        if r.get("shed", 0):
+            failures.append(
+                f"network {r['name']}: {r['shed']} sheds in the latency "
+                f"sweep (admission bit under its own depth)")
+    for r in cur_rows:
+        if (r.get("bench") == "network"
+                and r.get("name", "").startswith("overload_")):
+            if not r.get("shed"):
+                failures.append(
+                    f"network {r['name']}: overload phase shed nothing "
+                    f"(the admission bound never engaged)")
+            if not r.get("completed"):
+                failures.append(
+                    f"network {r['name']}: nothing completed under "
+                    f"overload (admission starved every tenant)")
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("current", help="fresh benchmarks.run --json output")
@@ -123,6 +169,10 @@ def main() -> int:
     ap.add_argument("--min-dip", type=float, default=0.05,
                     help="fail when during-kill throughput drops below "
                          "this fraction of pre-kill (stall, not a dip)")
+    ap.add_argument("--max-p99-ratio", type=float, default=500.0,
+                    help="fail when the network bench's p99 at the "
+                         "highest <=256-connection fan-in exceeds this "
+                         "multiple of the 1-connection p50")
     args = ap.parse_args()
 
     cur_rows, cur_meta = load_rows(args.current)
@@ -136,6 +186,16 @@ def main() -> int:
         print(f"# {n_chaos} failover rows checked "
               f"(min-recovery {args.min_recovery}, min-dip {args.min_dip}), "
               f"{len(chaos_failures)} failed")
+    net_failures = check_network(cur_rows,
+                                 max_p99_ratio=args.max_p99_ratio)
+    n_net = sum(1 for r in cur_rows if r.get("bench") == "network")
+    for line in net_failures:
+        print(f"NETWORK GUARD FAILED: {line}")
+    if n_net:
+        print(f"# {n_net} network rows checked "
+              f"(max-p99-ratio {args.max_p99_ratio}), "
+              f"{len(net_failures)} failed")
+    chaos_failures += net_failures
     baseline = args.against or latest_committed_baseline(
         cur_meta.get("quick"))
     if baseline is None:

@@ -17,6 +17,8 @@
                              -> throughput recovery vs a fresh map
   bench_failover             kill-a-node under mixed load: byte-identical
                              failover dip -> heal -> throughput recovery
+  bench_network              FViewServer fan-in: p50/p99 request latency
+                             vs connection count + typed overload shedding
 
 FV rows time the fused jitted request path with BLOCKING p50 timing (see
 common.timeit); shipped/read byte columns are exact and carry the paper's
@@ -42,8 +44,9 @@ import time
 from benchmarks import (bench_cluster_scaleout, bench_crypto, bench_failover,
                         bench_far_kv, bench_grouping, bench_join,
                         bench_multiclient, bench_multiclient_mixed,
-                        bench_projection, bench_rdma, bench_rebalance,
-                        bench_regex, bench_resources, bench_selection, common)
+                        bench_network, bench_projection, bench_rdma,
+                        bench_rebalance, bench_regex, bench_resources,
+                        bench_selection, common)
 from benchmarks.common import print_csv, write_json
 
 ALL = {
@@ -61,6 +64,7 @@ ALL = {
     "cluster_scaleout": bench_cluster_scaleout.run,
     "rebalance": bench_rebalance.run,
     "failover": bench_failover.run,
+    "network": bench_network.run,
 }
 
 

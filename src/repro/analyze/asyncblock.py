@@ -1,0 +1,115 @@
+"""FL006 async-blocking: the network tier's event loop never blocks.
+
+`net/server.py` multiplexes thousands of connections on ONE asyncio
+loop; a single blocking call inside an `async def` — a `time.sleep`, a
+synchronous socket op, a `concurrent.futures` `.result()`, a jax
+`.block_until_ready()` — stalls every connection at once, which is
+exactly the fan-in latency collapse the bench_network p99 guard exists
+to catch. The architectural rule (docs/network.md): anything that can
+block runs on the server's worker executor; `async def` bodies only
+await.
+
+This pass enforces the rule for every module under `src/repro/net/`:
+
+  flagged inside an `async def` body
+      time.sleep(...)           (asyncio.sleep is the async form)
+      socket.socket(...) / socket.create_connection(...)
+      .recv() .recv_into() .recvfrom() .sendall() .accept() .connect()
+      .result()                 (blocking future join)
+      .block_until_ready()      (blocks on the device)
+
+  not flagged
+      the same calls in plain `def` functions (the sync client
+      transport and the worker-thread batch runner live there);
+      nested `def`/`lambda` bodies inside an `async def` (they are
+      thunks handed to `run_in_executor`, not loop code);
+      functions whose name contains `finalize` or carrying a
+      `# farlint: finalize-boundary` marker (same escape hatch as
+      FL002 — a deliberate sync point, reviewed by name).
+
+Suppressions use the shared convention: `# farlint: ok FL006 -- why`.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analyze.core import Finding, SourceFile
+
+#: scope: the asyncio network tier only (suffix-on-directory match)
+SCOPE_PARTS = ("repro", "net")
+
+_BLOCKING_CALLS = {"time.sleep", "socket.socket",
+                   "socket.create_connection"}
+_BLOCKING_METHODS = {"recv", "recv_into", "recvfrom", "sendall", "accept",
+                     "connect", "result", "block_until_ready"}
+
+
+def in_scope(rel: str) -> bool:
+    parts = rel.replace("\\", "/").split("/")
+    return any(tuple(parts[i:i + 2]) == SCOPE_PARTS
+               for i in range(len(parts) - 2))
+
+
+def _time_sleep_aliases(tree: ast.Module) -> set[str]:
+    """Bare names that mean `time.sleep` (`from time import sleep [as s]`)."""
+    out = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module == "time":
+            for a in node.names:
+                if a.name == "sleep":
+                    out.add(a.asname or a.name)
+    return out
+
+
+def _async_defs(tree: ast.Module) -> list[ast.AsyncFunctionDef]:
+    return [n for n in ast.walk(tree)
+            if isinstance(n, ast.AsyncFunctionDef)]
+
+
+def _body_calls(fn: ast.AsyncFunctionDef) -> list[ast.Call]:
+    """Call nodes lexically in `fn`'s own body — nested defs and lambdas
+    are executor/thunk territory and excluded."""
+    out: list[ast.Call] = []
+    stack: list[ast.AST] = list(fn.body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        if isinstance(node, ast.Call):
+            out.append(node)
+        stack.extend(ast.iter_child_nodes(node))
+    return out
+
+
+def check(sf: SourceFile) -> list[Finding]:
+    if not in_scope(sf.rel):
+        return []
+    sleep_aliases = _time_sleep_aliases(sf.tree)
+    findings: list[Finding] = []
+    for fn in _async_defs(sf.tree):
+        if "finalize" in fn.name.lower() or sf.boundary_marker(fn.lineno):
+            continue
+        for call in _body_calls(fn):
+            func = call.func
+            try:
+                text = ast.unparse(func)
+            except Exception:       # pragma: no cover
+                text = ""
+            what = None
+            if text in _BLOCKING_CALLS:
+                what = f"`{text}(...)`"
+            elif (isinstance(func, ast.Name)
+                  and func.id in sleep_aliases):
+                what = f"`{func.id}(...)` (time.sleep)"
+            elif (isinstance(func, ast.Attribute)
+                  and func.attr in _BLOCKING_METHODS):
+                what = f"`.{func.attr}(...)`"
+            if what is not None:
+                findings.append(Finding(
+                    "FL006", sf.rel, call.lineno,
+                    f"blocking call {what} inside `async def {fn.name}` "
+                    f"stalls the server event loop; await the async form "
+                    f"or move it to the worker executor "
+                    f"(run_in_executor)"))
+    return findings

@@ -61,6 +61,11 @@ RULES: dict[str, tuple[str, str]] = {
     "FL005": ("cache-key",
               "a compile/cache key tuple that omits one of the enclosing "
               "function's parameters (the interpret=None bug class)"),
+    "FL006": ("async-blocking",
+              "a blocking call (time.sleep, a synchronous socket op, "
+              ".result(), .block_until_ready()) inside an `async def` "
+              "body under src/repro/net/ — it stalls the server event "
+              "loop; await the async form or use run_in_executor"),
 }
 
 _ALIAS_TO_ID = {alias: rid for rid, (alias, _) in RULES.items()}
@@ -214,8 +219,8 @@ class SourceFile:
 # ---------------------------------------------------------------------- engine
 def _passes():
     # imported here so `core` stays importable from the passes themselves
-    from repro.analyze import hostsync, locks, retrace
-    return (locks.check, hostsync.check, retrace.check)
+    from repro.analyze import asyncblock, hostsync, locks, retrace
+    return (locks.check, hostsync.check, retrace.check, asyncblock.check)
 
 
 def analyze_source(text: str, path: str,

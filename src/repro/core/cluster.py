@@ -357,12 +357,33 @@ class FarCluster:
     merges are byte-identical to a single node holding the whole table —
     across partitioners, node counts, and live migrations."""
 
-    def __init__(self, n_nodes: int, capacity_bytes: int = 64 * 2**20, *,
+    def __init__(self, n_nodes: int | None = None,
+                 capacity_bytes: int = 64 * 2**20, *,
                  n_regions: int = 6, interpret: bool | None = None,
                  partitioner: str = "range", parallel: bool = True,
                  replicas: int = 1, dead_after: int = 3,
                  slow_after_s: float = 300.0,
-                 fault: FaultInjector | None = None):
+                 fault: FaultInjector | None = None,
+                 nodes: list | None = None):
+        # `nodes=` plugs in pre-built node handles — notably
+        # `net.client.RemoteNodeHandle` transports to real `FViewServer`
+        # processes (see `net.client.remote_cluster`). Anything with the
+        # FViewNode duck type works; handle i must sit at cluster
+        # position i so partition maps and replica placement line up.
+        if nodes is not None:
+            nodes = list(nodes)
+            if n_nodes is None:
+                n_nodes = len(nodes)
+            elif n_nodes != len(nodes):
+                raise ValueError(
+                    f"n_nodes={n_nodes} but nodes= has {len(nodes)}")
+            for i, node in enumerate(nodes):
+                if node.node_id != i:
+                    raise ValueError(
+                        f"nodes[{i}] carries node_id {node.node_id}; "
+                        "handles must be ordered by cluster position")
+        if n_nodes is None:
+            raise ValueError("pass n_nodes or nodes=")
         if n_nodes < 1:
             raise ValueError("a cluster needs at least one node")
         if not 1 <= replicas <= n_nodes:
@@ -374,10 +395,10 @@ class FarCluster:
         self.fault = FaultInjector() if fault is None else fault
         self.health = HealthMonitor(n_nodes, dead_after=dead_after,
                                     slow_after_s=slow_after_s)
-        self.nodes = [fv.FViewNode(capacity_bytes, n_regions=n_regions,
-                                   interpret=interpret, node_id=i,
-                                   fault=self.fault)
-                      for i in range(n_nodes)]
+        self.nodes = nodes if nodes is not None else [
+            fv.FViewNode(capacity_bytes, n_regions=n_regions,
+                         interpret=interpret, node_id=i, fault=self.fault)
+            for i in range(n_nodes)]
         self.partitioner = partitioner
         self.replicas = int(replicas)   # default k for alloc_table_mem
         self.parallel = parallel and n_nodes > 1

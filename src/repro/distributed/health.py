@@ -53,6 +53,22 @@ class DroppedDispatchError(FarviewError):
         self.node_id = node_id
 
 
+class OverloadedError(FarviewError):
+    """The server shed this request at ADMISSION (global queue depth or
+    the tenant's fair share exhausted) — backpressure before the pool
+    or the scheduler ever sees the verb. Deliberately NOT a health
+    strike and NOT retried by failover (`ClusterPending._settle_entry`
+    re-raises it): the node is alive and explicitly telling this client
+    to back off, so rerouting the same load to a replica would just
+    spread the overload. Travels the wire as a typed `OVERLOADED`
+    frame (net/wire.py)."""
+
+    def __init__(self, node_id: int, detail: str = "queue full"):
+        super().__init__(f"node {node_id} overloaded: {detail}")
+        self.node_id = node_id
+        self.detail = detail
+
+
 class ReplicaUnavailableError(FarviewError):
     """Redundancy exhausted: every copy of a partition (primary and all
     replicas) lives on a DEAD node. Raised loudly instead of serving a

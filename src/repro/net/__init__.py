@@ -1,0 +1,30 @@
+"""Network tier (PR 8): the node as a real server process.
+
+Farview is *network-attached* memory — the paper's claim is a smart NIC
+serving many small compute nodes at line rate. Everything below
+`core/` models that with in-process objects; this package puts a socket
+in the middle without changing a single verb's semantics:
+
+  * `wire`   — the compact binary frame format (length-prefixed,
+               versioned header, request-id correlation) plus a tagged
+               value codec for pipelines, page payloads, results and
+               TYPED errors (`NodeDeadError` / `DroppedDispatchError` /
+               `OverloadedError` reconstruct cross-process, so PR 6
+               failover works over a real connection drop).
+  * `server` — `FViewServer`, an asyncio front-end multiplexing
+               thousands of client connections into ONE bucket-batched
+               `FViewNode` scheduler, with admission control and
+               per-tenant fair-share backpressure.
+  * `client` — `RemoteNodeHandle`, a synchronous socket transport that
+               duck-types `FViewNode`, so `FarCluster(nodes=[...])`
+               runs scatter-gather, failover and rebalancing unchanged
+               over sockets — byte-identical to in-process.
+
+See docs/network.md for the frame diagram and the parity guarantees.
+"""
+from repro.net.client import RemoteNodeHandle, remote_cluster
+from repro.net.server import FViewServer
+from repro.net.wire import ProtocolError
+
+__all__ = ["FViewServer", "RemoteNodeHandle", "remote_cluster",
+           "ProtocolError"]

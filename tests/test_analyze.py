@@ -47,8 +47,9 @@ def test_rule_registry_and_aliases():
     assert rule_id("lock-discipline") == "FL001"
     assert rule_id("host-sync") == "FL002"
     assert rule_id("no-such-rule") is None
+    assert rule_id("async-blocking") == "FL006"
     assert set(RULES) == {"FL000", "FL001", "FL002", "FL003", "FL004",
-                          "FL005"}
+                          "FL005", "FL006"}
 
 
 def test_syntax_error_is_reported_not_raised():
@@ -498,3 +499,89 @@ def test_seed_annotations_exist_in_src():
 
 if __name__ == "__main__":
     sys.exit(pytest.main([__file__, "-q"]))
+
+
+# ------------------------------------------------------- FL006 async-blocking
+NET_PATH = "src/repro/net/fixture.py"
+
+
+def test_async_blocking_calls_flagged_in_net_scope():
+    fs = run("""
+    import time
+    import socket
+
+    async def handler(sock, fut):
+        time.sleep(0.1)                         # line 6
+        data = sock.recv(16)                    # line 7
+        out = fut.result()                      # line 8
+        out.block_until_ready()                 # line 9
+        conn = socket.create_connection(("h", 1))   # line 10
+        return data, conn
+    """, NET_PATH)
+    assert lines_of(fs, "FL006") == [6, 7, 8, 9, 10]
+
+
+def test_async_blocking_ignores_sync_defs_and_async_forms():
+    fs = run("""
+    import asyncio
+    import time
+
+    def worker(sock):
+        time.sleep(0.1)             # sync function: worker-thread land
+        return sock.recv(16)
+
+    async def handler(loop, reader, pool):
+        await asyncio.sleep(0.002)              # the async form
+        hdr = await reader.readexactly(16)
+        out = await loop.run_in_executor(pool, lambda: time.sleep(1))
+        return hdr, out
+    """, NET_PATH)
+    assert lines_of(fs, "FL006") == []
+
+
+def test_async_blocking_skips_nested_defs_and_out_of_scope_files():
+    nested = """
+    import time
+
+    async def handler(loop, pool):
+        def thunk():
+            time.sleep(0.5)         # executor thunk: allowed
+        return await loop.run_in_executor(pool, thunk)
+    """
+    assert lines_of(run(nested, NET_PATH), "FL006") == []
+    # the same blocking calls OUTSIDE src/repro/net/ are not this rule's
+    # business (asyncio elsewhere has its own review)
+    blocking = """
+    import time
+
+    async def handler():
+        time.sleep(0.1)
+    """
+    assert lines_of(run(blocking, "src/repro/core/other.py"), "FL006") == []
+
+
+def test_async_blocking_respects_finalize_boundary_and_suppression():
+    fs = run("""
+    import time
+
+    async def finalize_round(fut):
+        return fut.result()         # finalize boundary by name
+
+    # farlint: finalize-boundary
+    async def drain(fut):
+        return fut.result()
+
+    async def shim(fut):
+        return fut.result()  # farlint: ok FL006 -- test shim, reviewed
+    """, NET_PATH)
+    assert lines_of(fs, "FL006") == []
+
+
+def test_async_blocking_flags_from_time_import_sleep_alias():
+    fs = run("""
+    from time import sleep as snooze
+
+    async def handler():
+        snooze(1)                               # line 5
+    """, NET_PATH)
+    assert lines_of(fs, "FL006") == [5]
