@@ -1,0 +1,240 @@
+"""Chaos soak bench: latency tail and recovery under socket faults (PR 9).
+
+Every other bench measures the network tier on a clean loopback. This
+one puts a seeded `ChaosProxy` in front of every `FViewServer` and
+measures what the paper's tail-latency story costs when the network
+misbehaves — the disaggregated-memory pitch dies if a flaky link turns
+p99 unbounded. Three phases per node count, every round byte-checked
+against the healthy reference (a fast wrong answer is not a recovery):
+
+  clean      pass-through proxies: baseline p50/p99 round latency for
+             mixed selection + group-aggregate scatter rounds.
+  soak       jittered delivery + frame corruption + duplicated frames.
+             Corrupt frames fail the CRC typed and failover reroutes;
+             rounds retry through typed errors only. Reported
+             chaos_tail_ratio = p99(soak) / p50(clean) is the CI guard
+             (`check_regression --max-chaos-ratio`): chaos may cost
+             retries, never an unbounded tail.
+  degraded   ONE node slowed (per-frame delay), NOT killed — the
+             gray-failure case. Hedged failover re-issues the slow
+             primary's partitions on the cyclic replica after
+             `hedge_after_s`; mid-flight strikes escalate the laggard
+             out of the routing set. recovery_frac = degraded/clean
+             throughput must clear 0.9 (`--min-chaos-recovery`): a
+             slow node costs its share of the cluster, not the tail.
+
+Fault logs: with FARVIEW_NET_LOG_DIR set, every proxy's injection log
+is written as JSON-lines (`chaos-nodeN.jsonl`) — the CI lane uploads
+them as the failure artifact, and the seed makes any run replayable.
+
+Standalone:  python -m benchmarks.bench_chaos --json BENCH.json --seed 7
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import operators as op
+from repro.core.cluster import FarCluster
+from repro.core.table import Column, FTable
+from repro.distributed.health import DEAD
+from repro.net.chaos import FaultSchedule, proxied_endpoints
+from repro.net.client import RemoteNodeHandle
+from repro.net.server import FViewServer
+
+COLS = tuple(Column(f"c{i}", "i32" if i == 0 else "f32") for i in range(6))
+N_KEYS = 64
+CAPACITY = 128 * 2**20
+
+PIPES = (
+    (op.Select((op.Predicate("c1", "<", 0.2),)),),
+    (op.GroupBy("c0", ("c1", "c2"), n_buckets=256),),
+)
+
+SOAK = FaultSchedule(jitter_s=0.001, corrupt_prob=0.02,
+                     duplicate_prob=0.03)
+
+
+def _data(rng, keys):
+    d = {"c0": np.asarray(keys, np.int32)}
+    for i in range(1, 6):
+        # integer-valued floats: merges stay exact under any order
+        d[f"c{i}"] = rng.integers(-50, 50, len(keys)).astype(np.float32)
+    return d
+
+
+def _round(cl, cqp, ct):
+    pends = [cl.submit_request(cqp, ct, pipe) for pipe in PIPES]
+    return [p.wait().finalize() for p in pends]
+
+
+def _assert_parity(results, ref):
+    for res, r in zip(results, ref):
+        if res.kind == "groups":
+            assert set(res.groups) == set(r.groups)
+            for key in r.groups:
+                for a, b in zip(r.groups[key], res.groups[key]):
+                    np.testing.assert_array_equal(np.asarray(a),
+                                                  np.asarray(b))
+        else:
+            assert res.count == r.count
+            np.testing.assert_array_equal(np.asarray(res.rows),
+                                          np.asarray(r.rows))
+
+
+def _percentile(xs, q):
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(q * len(xs)))]
+
+
+def _measure(cl, cqp, ct, rounds, ref, *, retry=0):
+    """Per-round wall times; typed faults cost a retry (revive + rerun,
+    the retry time stays IN the round's clock — tails are honest).
+    Returns (times, retries_used)."""
+    times, retries = [], 0
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        for attempt in range(retry + 1):
+            try:
+                results = _round(cl, cqp, ct)
+                break
+            except Exception:       # noqa: BLE001 - typed fault: reroute
+                if attempt == retry:
+                    raise
+                retries += 1
+                for i in range(cl.n_nodes):
+                    cl.health.revive(i)
+                time.sleep(0.06)    # reconnect breakers reach HALF_OPEN
+        times.append(time.perf_counter() - t0)
+        _assert_parity(results, ref)
+    return times, retries
+
+
+def run(seed: int = 0) -> None:
+    import gc
+
+    q = common.quick()
+    n = 1 << (13 if q else 15)
+    rounds = 5 if q else 20
+    node_counts = (2,) if q else (2, 4)
+    log_dir = os.environ.get("FARVIEW_NET_LOG_DIR")
+
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, N_KEYS, n).astype(np.int32)
+    words = FTable("t", COLS, n_rows=n).encode(_data(rng, keys))
+
+    for k in node_counts:
+        gc.collect()
+        servers = [FViewServer.start_in_thread(
+            node_id=i, capacity_bytes=CAPACITY) for i in range(k)]
+        proxies, endpoints = proxied_endpoints(servers, seed=seed)
+        handles = [RemoteNodeHandle(h, p, node_id=i, timeout_s=60.0,
+                                    reconnect_backoff_s=0.02,
+                                    reconnect_reset_s=0.05)
+                   for i, (h, p) in enumerate(endpoints)]
+        cl = FarCluster(nodes=handles, replicas=2, dead_after=2,
+                        slow_after_s=0.1, hedge_after_s=0.1)
+        cqp = cl.open_connection()
+        try:
+            ct = cl.alloc_table_mem(cqp, FTable("t", COLS, n_rows=n),
+                                    partitioner="hash", keys=keys)
+            cl.table_write(cqp, ct, words)
+            ref = _round(cl, cqp, ct)   # warmup + parity reference
+
+            # ---- clean baseline
+            times, _ = _measure(cl, cqp, ct, rounds, ref)
+            clean_p50 = _percentile(times, 0.50)
+            clean_thru = len(PIPES) * n / clean_p50
+            common.row("chaos", f"clean_{k}nodes", clean_p50 * 1e6,
+                       nodes=k, rows=n, replicas=2, rounds=rounds,
+                       p99_us=round(_percentile(times, 0.99) * 1e6, 1),
+                       mrows_per_s=round(clean_thru / 1e6, 2))
+
+            # ---- seeded soak: corruption, duplicates, jitter
+            for p in proxies:
+                p.set_schedule(SOAK)
+            times, retries = _measure(cl, cqp, ct, rounds, ref, retry=8)
+            soak_p99 = _percentile(times, 0.99)
+            faults = sum(len(p.fault_log) for p in proxies)
+            common.row("chaos", f"soak_{k}nodes",
+                       _percentile(times, 0.50) * 1e6,
+                       nodes=k, rows=n, replicas=2, rounds=rounds,
+                       seed=seed, faults=faults, retries=retries,
+                       p99_us=round(soak_p99 * 1e6, 1),
+                       chaos_tail_ratio=round(soak_p99 / clean_p50, 2))
+
+            # ---- gray failure: slow ONE node, never kill it
+            for p in proxies:
+                p.set_schedule(FaultSchedule())
+            for i in range(cl.n_nodes):
+                cl.health.revive(i)
+            victim = k - 1
+            proxies[victim].set_schedule(FaultSchedule(delay_s=0.25))
+            # detection: hedges answer each round while slow drains and
+            # mid-flight strikes escalate the laggard out of the routing
+            # set (dead_after=2 -> typically 2 rounds, bounded at 6)
+            for _ in range(6):
+                _measure(cl, cqp, ct, 1, ref, retry=8)
+                if cl.health.state(victim) == DEAD:
+                    break
+            # fence the detected node: cut its stalled backlog so its
+            # drain lock frees — steady state, not the detection bill,
+            # is what recovery_frac measures
+            proxies[victim].drop_all()
+            time.sleep(0.1)
+            times, retries = _measure(cl, cqp, ct, rounds, ref, retry=8)
+            deg_p50 = _percentile(times, 0.50)
+            deg_thru = len(PIPES) * n / deg_p50
+            common.row("chaos", f"degraded_{k}nodes", deg_p50 * 1e6,
+                       nodes=k, rows=n, replicas=2, rounds=rounds,
+                       victim=victim, retries=retries,
+                       p99_us=round(_percentile(times, 0.99) * 1e6, 1),
+                       mrows_per_s=round(deg_thru / 1e6, 2),
+                       recovery_frac=round(deg_thru / clean_thru, 3))
+
+            if log_dir:
+                os.makedirs(log_dir, exist_ok=True)
+                for i, p in enumerate(proxies):
+                    p.save_fault_log(os.path.join(
+                        log_dir, f"chaos-{k}nodes-node{i}.jsonl"))
+        finally:
+            for h in handles:
+                try:
+                    h.close()
+                except Exception:   # noqa: BLE001
+                    pass
+            for p in proxies:
+                try:
+                    p.stop_thread()
+                except Exception:   # noqa: BLE001
+                    pass
+            for s in servers:
+                try:
+                    s.stop_thread()
+                except Exception:   # noqa: BLE001
+                    pass
+        del cl, cqp, ct
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="chaos schedule seed (replayable fault runs)")
+    args = ap.parse_args()
+    if args.quick:
+        common.QUICK = True
+    run(seed=args.seed)
+    common.print_csv()
+    if args.json:
+        common.write_json(args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -27,7 +27,7 @@ Every during_kill / post_heal row asserts byte-identity against the
 healthy reference before it reports a time: a fast wrong answer is not a
 recovery.
 
-Standalone:  python -m benchmarks.bench_failover --json BENCH.json
+Standalone:  python -m benchmarks.bench_failover --json BENCH.json --seed 7
 """
 from __future__ import annotations
 
@@ -39,6 +39,7 @@ from benchmarks import common
 from repro.core import operators as op
 from repro.core.cluster import FarCluster
 from repro.core.table import Column, FTable
+from repro.distributed.health import FaultInjector
 
 COLS = tuple(Column(f"c{i}", "i32" if i == 0 else "f32") for i in range(8))
 N_KEYS = 64
@@ -92,20 +93,23 @@ def _measure(cl, cqp, ct, n, repeat, ref=None):
     return sec, len(PIPES) * n / sec
 
 
-def run() -> None:
+def run(seed: int = 0) -> None:
     import gc
 
     q = common.quick()
     n = 1 << (14 if q else 18)
     repeat = 1 if q else 5
     node_counts = (2, 4)        # the 4-node row carries the recovery bar
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(seed)
     keys = rng.integers(0, N_KEYS, n).astype(np.int32)
     words = FTable("t", COLS, n_rows=n).encode(_data(rng, keys))
 
     for k in node_counts:
         gc.collect()
-        cl = FarCluster(k, 128 * 2**20, replicas=2)
+        # the seeded injector makes every fault point replayable from
+        # the CLI (--seed) — a flaky failover run can be re-driven exactly
+        cl = FarCluster(k, 128 * 2**20, replicas=2,
+                        fault=FaultInjector(seed=seed))
         cqp = cl.open_connection()
         ct = cl.alloc_table_mem(cqp, FTable("t", COLS, n_rows=n),
                                 partitioner="hash", keys=keys)
@@ -163,10 +167,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None, metavar="PATH")
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seed for data and the fault injector's rng")
     args = ap.parse_args()
     if args.quick:
         common.QUICK = True
-    run()
+    run(seed=args.seed)
     common.print_csv()
     if args.json:
         common.write_json(args.json)

@@ -63,6 +63,8 @@ async def _read_frame(reader):
     hdr = await reader.readexactly(wire.HEADER_SIZE)
     ftype, req_id, length = wire.parse_header(hdr)
     body = await reader.readexactly(length) if length else b""
+    trailer = await reader.readexactly(wire.TRAILER_SIZE)
+    wire.check_crc(hdr, body, trailer)
     return ftype, req_id, (wire.decode_value(body) if length else None)
 
 

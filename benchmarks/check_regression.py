@@ -154,6 +154,34 @@ def check_network(cur_rows: list[dict], *,
     return failures
 
 
+def check_chaos(cur_rows: list[dict], *, max_chaos_ratio: float,
+                min_chaos_recovery: float) -> list[str]:
+    """PR 9 chaos-tail guards, checked against the CURRENT run only:
+    every chaos row reporting a chaos_tail_ratio (p99 under the seeded
+    fault soak / clean p50) must stay under `max_chaos_ratio` — faults
+    may cost retries, never an unbounded tail — and every degraded-node
+    row's recovery_frac (hedged throughput with one slowed-not-killed
+    node / clean) must clear `min_chaos_recovery`: a gray-failing node
+    costs its share of the cluster, not the tail."""
+    failures = []
+    for r in cur_rows:
+        if r.get("bench") != "chaos":
+            continue
+        ratio = r.get("chaos_tail_ratio")
+        if ratio is not None and ratio > max_chaos_ratio:
+            failures.append(
+                f"chaos {r['name']}: chaos_tail_ratio {ratio:.2f} > "
+                f"{max_chaos_ratio} (p99 under faults ran away from the "
+                f"clean p50)")
+        rec = r.get("recovery_frac")
+        if rec is not None and rec < min_chaos_recovery:
+            failures.append(
+                f"chaos {r['name']}: recovery_frac {rec:.3f} < "
+                f"{min_chaos_recovery} (hedging did not route around "
+                f"the degraded node)")
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("current", help="fresh benchmarks.run --json output")
@@ -173,6 +201,14 @@ def main() -> int:
                     help="fail when the network bench's p99 at the "
                          "highest <=256-connection fan-in exceeds this "
                          "multiple of the 1-connection p50")
+    ap.add_argument("--max-chaos-ratio", type=float, default=50.0,
+                    help="fail when a chaos soak row's p99 exceeds this "
+                         "multiple of the clean p50 (bounded tail under "
+                         "seeded socket faults)")
+    ap.add_argument("--min-chaos-recovery", type=float, default=0.9,
+                    help="fail when hedged throughput with one degraded "
+                         "(slowed, not killed) node recovers to less "
+                         "than this fraction of clean")
     args = ap.parse_args()
 
     cur_rows, cur_meta = load_rows(args.current)
@@ -196,6 +232,19 @@ def main() -> int:
               f"(max-p99-ratio {args.max_p99_ratio}), "
               f"{len(net_failures)} failed")
     chaos_failures += net_failures
+    tail_failures = check_chaos(cur_rows,
+                                max_chaos_ratio=args.max_chaos_ratio,
+                                min_chaos_recovery=args.min_chaos_recovery)
+    n_tail = sum(1 for r in cur_rows if r.get("bench") == "chaos"
+                 and ("chaos_tail_ratio" in r or "recovery_frac" in r))
+    for line in tail_failures:
+        print(f"CHAOS TAIL GUARD FAILED: {line}")
+    if n_tail:
+        print(f"# {n_tail} chaos rows checked "
+              f"(max-chaos-ratio {args.max_chaos_ratio}, "
+              f"min-chaos-recovery {args.min_chaos_recovery}), "
+              f"{len(tail_failures)} failed")
+    chaos_failures += tail_failures
     baseline = args.against or latest_committed_baseline(
         cur_meta.get("quick"))
     if baseline is None:

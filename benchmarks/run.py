@@ -19,6 +19,9 @@
                              failover dip -> heal -> throughput recovery
   bench_network              FViewServer fan-in: p50/p99 request latency
                              vs connection count + typed overload shedding
+  bench_chaos                seeded socket faults through ChaosProxy:
+                             clean/soak/degraded phases, chaos tail ratio
+                             and hedged gray-failure recovery
 
 FV rows time the fused jitted request path with BLOCKING p50 timing (see
 common.timeit); shipped/read byte columns are exact and carry the paper's
@@ -41,12 +44,13 @@ import argparse
 import sys
 import time
 
-from benchmarks import (bench_cluster_scaleout, bench_crypto, bench_failover,
-                        bench_far_kv, bench_grouping, bench_join,
-                        bench_multiclient, bench_multiclient_mixed,
-                        bench_network, bench_projection, bench_rdma,
-                        bench_rebalance, bench_regex, bench_resources,
-                        bench_selection, common)
+from benchmarks import (bench_chaos, bench_cluster_scaleout, bench_crypto,
+                        bench_failover, bench_far_kv, bench_grouping,
+                        bench_join, bench_multiclient,
+                        bench_multiclient_mixed, bench_network,
+                        bench_projection, bench_rdma, bench_rebalance,
+                        bench_regex, bench_resources, bench_selection,
+                        common)
 from benchmarks.common import print_csv, write_json
 
 ALL = {
@@ -65,6 +69,7 @@ ALL = {
     "rebalance": bench_rebalance.run,
     "failover": bench_failover.run,
     "network": bench_network.run,
+    "chaos": bench_chaos.run,
 }
 
 

@@ -1,0 +1,86 @@
+"""FL007 await-bound: every network await carries a timeout.
+
+PR 9's time-and-failure model (docs/network.md) makes a hard promise:
+nothing in the network tier waits forever. A one-way partition — the
+peer's packets simply stop — does not error; an unbounded
+`await reader.readexactly(...)` just hangs, the connection is never
+reaped, and the deadline/hedge machinery upstream never gets its turn.
+`ChaosProxy`'s `partition_s2c` fault exists precisely to manufacture
+this condition; this pass makes the fix structural.
+
+The rule, for every module under `src/repro/net/`: an `await` whose
+awaited expression IS one of the stall-prone stream calls
+
+    reader.read() / .readexactly() / .readline() / .readuntil()
+    writer.drain()
+    asyncio.open_connection(...)
+
+must be wrapped in `asyncio.wait_for(...)` (then the *wait_for* is the
+awaited expression and the inner call is just its argument — which is
+how `server.py` bounds every read with `io_timeout_s` /
+`idle_timeout_s`).
+
+Not flagged:
+
+  * `await asyncio.wait_for(reader.readexactly(n), t)` — the bound is
+    the point;
+  * the same calls NOT directly under `await` (handed to `wait_for`,
+    `gather`, or stored as a task — someone else owns the bound);
+  * code outside `src/repro/net/` (the sync client transport uses
+    socket timeouts, not awaits).
+
+Deliberately-unbounded awaits (a proxy pump whose lifetime is bounded
+by its endpoints' timeouts) use the shared escape hatch:
+`# farlint: ok FL007 -- why`.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analyze.core import Finding, SourceFile
+
+#: scope: the asyncio network tier only (same rule as FL006)
+SCOPE_PARTS = ("repro", "net")
+
+_STREAM_METHODS = {"read", "readexactly", "readline", "readuntil",
+                   "drain"}
+_ASYNCIO_CALLS = {"asyncio.open_connection", "open_connection"}
+
+
+def in_scope(rel: str) -> bool:
+    parts = rel.replace("\\", "/").split("/")
+    return any(tuple(parts[i:i + 2]) == SCOPE_PARTS
+               for i in range(len(parts) - 2))
+
+
+def _awaits(tree: ast.Module) -> list[ast.Await]:
+    return [n for n in ast.walk(tree) if isinstance(n, ast.Await)]
+
+
+def check(sf: SourceFile) -> list[Finding]:
+    if not in_scope(sf.rel):
+        return []
+    findings: list[Finding] = []
+    for aw in _awaits(sf.tree):
+        call = aw.value
+        if not isinstance(call, ast.Call):
+            continue
+        func = call.func
+        try:
+            text = ast.unparse(func)
+        except Exception:       # pragma: no cover
+            text = ""
+        what = None
+        if text in _ASYNCIO_CALLS:
+            what = f"`{text}(...)`"
+        elif (isinstance(func, ast.Attribute)
+              and func.attr in _STREAM_METHODS):
+            what = f"`.{func.attr}(...)`"
+        if what is not None:
+            findings.append(Finding(
+                "FL007", sf.rel, aw.lineno,
+                f"unbounded await of {what}: a partitioned peer hangs "
+                f"this coroutine forever; wrap it in "
+                f"`asyncio.wait_for(..., timeout)` so the connection "
+                f"is reaped and deadlines/hedges stay live"))
+    return findings

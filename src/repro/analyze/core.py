@@ -66,6 +66,11 @@ RULES: dict[str, tuple[str, str]] = {
               ".result(), .block_until_ready()) inside an `async def` "
               "body under src/repro/net/ — it stalls the server event "
               "loop; await the async form or use run_in_executor"),
+    "FL007": ("await-bound",
+              "an unbounded `await reader.read*/writer.drain()/"
+              "asyncio.open_connection()` under src/repro/net/ — a "
+              "partitioned peer hangs it forever; wrap the call in "
+              "`asyncio.wait_for(..., timeout)`"),
 }
 
 _ALIAS_TO_ID = {alias: rid for rid, (alias, _) in RULES.items()}
@@ -219,8 +224,10 @@ class SourceFile:
 # ---------------------------------------------------------------------- engine
 def _passes():
     # imported here so `core` stays importable from the passes themselves
-    from repro.analyze import asyncblock, hostsync, locks, retrace
-    return (locks.check, hostsync.check, retrace.check, asyncblock.check)
+    from repro.analyze import (asyncblock, awaitbound, hostsync, locks,
+                               retrace)
+    return (locks.check, hostsync.check, retrace.check, asyncblock.check,
+            awaitbound.check)
 
 
 def analyze_source(text: str, path: str,

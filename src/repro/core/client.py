@@ -45,6 +45,7 @@ from __future__ import annotations
 
 import itertools
 import math
+import time
 from collections import deque
 from dataclasses import dataclass
 
@@ -72,6 +73,27 @@ class NodeDeadError(FarviewError):
         super().__init__(f"node {node_id} is dead (failed {op})")
         self.node_id = node_id
         self.op = op
+
+
+class DeadlineExceededError(FarviewError):
+    """The request's deadline budget ran out before it was served, so it
+    was SHED — never half-run. Sheds happen wherever the budget is next
+    inspected: at `FViewNode.flush` pick time (in-process), at the
+    server's admission / pre-dispatch check (over the wire, as a typed
+    `DEADLINE_EXCEEDED` error frame), or client-side before a
+    retry/hedge would spend budget that no longer exists. Deliberately
+    NOT a health strike and NOT retried by failover
+    (`ClusterPending._settle_entry` re-raises it): time ran out, not the
+    node — rerouting would only return a late answer later."""
+
+    def __init__(self, node_id: int | None = None, *,
+                 op: str = "dispatch",
+                 detail: str = "deadline budget exhausted"):
+        where = "cluster" if node_id is None else f"node {node_id}"
+        super().__init__(f"{where}: {detail} (request shed before {op})")
+        self.node_id = node_id
+        self.op = op
+        self.detail = detail
 
 
 class QPair:
@@ -120,6 +142,9 @@ class PendingRequest:
     #                                     partition dispatch; None = solo)
     result: PipelineResult | None = None
     error: Exception | None = None      # dispatch-time failure (this request)
+    deadline_at: float | None = None    # time.monotonic() budget expiry; an
+    #                                     expired request is shed at pick
+    #                                     time, never dispatched
 
     def wait(self) -> PipelineResult:
         """Dispatch (if still queued) and materialize the response."""
@@ -219,14 +244,22 @@ class FViewNode:
     def submit(self, qp: QPair, ft: FTable, pipeline: tuple, *,
                lengths: np.ndarray | None = None,
                strings: np.ndarray | None = None,
-               row_ids: np.ndarray | None = None) -> PendingRequest:
-        """Queue a Farview verb; dispatched at the next scheduling round."""
+               row_ids: np.ndarray | None = None,
+               deadline_s: float | None = None) -> PendingRequest:
+        """Queue a Farview verb; dispatched at the next scheduling round.
+        `deadline_s` is the remaining budget: past it the request is shed
+        (typed `DeadlineExceededError`) instead of dispatched."""
         if qp.qp_id not in self._qpairs:
             # a closed QPair's region may already be bound to a new tenant;
             # accepting the verb would ghost-dispatch against it
             raise FarviewError(f"connection qp{qp.qp_id} is closed")
         pipeline = op_ir.validate_pipeline(tuple(pipeline))
         req = PendingRequest(qp, ft, pipeline, lengths, strings, row_ids)
+        if deadline_s is not None:
+            if deadline_s <= 0:     # dead on arrival: shed, never queued
+                req.error = DeadlineExceededError(self.node_id, op="submit")
+                return req
+            req.deadline_at = time.monotonic() + float(deadline_s)
         self._queue.append(req)
         return req
 
@@ -245,13 +278,23 @@ class FViewNode:
             picks: list[PendingRequest] = []
             seen: set[int] = set()
             rest: deque[PendingRequest] = deque()
+            now = time.monotonic()
             for req in self._queue:
-                if req.qp.qp_id in seen:
+                if (req.deadline_at is not None and now >= req.deadline_at):
+                    # budget spent while queued: shed BEFORE dispatch —
+                    # an expired request never half-runs
+                    req.error = DeadlineExceededError(
+                        self.node_id, op="dispatch")
+                    if first_err is None:
+                        first_err = req.error
+                elif req.qp.qp_id in seen:
                     rest.append(req)
                 else:
                     seen.add(req.qp.qp_id)
                     picks.append(req)
             self._queue = rest
+            if not picks:
+                continue
             k = self._rr % len(picks)
             picks = picks[k:] + picks[:k]       # rotate the arbiter
             self._rr += 1

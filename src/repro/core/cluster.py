@@ -113,8 +113,9 @@ from repro.core import operators as op_ir
 from repro.core.pipeline import PipelineResult
 from repro.core.pool import PoolStats
 from repro.core.table import FTable, INT_EXACT_LIMIT, WORD_BYTES
-from repro.distributed.health import (DEAD, DroppedDispatchError,
-                                      FaultInjector, HealthMonitor,
+from repro.distributed.health import (DEAD, CircuitBreaker,
+                                      DroppedDispatchError, FaultInjector,
+                                      HealthMonitor,
                                       ReplicaUnavailableError)
 from repro.distributed.rebalance import (MigrationPlan, TableHeat,
                                          detect_drift, plan_rebalance)
@@ -220,7 +221,8 @@ class ClusterPending:
                  node_ids: list, *, cqp=None, part_ids: list | None = None,
                  handles: list | None = None,
                  strings: "np.ndarray | None" = None,
-                 lengths: "np.ndarray | None" = None):
+                 lengths: "np.ndarray | None" = None,
+                 deadline_at: float | None = None):
         self.cluster = cluster
         self.ctable = ctable
         self.pipeline = pipeline    # base (un-localized) pipeline
@@ -234,40 +236,113 @@ class ClusterPending:
         self.strings = strings      # full payload (re-sliced on failover)
         self.lengths = lengths
         self.version = ctable.version   # map version at scatter time
+        # one deadline for the WHOLE query: every retry / failover /
+        # hedge spends what remains of it, never a fresh budget
+        self.deadline_at = deadline_at
+        # entry k -> (node_id, handle, pend) of its in-flight hedge
+        self._hedges: dict = {}
         self._merged: PipelineResult | None = None
 
+    # ------------------------------------------------------------ deadlines
+    def _remaining_s(self, *, op: str) -> float | None:
+        """Seconds left of the query budget (None = unbounded); typed
+        failure the moment the budget is spent — a retry or hedge never
+        launches work the caller has already given up on."""
+        if self.deadline_at is None:
+            return None
+        rem = self.deadline_at - time.monotonic()
+        if rem <= 0:
+            raise fv.DeadlineExceededError(
+                None, op=op, detail="query budget spent across scatter legs")
+        return rem
+
     # ------------------------------------------------------------- failover
-    def _resubmit(self, k: int, node_id: int, handle) -> "fv.PendingRequest":
-        """Re-scatter entry k onto `node_id` and drain just that node."""
+    def _submit_to(self, k: int, node_id: int, handle, *,
+                   op: str = "failover") -> "fv.PendingRequest":
+        """Dispatch entry k's work onto `node_id` (no state mutation):
+        shared by same-node retries, failovers and hedges."""
         cluster, ct = self.cluster, self.ctable
         idx = np.asarray(self.part_rows[k])
         kwargs = {}
+        rem = self._remaining_s(op=op)
+        if rem is not None:
+            kwargs["deadline_s"] = rem
         if ct.replicated:
             if self.strings is not None:
-                kwargs = {"strings": self.strings, "lengths": self.lengths}
-            pend = cluster.nodes[node_id].submit(
+                kwargs.update(strings=self.strings, lengths=self.lengths)
+            return cluster.nodes[node_id].submit(
                 self.cqp.qps[node_id], handle, self.pipeline, **kwargs)
-        else:
-            if self.strings is not None:
-                kwargs = {"strings": self.strings[idx],
-                          "lengths": self.lengths[idx]}
-            lp = cluster._localize_pipeline(
-                ct, self.pipeline, self.part_ids[k], node_id)
-            pend = cluster.nodes[node_id].submit(
-                self.cqp.qps[node_id], handle, lp,
-                row_ids=idx.astype(np.int32), **kwargs)
-            if ct.heat is not None:
-                ct.heat.record_dispatch(node_id, len(idx))
-                if node_id != ct.home[self.part_ids[k]]:
-                    ct.heat.record_failover(node_id, len(idx))
+        if self.strings is not None:
+            kwargs.update(strings=self.strings[idx],
+                          lengths=self.lengths[idx])
+        lp = cluster._localize_pipeline(
+            ct, self.pipeline, self.part_ids[k], node_id)
+        pend = cluster.nodes[node_id].submit(
+            self.cqp.qps[node_id], handle, lp,
+            row_ids=idx.astype(np.int32), **kwargs)
+        if ct.heat is not None:
+            ct.heat.record_dispatch(node_id, len(idx))
+            if node_id != ct.home[self.part_ids[k]]:
+                ct.heat.record_failover(node_id, len(idx))
+        return pend
+
+    def _resubmit(self, k: int, node_id: int, handle) -> "fv.PendingRequest":
+        """Re-scatter entry k onto `node_id` and drain just that node."""
+        pend = self._submit_to(k, node_id, handle)
         self.pends[k] = pend
         self.node_ids[k] = node_id
         self.handles[k] = handle
         try:
-            cluster.nodes[node_id].flush()
+            self.cluster._drain_node(node_id)
         except Exception:           # noqa: BLE001
             pass    # the error (if ours) is on the pend; the loop inspects
         return pend
+
+    # -------------------------------------------------------------- hedging
+    def _launch_hedges(self) -> int:
+        """Duplicate every still-unresolved entry onto its next replica
+        (react-to-slowness: the primary exceeded the hedge delay). The
+        first copy to RESOLVE wins — byte-identical by construction,
+        because the captured row-index array keys the merge splice and
+        the crypt keystream on whichever node answers. Returns the number
+        of duplicates launched this round (0 = nothing left to hedge)."""
+        cluster, ct = self.cluster, self.ctable
+        launched = 0
+        for k in range(len(self.pends)):
+            if k in self._hedges:
+                continue            # one hedge per entry
+            p = self.pends[k]
+            if p.result is not None or p.error is not None:
+                continue            # already resolved: nothing to race
+            nxt = cluster._next_candidate(ct, self.part_ids[k],
+                                          {self.node_ids[k]})
+            if nxt is None:
+                continue            # no replica to hedge onto
+            try:
+                hp = self._submit_to(k, nxt[0], nxt[1], op="hedge")
+            except fv.DeadlineExceededError:
+                break               # no budget left to spend on duplicates
+            except fv.FarviewError:
+                continue            # hedge is best-effort; primary stands
+            self._hedges[k] = (nxt[0], nxt[1], hp)
+            launched += 1
+        for node_id in {n for n, _, _ in self._hedges.values()}:
+            try:
+                cluster._drain_node(node_id)
+            except Exception:       # noqa: BLE001
+                pass    # a failed hedge stays on its pend; primary stands
+        return launched
+
+    def _all_resolved(self) -> bool:
+        """Every entry has an answer — its own, or a finished hedge."""
+        for k, p in enumerate(self.pends):
+            if p.result is not None or p.error is not None:
+                continue
+            h = self._hedges.get(k)
+            if h is not None and h[2].result is not None:
+                continue
+            return False
+        return True
 
     def _settle_entry(self, k: int,
                       flush_err: Exception | None) -> PipelineResult:
@@ -278,6 +353,17 @@ class ClusterPending:
         tried = {self.node_ids[k]}
         retries = 0
         while True:
+            hedge = self._hedges.get(k)
+            if (hedge is not None and pend.result is None
+                    and hedge[2].result is not None):
+                # the hedge finished first (or the primary failed): adopt
+                # its byte-identical partial; the loser's eventual answer
+                # is discarded — ties go to the primary, checked above
+                del self._hedges[k]
+                self.pends[k] = pend = hedge[2]
+                self.node_ids[k] = hedge[0]
+                self.handles[k] = hedge[1]
+                continue
             if pend.error is None:
                 if pend.result is not None:
                     return pend.result
@@ -317,7 +403,7 @@ class ClusterPending:
             return self._merged
         flush_err: Exception | None = None
         try:
-            self.cluster.flush()
+            self.cluster._flush_with_hedging(self)
         except Exception as e:      # may belong to another verb's partial
             flush_err = e
         partials = [self._settle_entry(k, flush_err)
@@ -363,7 +449,9 @@ class FarCluster:
                  partitioner: str = "range", parallel: bool = True,
                  replicas: int = 1, dead_after: int = 3,
                  slow_after_s: float = 300.0,
+                 hedge_after_s: float | None = None,
                  fault: FaultInjector | None = None,
+                 breaker: CircuitBreaker | None = None,
                  nodes: list | None = None):
         # `nodes=` plugs in pre-built node handles — notably
         # `net.client.RemoteNodeHandle` transports to real `FViewServer`
@@ -393,8 +481,23 @@ class FarCluster:
         # every node consults the SAME injector on every verb, so a test
         # or bench kills a node in one call and every path sees it
         self.fault = FaultInjector() if fault is None else fault
+        # the breaker layers under the monitor: the monitor answers "is
+        # the node gone?", the breaker "should the next attempt even be
+        # made?" — every success/failure the monitor records is forwarded
+        self.breaker = (CircuitBreaker(n_nodes) if breaker is None
+                        else breaker)
         self.health = HealthMonitor(n_nodes, dead_after=dead_after,
-                                    slow_after_s=slow_after_s)
+                                    slow_after_s=slow_after_s,
+                                    breaker=self.breaker)
+        # hedge delay: a verb whose drain outlives this launches its
+        # unresolved partitions on the cyclic replica (first answer
+        # wins). Defaults to the monitor's slow threshold — hedging IS
+        # the react-to-slowness complement of the SUSPECT strike.
+        self.hedge_after_s = hedge_after_s
+        # serializes flushes per node: the background drain of a hedged
+        # verb, failover re-drains and ordinary cluster flushes may
+        # target the same node concurrently
+        self._node_locks = [threading.Lock() for _ in range(n_nodes)]
         self.nodes = nodes if nodes is not None else [
             fv.FViewNode(capacity_bytes, n_regions=n_regions,
                          interpret=interpret, node_id=i, fault=self.fault)
@@ -677,11 +780,18 @@ class FarCluster:
         return cands
 
     def _route(self, ctable: ClusterTable, i: int) -> tuple:
-        """First alive copy of partition i, or a loud typed error."""
+        """First alive copy of partition i whose breaker admits traffic
+        (a tripped breaker skips a flapping-but-not-dead node without
+        spending a timeout on it), falling back to ANY alive copy when
+        every breaker is open — availability beats caution once there is
+        nowhere better to go. Loud typed error when every copy is dead."""
         cands = self._serving_candidates(ctable, i)
-        for node_id, handle in cands:
-            if self.health.is_alive(node_id):
+        alive = [(n, h) for n, h in cands if self.health.is_alive(n)]
+        for node_id, handle in alive:
+            if self.breaker.allow(node_id):
                 return node_id, handle
+        if alive:
+            return alive[0]
         if len(cands) > 1:
             raise ReplicaUnavailableError(
                 f"table {ctable.name!r}: every copy of partition {i} "
@@ -690,16 +800,18 @@ class FarCluster:
 
     def _next_candidate(self, ctable: ClusterTable, part_id: int,
                         tried: set) -> "tuple | None":
-        """The next alive, untried copy for a mid-flight failover."""
+        """The next alive, untried copy for a mid-flight failover —
+        breaker-admitted copies first, any alive copy as the fallback."""
         if ctable.replicated:
-            for j in range(self.n_nodes):
-                if j not in tried and self.health.is_alive(j):
-                    return j, ctable.parts[j]
-            return None
-        for node_id, handle in self._serving_candidates(ctable, part_id):
-            if node_id not in tried and self.health.is_alive(node_id):
+            cands = [(j, ctable.parts[j]) for j in range(self.n_nodes)]
+        else:
+            cands = self._serving_candidates(ctable, part_id)
+        alive = [(n, h) for n, h in cands
+                 if n not in tried and self.health.is_alive(n)]
+        for node_id, handle in alive:
+            if self.breaker.allow(node_id):
                 return node_id, handle
-        return None
+        return alive[0] if alive else None
 
     def _localize_pipeline(self, ctable: ClusterTable, pipeline: tuple,
                            part_id: int, node_id: int) -> tuple:
@@ -914,16 +1026,32 @@ class FarCluster:
     def submit_request(self, cqp: ClusterQP, ctable: ClusterTable,
                        pipeline: tuple, *,
                        lengths: np.ndarray | None = None,
-                       strings: np.ndarray | None = None) -> ClusterPending:
+                       strings: np.ndarray | None = None,
+                       deadline_s: float | None = None) -> ClusterPending:
         """Scatter one Farview verb: queue a partition request on every
         owning node. Each node's bucket-batched scheduler coalesces the
         partition with whatever else is queued there — K cluster clients
         running the same pipeline still cost each node ONE stacked
-        dispatch per round."""
+        dispatch per round.
+
+        `deadline_s` is the end-to-end budget for the WHOLE query: every
+        scatter leg carries the remainder at its own dispatch time (over
+        the wire as `deadline_ms`, re-anchored on the server's clock),
+        and retries / failovers / hedges spend what is left rather than
+        a fresh timeout. A spent budget fails typed
+        (`DeadlineExceededError`) — never a half-run query."""
         pipeline = op_ir.validate_pipeline(tuple(pipeline))
         strings = None if strings is None else np.asarray(strings)
         lengths = None if lengths is None else np.asarray(lengths)
         self._check_join_locality(ctable, pipeline)
+        deadline_at = None
+        sub_kw = {}
+        if deadline_s is not None:
+            if deadline_s <= 0:
+                raise fv.DeadlineExceededError(
+                    None, op="submit", detail="budget spent before scatter")
+            deadline_at = time.monotonic() + float(deadline_s)
+            sub_kw["deadline_s"] = float(deadline_s)
         if ctable.replicated:
             # a replicated table has no partitions to scatter over: serve
             # whole from the first ALIVE copy (node 0 in a healthy
@@ -935,13 +1063,14 @@ class FarCluster:
                     f"replicated table {ctable.name!r}: every node is dead")
             pend = self.nodes[serve].submit(
                 cqp.qps[serve], ctable.parts[serve], pipeline,
-                lengths=lengths, strings=strings)
+                lengths=lengths, strings=strings, **sub_kw)
             cqp.requests += 1
             return ClusterPending(self, ctable, pipeline, [pend],
                                   [ctable.part_rows[serve]], [serve],
                                   cqp=cqp, part_ids=[serve],
                                   handles=[ctable.parts[serve]],
-                                  strings=strings, lengths=lengths)
+                                  strings=strings, lengths=lengths,
+                                  deadline_at=deadline_at)
         pends, prows, pnodes, pparts, phandles = [], [], [], [], []
         for i, (part, idx) in enumerate(zip(ctable.parts,
                                             ctable.part_rows)):
@@ -958,7 +1087,7 @@ class FarCluster:
             lp = self._localize_pipeline(ctable, pipeline, i, serve)
             pends.append(self.nodes[serve].submit(
                 cqp.qps[serve], handle, lp,
-                row_ids=idx.astype(np.int32), **kwargs))
+                row_ids=idx.astype(np.int32), **kwargs, **sub_kw))
             prows.append(idx)
             pnodes.append(serve)
             pparts.append(i)
@@ -973,7 +1102,8 @@ class FarCluster:
         ctable.heat.record_request()
         return ClusterPending(self, ctable, pipeline, pends, prows, pnodes,
                               cqp=cqp, part_ids=pparts, handles=phandles,
-                              strings=strings, lengths=lengths)
+                              strings=strings, lengths=lengths,
+                              deadline_at=deadline_at)
 
     def _check_join_locality(self, ctable: ClusterTable,
                              pipeline: tuple) -> None:
@@ -1026,7 +1156,7 @@ class FarCluster:
         def drain(i: int, node) -> None:
             t0 = time.perf_counter()
             try:
-                node.flush()
+                self._drain_node(node.node_id)
             except Exception as e:          # noqa: BLE001 - re-raised below
                 errors[i] = e
             finally:
@@ -1062,6 +1192,70 @@ class FarCluster:
         if first is not None:
             raise first
 
+    def _drain_node(self, node_id: int) -> None:
+        """Flush ONE node under its drain lock — hedges, failover
+        re-drains and whole-cluster flushes serialize per node."""
+        with self._node_locks[node_id]:
+            self.nodes[node_id].flush()
+
+    def _flush_with_hedging(self, pending: "ClusterPending") -> None:
+        """Drain the cluster for one verb, hedging its slow legs.
+
+        The full drain runs in a background thread; every `hedge_after_s`
+        (default: the health monitor's `slow_after_s` threshold) the
+        still-unresolved entries of `pending` are duplicated onto their
+        cyclic replicas (`ClusterPending._launch_hedges`). The moment
+        every entry has an answer — its own or a finished hedge's — this
+        returns and the merge proceeds; the straggler's drain keeps
+        running in the background (its per-node lock serializes it
+        against later flushes) and its eventual answer is discarded."""
+        hedge_s = (self.health.slow_after_s if self.hedge_after_s is None
+                   else self.hedge_after_s)
+        if not hedge_s or hedge_s <= 0 or pending.cqp is None:
+            self.flush()
+            return
+        box: list = [None]
+        done = threading.Event()
+
+        def drain_all() -> None:
+            try:
+                self.flush()
+            except Exception as e:          # noqa: BLE001 - re-raised below
+                box[0] = e
+            finally:
+                done.set()
+
+        t = threading.Thread(target=drain_all, daemon=True,
+                             name="farview-hedged-flush")
+        t.start()
+        t0 = time.monotonic()
+        struck: set = set()
+        while not done.wait(hedge_s):
+            launched = pending._launch_hedges()
+            if time.monotonic() - t0 >= self.health.slow_after_s:
+                # the monitor's own slow threshold has passed mid-flight:
+                # strike the still-unanswered primaries NOW (a hedged
+                # verb may return before their drains ever report in)
+                for k, p in enumerate(pending.pends):
+                    nid = pending.node_ids[k]
+                    if (p.result is None and p.error is None
+                            and nid not in struck):
+                        struck.add(nid)
+                        self.health.record_failure(nid, fv.FarviewError(
+                            f"node {nid}: drain exceeded the "
+                            f"{self.health.slow_after_s:.2f}s slow "
+                            "threshold mid-flight (hedged)"))
+            if pending._all_resolved():
+                return      # hedges answered; abandon the slow drain
+            if not launched and not pending._hedges:
+                # nothing hedgeable (no replicas / no budget): the slow
+                # drain is the only path — wait it out
+                done.wait()
+                break
+        t.join()
+        if box[0] is not None:
+            raise box[0]
+
     def settle(self) -> None:
         """Flush + finalize in-flight responses on every node."""
         try:
@@ -1074,11 +1268,14 @@ class FarCluster:
     def farview_request(self, cqp: ClusterQP, ctable: ClusterTable,
                         pipeline: tuple, *,
                         lengths: np.ndarray | None = None,
-                        strings: np.ndarray | None = None) -> PipelineResult:
+                        strings: np.ndarray | None = None,
+                        deadline_s: float | None = None) -> PipelineResult:
         """The scatter-gather Farview verb: partition dispatch on every
-        owning node, client-side merge byte-identical to a single node."""
-        pend = self.submit_request(cqp, ctable, pipeline,
-                                   lengths=lengths, strings=strings)
+        owning node, client-side merge byte-identical to a single node.
+        `deadline_s` bounds the WHOLE query end to end (see
+        `submit_request`)."""
+        pend = self.submit_request(cqp, ctable, pipeline, lengths=lengths,
+                                   strings=strings, deadline_s=deadline_s)
         return pend.wait()
 
     # ------------------------------------------------------------ rebalancing

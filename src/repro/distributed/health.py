@@ -32,11 +32,21 @@ observes a failure is the one that records it.
 """
 from __future__ import annotations
 
+import random
 import threading
 import time
 from dataclasses import dataclass, field
 
-from repro.core.client import FarviewError, NodeDeadError
+from repro.core.client import (DeadlineExceededError, FarviewError,
+                               NodeDeadError)
+
+__all__ = [
+    "ALIVE", "SUSPECT", "DEAD",
+    "CLOSED", "OPEN", "HALF_OPEN",
+    "DroppedDispatchError", "OverloadedError", "ReplicaUnavailableError",
+    "DeadlineExceededError",        # re-export: defined with the core errors
+    "FaultInjector", "NodeHealth", "HealthMonitor", "CircuitBreaker",
+]
 
 ALIVE = "alive"
 SUSPECT = "suspect"
@@ -92,15 +102,25 @@ class FaultInjector:
       drop_dispatches(i, n) the next n verbs on node i raise
                             DroppedDispatchError (transient; a same-node
                             retry succeeds once the budget is spent).
+                            With `prob=` each dispatch inside the budget
+                            drops with that probability instead of
+                            deterministically — drawn from the
+                            injector's SEEDED rng, so a probabilistic
+                            chaos run replays bit-identically from the
+                            same seed (CI threads `--seed` through
+                            bench_failover / bench_chaos).
 
     Thread-safe: `FarCluster.flush` drains nodes in concurrent threads.
     """
 
-    def __init__(self) -> None:
+    def __init__(self, seed: int | None = None) -> None:
         self._lock = threading.Lock()
+        self._rng = random.Random(seed)     # guarded-by: self._lock
+        self.seed = seed
         self._killed: set[int] = set()      # guarded-by: self._lock
         self._slow: dict[int, float] = {}   # guarded-by: self._lock
         self._drop: dict[int, int] = {}     # guarded-by: self._lock
+        self._drop_prob: dict[int, float] = {}  # guarded-by: self._lock
 
     # -- fault controls (the test/bench-facing surface) ---------------------
     def kill(self, node_id: int) -> None:
@@ -112,14 +132,24 @@ class FaultInjector:
             self._killed.discard(node_id)
             self._slow.pop(node_id, None)
             self._drop.pop(node_id, None)
+            self._drop_prob.pop(node_id, None)
 
     def slow(self, node_id: int, seconds: float) -> None:
         with self._lock:
             self._slow[node_id] = float(seconds)
 
-    def drop_dispatches(self, node_id: int, n: int = 1) -> None:
+    def drop_dispatches(self, node_id: int, n: int = 1,
+                        prob: float | None = None) -> None:
+        """Arm a drop budget of `n` dispatches on `node_id`. With `prob`,
+        each dispatch inside the budget drops with that probability (the
+        seeded rng decides), so faults land at reproducible-but-spread
+        points instead of the next n calls back to back."""
         with self._lock:
             self._drop[node_id] = self._drop.get(node_id, 0) + int(n)
+            if prob is not None:
+                if not 0.0 < prob <= 1.0:
+                    raise ValueError(f"drop prob {prob} not in (0, 1]")
+                self._drop_prob[node_id] = float(prob)
 
     def is_killed(self, node_id: int) -> bool:
         with self._lock:
@@ -134,12 +164,115 @@ class FaultInjector:
             delay = self._slow.get(node_id, 0.0)
             drop = False
             if op == "dispatch" and self._drop.get(node_id, 0) > 0:
-                self._drop[node_id] -= 1
-                drop = True
+                prob = self._drop_prob.get(node_id)
+                if prob is None or self._rng.random() < prob:
+                    self._drop[node_id] -= 1
+                    drop = True
         if delay:
             time.sleep(delay)
         if drop:
             raise DroppedDispatchError(node_id)
+
+
+# ------------------------------------------------------------------ breaker
+CLOSED = "closed"
+OPEN = "open"
+HALF_OPEN = "half_open"
+
+
+class CircuitBreaker:
+    """Per-node circuit breaker layered UNDER the health monitor (PR 9).
+
+    The lifecycle monitor answers "is the node gone?"; the breaker
+    answers the cheaper, faster question "should the next attempt even
+    be made?" — so a FLAPPING node (alive enough to accept work, broken
+    enough to fail it) stops eating retry budgets:
+
+      CLOSED     normal service. `open_after` consecutive failures trip
+                 it OPEN (`record_failure`); any success resets the
+                 strike count.
+      OPEN       `allow()` answers False — callers skip the node (route
+                 to a replica, fail fast) WITHOUT spending a timeout on
+                 it. After `reset_after_s` the breaker moves to...
+      HALF_OPEN  exactly ONE probe is allowed through (`allow()` True
+                 once, False while the probe is outstanding). The
+                 probe's outcome decides: success -> CLOSED (service
+                 resumes), failure -> OPEN again with a fresh window.
+
+    Thread-safe; every method may be called from the cluster's parallel
+    drain threads and from `RemoteNodeHandle`s reconnect path at once.
+    """
+
+    def __init__(self, n_nodes: int, *, open_after: int = 3,
+                 reset_after_s: float = 1.0):
+        self._lock = threading.Lock()
+        self.open_after = int(open_after)
+        self.reset_after_s = float(reset_after_s)
+        self._state = [CLOSED] * n_nodes        # guarded-by: self._lock
+        self._strikes = [0] * n_nodes           # guarded-by: self._lock
+        self._opened_at = [0.0] * n_nodes       # guarded-by: self._lock
+        self._probing = [False] * n_nodes       # guarded-by: self._lock
+        self.trips = [0] * n_nodes              # OPEN transitions, telemetry
+
+    def state(self, node_id: int) -> str:
+        with self._lock:
+            self._maybe_half_open(node_id)
+            return self._state[node_id]
+
+    def _maybe_half_open(self, node_id: int) -> None:
+        # lock-held helper: every caller enters via `with self._lock:`
+        if (self._state[node_id] == OPEN  # farlint: ok FL001 -- caller holds self._lock
+                and time.monotonic() - self._opened_at[node_id]  # farlint: ok FL001 -- caller holds self._lock
+                >= self.reset_after_s):
+            self._state[node_id] = HALF_OPEN  # farlint: ok FL001 -- caller holds self._lock
+            self._probing[node_id] = False  # farlint: ok FL001 -- caller holds self._lock
+
+    def allow(self, node_id: int) -> bool:
+        """May the caller attempt this node right now? CLOSED: yes.
+        OPEN: no (until the reset window elapses). HALF_OPEN: yes for
+        exactly one in-flight probe."""
+        with self._lock:
+            self._maybe_half_open(node_id)
+            state = self._state[node_id]
+            if state == CLOSED:
+                return True
+            if state == HALF_OPEN and not self._probing[node_id]:
+                self._probing[node_id] = True
+                return True
+            return False
+
+    def record_success(self, node_id: int) -> None:
+        with self._lock:
+            self._state[node_id] = CLOSED
+            self._strikes[node_id] = 0
+            self._probing[node_id] = False
+
+    def record_failure(self, node_id: int) -> str:
+        with self._lock:
+            self._maybe_half_open(node_id)
+            state = self._state[node_id]
+            if state == HALF_OPEN or state == OPEN:
+                # a failed probe (or a straggler failure) re-arms the
+                # full reset window
+                self._state[node_id] = OPEN
+                self._opened_at[node_id] = time.monotonic()
+                self._probing[node_id] = False
+                if state == HALF_OPEN:
+                    self.trips[node_id] += 1
+                return OPEN
+            self._strikes[node_id] += 1
+            if self._strikes[node_id] >= self.open_after:
+                self._state[node_id] = OPEN
+                self._opened_at[node_id] = time.monotonic()
+                self.trips[node_id] += 1
+                return OPEN
+            return CLOSED
+
+    def summary(self) -> dict[int, str]:
+        with self._lock:
+            for i in range(len(self._state)):
+                self._maybe_half_open(i)
+            return dict(enumerate(self._state))
 
 
 # ------------------------------------------------------------------- monitor
@@ -168,11 +301,18 @@ class HealthMonitor:
     """
 
     def __init__(self, n_nodes: int, *, dead_after: int = 3,
-                 slow_after_s: float = 30.0):
+                 slow_after_s: float = 30.0,
+                 breaker: "CircuitBreaker | None" = None):
+        # An optional CircuitBreaker layers on top: every success /
+        # failure recorded here is forwarded (outside the monitor's
+        # lock — the two are independent state machines), so routing
+        # can consult `breaker.allow()` without a second bookkeeping
+        # path.
         self._lock = threading.Lock()
         self.nodes = [NodeHealth() for _ in range(n_nodes)]    # guarded-by: self._lock
         self.dead_after = int(dead_after)
         self.slow_after_s = float(slow_after_s)
+        self.breaker = breaker
 
     # -- queries ------------------------------------------------------------
     # Queries take the lock too: routing decisions read `state` while the
@@ -210,6 +350,8 @@ class HealthMonitor:
             h.strikes = 0
             h.state = ALIVE
             h.last_error = None
+        if self.breaker is not None:
+            self.breaker.record_success(node_id)
 
     def record_failure(self, node_id: int, err: Exception) -> str:
         with self._lock:
@@ -217,13 +359,17 @@ class HealthMonitor:
             h.failures += 1
             h.last_error = err
             if h.state == DEAD:
-                return DEAD
-            if isinstance(err, NodeDeadError):
+                state = DEAD
+            elif isinstance(err, NodeDeadError):
                 h.state = DEAD      # conclusive: the node itself said so
-                return DEAD
-            h.strikes += 1
-            h.state = DEAD if h.strikes >= self.dead_after else SUSPECT
-            return h.state
+                state = DEAD
+            else:
+                h.strikes += 1
+                h.state = DEAD if h.strikes >= self.dead_after else SUSPECT
+                state = h.state
+        if self.breaker is not None:
+            self.breaker.record_failure(node_id)
+        return state
 
     def heartbeat(self, node_id: int, latency_s: float) -> None:
         """A completed drain IS the heartbeat; a slow one is a strike."""
@@ -249,3 +395,5 @@ class HealthMonitor:
             h.state = ALIVE
             h.strikes = 0
             h.last_error = None
+        if self.breaker is not None:    # readmitted nodes start CLOSED
+            self.breaker.record_success(node_id)

@@ -19,12 +19,20 @@ in the middle without changing a single verb's semantics:
                duck-types `FViewNode`, so `FarCluster(nodes=[...])`
                runs scatter-gather, failover and rebalancing unchanged
                over sockets — byte-identical to in-process.
+  * `chaos`  — `ChaosProxy`, a seeded socket-level fault injector
+               (delays, mid-frame resets, bit flips, one-way
+               partitions, duplicated frames) that the chaos soak
+               (`tests/test_chaos.py`, `benchmarks/bench_chaos.py`)
+               runs whole clusters through.
 
-See docs/network.md for the frame diagram and the parity guarantees.
+See docs/network.md for the frame diagram and time/failure model, and
+docs/chaos.md for the fault vocabulary and soak methodology.
 """
+from repro.net.chaos import ChaosProxy, FaultSchedule, proxied_endpoints
 from repro.net.client import RemoteNodeHandle, remote_cluster
-from repro.net.server import FViewServer
+from repro.net.server import FViewServer, ServerLifecycleError
 from repro.net.wire import ProtocolError
 
 __all__ = ["FViewServer", "RemoteNodeHandle", "remote_cluster",
-           "ProtocolError"]
+           "ProtocolError", "ServerLifecycleError",
+           "ChaosProxy", "FaultSchedule", "proxied_endpoints"]

@@ -1,0 +1,380 @@
+"""`ChaosProxy`: seeded socket-level fault injection for the network tier.
+
+`distributed.health.FaultInjector` injects faults at the VERB layer — a
+node raises `NodeDeadError` before it serves. That never exercises the
+transport itself: a real deployment fails in the middle of the byte
+stream — frames cut short, bits flipped in flight, one direction of a
+route black-holed, a switch replaying a packet. This module injects
+exactly those, by sitting a tiny asyncio TCP proxy between a
+`RemoteNodeHandle` and its `FViewServer` and applying a composable,
+SEEDED `FaultSchedule` to the forwarded bytes:
+
+    delay_s / jitter_s       fixed + uniformly-jittered per-frame delay
+                             (the degraded-but-alive node hedging reacts
+                             to; jitter is drawn from the seeded rng)
+    drop_after_bytes         forward N bytes, then black-hole the
+                             direction: the peer stalls MID-FRAME and is
+                             reaped by its io timeout (farlint FL007's
+                             whole reason to exist)
+    reset_after_bytes        forward N bytes, then hard-abort (RST) both
+                             sides — the mid-frame connection reset
+    corrupt_prob             per-frame probability of flipping one byte;
+                             the CRC32 trailer (wire VERSION 2) catches
+                             it, the stream is poisoned typed, and
+                             failover reroutes — never wrong result bytes
+    duplicate_prob           per-frame probability of forwarding a frame
+                             TWICE (a replayed packet); request-id
+                             correlation makes the dup a no-op on both
+                             peers
+    partition_c2s / _s2c     one-way partition: every byte in that
+                             direction silently dropped
+
+Every fault draws from `random.Random(seed)`, so a chaos soak replays
+bit-identically from its `--seed` — a CI failure is a repro, not a
+ghost. Every injected fault is appended to `fault_log` (and
+`save_fault_log` writes it as JSON lines — the CI chaos lane uploads it
+as the failure artifact).
+
+The proxy is frame-AWARE (it splits the stream on the 16-byte wire
+header to corrupt / duplicate / delay whole frames) but never decodes
+payloads; byte-count faults (`drop_after_bytes` / `reset_after_bytes`)
+deliberately cut inside frames. Bytes that do not parse as frames (a
+garbage client) pass through opaquely.
+
+The zero-wrong-bytes contract under all of this is what
+`tests/test_chaos.py` asserts and `benchmarks/bench_chaos.py` measures.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import random
+import struct
+import threading
+import time
+from dataclasses import dataclass, replace as dc_replace
+
+from repro.net import wire
+from repro.net.server import ServerLifecycleError
+
+_CHUNK = 1 << 16
+
+
+@dataclass(frozen=True)
+class FaultSchedule:
+    """One composable fault plan (see module docstring). Immutable so a
+    live `set_schedule` swap is atomic under the GIL — pumps read the
+    current schedule once per frame."""
+    delay_s: float = 0.0
+    jitter_s: float = 0.0
+    drop_after_bytes: int | None = None
+    reset_after_bytes: int | None = None
+    corrupt_prob: float = 0.0
+    duplicate_prob: float = 0.0
+    partition_c2s: bool = False
+    partition_s2c: bool = False
+
+    def but(self, **kw) -> "FaultSchedule":
+        """A copy with some fields replaced (schedule composition)."""
+        return dc_replace(self, **kw)
+
+
+CLEAN = FaultSchedule()
+
+
+class _Reset(Exception):
+    """Internal: the schedule demanded a mid-frame connection reset."""
+
+
+class ChaosProxy:
+    """A seeded chaos TCP proxy in front of one upstream server.
+
+    Listens on its own (host, port); every accepted client gets one
+    upstream connection and two pump tasks (client->server and
+    server->client), each applying the CURRENT `FaultSchedule` per
+    forwarded frame. `set_schedule` swaps the plan live — a soak moves
+    between clean / degraded / partitioned phases without reconnecting.
+    """
+
+    def __init__(self, upstream_host: str, upstream_port: int, *,
+                 host: str = "127.0.0.1", port: int = 0,
+                 seed: int | None = 0,
+                 schedule: FaultSchedule | None = None):
+        self.upstream_host = upstream_host
+        self.upstream_port = int(upstream_port)
+        self.host = host
+        self.port = int(port)           # real port known after start()
+        self.seed = seed
+        self.schedule = schedule if schedule is not None else CLEAN
+        self.fault_log: list[dict] = []     # appended on the loop thread
+        self._rng = random.Random(seed)
+        self._t0 = time.monotonic()
+        self._server: asyncio.AbstractServer | None = None
+        self._loop: asyncio.AbstractEventLoop | None = None
+        self._stopped: asyncio.Event | None = None
+        self._conn_ids = iter(range(1 << 30))
+        self._transports: set = set()
+        self._closing = False
+
+    # ------------------------------------------------------------- schedule
+    def set_schedule(self, schedule: FaultSchedule) -> None:
+        """Swap the fault plan; the next forwarded frame sees it."""
+        self.schedule = schedule
+
+    def _log(self, conn_id: int, direction: str, kind: str,
+             detail) -> None:
+        self.fault_log.append({
+            "t": round(time.monotonic() - self._t0, 6),
+            "conn": conn_id, "dir": direction, "kind": kind,
+            "detail": detail})
+
+    def save_fault_log(self, path: str) -> None:
+        """JSON-lines dump — the CI chaos lane's failure artifact."""
+        with open(path, "w") as f:
+            for ev in self.fault_log:
+                f.write(json.dumps(ev) + "\n")
+
+    # ------------------------------------------------------------ lifecycle
+    async def start(self) -> None:
+        self._loop = asyncio.get_running_loop()
+        self._stopped = asyncio.Event()
+        self._t0 = time.monotonic()
+        self._server = await asyncio.start_server(
+            self._serve_conn, self.host, self.port)
+        self.port = self._server.sockets[0].getsockname()[1]
+
+    def shutdown(self) -> None:
+        if self._loop is None:
+            return
+        try:
+            self._loop.call_soon_threadsafe(self._do_shutdown)
+        except RuntimeError:
+            pass                        # loop already closed
+
+    def _do_shutdown(self) -> None:
+        if self._closing:
+            return
+        self._closing = True
+        if self._server is not None:
+            self._server.close()
+        for tr in list(self._transports):
+            tr.abort()
+        self._stopped.set()
+
+    def drop_all(self) -> None:
+        """Hard-abort every live proxied connection (both sides) without
+        stopping the proxy — the route flaps, the endpoints survive."""
+        def _drop() -> None:
+            for tr in list(self._transports):
+                self._log(-1, "both", "drop_all", None)
+                tr.abort()
+            self._transports.clear()
+        if self._loop is not None:
+            self._loop.call_soon_threadsafe(_drop)
+
+    @classmethod
+    def start_in_thread(cls, upstream_host: str, upstream_port: int, *,
+                        start_timeout_s: float = 30.0,
+                        **kwargs) -> "ChaosProxy":
+        """Run the proxy's event loop on a daemon thread (mirrors
+        `FViewServer.start_in_thread`, same TYPED lifecycle errors)."""
+        proxy = cls(upstream_host, upstream_port, **kwargs)
+        ready = threading.Event()
+        boot_err: list[BaseException] = []
+
+        def _run() -> None:
+            loop = asyncio.new_event_loop()
+            asyncio.set_event_loop(loop)
+
+            async def _main() -> None:
+                try:
+                    await proxy.start()
+                except BaseException as e:  # noqa: BLE001 - reported below
+                    boot_err.append(e)
+                    ready.set()
+                    return
+                ready.set()
+                await proxy._stopped.wait()
+                # reap the per-connection tasks the abort just unblocked,
+                # so the loop closes with nothing pending
+                pending = [t for t in asyncio.all_tasks()
+                           if t is not asyncio.current_task()]
+                for t in pending:
+                    t.cancel()
+                await asyncio.gather(*pending, return_exceptions=True)
+
+            try:
+                loop.run_until_complete(_main())
+            finally:
+                loop.close()
+
+        proxy._thread = threading.Thread(target=_run, daemon=True)
+        proxy._thread.start()
+        if not ready.wait(timeout=start_timeout_s):
+            raise ServerLifecycleError(
+                f"ChaosProxy did not come up within {start_timeout_s:.0f}s")
+        if boot_err:
+            raise ServerLifecycleError(
+                f"ChaosProxy failed to start: {boot_err[0]}") from boot_err[0]
+        return proxy
+
+    def stop_thread(self, *, join_timeout_s: float = 30.0) -> None:
+        self.shutdown()
+        thread = getattr(self, "_thread", None)
+        if thread is not None:
+            thread.join(timeout=join_timeout_s)
+            if thread.is_alive():
+                raise ServerLifecycleError(
+                    f"ChaosProxy thread (port {self.port}) did not exit "
+                    f"within {join_timeout_s:.0f}s of shutdown")
+
+    # ------------------------------------------------------------ the pumps
+    async def _serve_conn(self, reader, writer) -> None:
+        conn_id = next(self._conn_ids)
+        try:
+            up_reader, up_writer = await asyncio.wait_for(
+                asyncio.open_connection(self.upstream_host,
+                                        self.upstream_port), 30.0)
+        except (OSError, asyncio.TimeoutError):
+            writer.transport.abort()
+            return
+        self._transports.add(writer.transport)
+        self._transports.add(up_writer.transport)
+        state = {"c2s": 0, "s2c": 0}    # bytes forwarded per direction
+        pumps = [
+            asyncio.ensure_future(self._pump(
+                conn_id, "c2s", reader, up_writer, writer, state)),
+            asyncio.ensure_future(self._pump(
+                conn_id, "s2c", up_reader, writer, up_writer, state)),
+        ]
+        try:
+            await asyncio.wait(pumps, return_when=asyncio.FIRST_COMPLETED)
+        finally:
+            for p in pumps:
+                p.cancel()
+            for p in pumps:
+                try:
+                    await p
+                except (asyncio.CancelledError, Exception):  # noqa: BLE001
+                    pass
+            self._transports.discard(writer.transport)
+            self._transports.discard(up_writer.transport)
+            for w in (writer, up_writer):
+                try:
+                    w.transport.abort()
+                except RuntimeError:
+                    pass
+
+    def _split_frames(self, buf: bytes) -> tuple[list, bytes]:
+        """Split complete wire frames off the front of `buf`. Bytes that
+        do not look like a frame (bad magic, short header) are passed
+        through as ONE opaque blob — the proxy must forward garbage as
+        faithfully as it forwards frames."""
+        out: list = []
+        while len(buf) >= wire.HEADER_SIZE:
+            try:
+                magic, _, _, _, length = wire.HEADER.unpack(
+                    buf[:wire.HEADER_SIZE])
+            except struct.error:        # pragma: no cover - size-guarded
+                break
+            if magic != wire.MAGIC:
+                out.append(buf)         # opaque: forward, don't frame
+                return out, b""
+            total = wire.HEADER_SIZE + length + wire.TRAILER_SIZE
+            if len(buf) < total:
+                break
+            out.append(buf[:total])
+            buf = buf[total:]
+        return out, buf
+
+    async def _pump(self, conn_id: int, direction: str, reader, writer,
+                    peer_writer, state) -> None:
+        buf = b""
+        try:
+            while True:
+                # a pump waits as long as its endpoints do: the server's
+                # idle reaper / the client's socket timeout bound the
+                # conn's lifetime, and shutdown() aborts the transport
+                chunk = await reader.read(_CHUNK)  # farlint: ok FL007 -- lifetime bounded by the proxied endpoints' own timeouts
+                if not chunk:
+                    break               # EOF: tear the pair down
+                sch = self.schedule
+                if ((direction == "c2s" and sch.partition_c2s)
+                        or (direction == "s2c" and sch.partition_s2c)):
+                    self._log(conn_id, direction, "partition", len(chunk))
+                    continue            # one-way black hole
+                buf += chunk
+                frames, buf = self._split_frames(buf)
+                for frame in frames:
+                    await self._forward(conn_id, direction, writer,
+                                        frame, state)
+        except _Reset:
+            writer.transport.abort()
+            peer_writer.transport.abort()
+        except (ConnectionError, OSError, asyncio.IncompleteReadError):
+            pass
+        # fall out: the _serve_conn finally tears both sides down
+
+    async def _forward(self, conn_id: int, direction: str, writer,
+                       frame: bytes, state) -> None:
+        sch = self.schedule
+        if sch.corrupt_prob and self._rng.random() < sch.corrupt_prob:
+            i = self._rng.randrange(len(frame))
+            flip = self._rng.randrange(1, 256)
+            frame = frame[:i] + bytes([frame[i] ^ flip]) + frame[i + 1:]
+            self._log(conn_id, direction, "corrupt",
+                      {"offset": i, "xor": flip})
+        delay = sch.delay_s
+        if sch.jitter_s:
+            delay += self._rng.uniform(0.0, sch.jitter_s)
+        if delay > 0:
+            self._log(conn_id, direction, "delay", round(delay, 6))
+            await asyncio.sleep(delay)
+        copies = 1
+        if sch.duplicate_prob and self._rng.random() < sch.duplicate_prob:
+            copies = 2
+            self._log(conn_id, direction, "duplicate", len(frame))
+        for _ in range(copies):
+            await self._write(conn_id, direction, writer, frame, state)
+
+    async def _write(self, conn_id: int, direction: str, writer,
+                     data: bytes, state) -> None:
+        sch = self.schedule
+        sent = state[direction]
+        if sch.reset_after_bytes is not None:
+            left = sch.reset_after_bytes - sent
+            if left <= len(data):
+                # forward the first `left` bytes, then RST: the peer sees
+                # a connection die MID-FRAME
+                if left > 0:
+                    writer.write(data[:left])
+                    state[direction] = sent + left
+                    await asyncio.wait_for(writer.drain(), 60.0)
+                self._log(conn_id, direction, "reset",
+                          {"after_bytes": state[direction]})
+                raise _Reset
+        if sch.drop_after_bytes is not None:
+            left = sch.drop_after_bytes - sent
+            if left <= 0:
+                self._log(conn_id, direction, "blackhole", len(data))
+                return                  # stream stalls; io timeouts reap it
+            if left < len(data):
+                self._log(conn_id, direction, "blackhole",
+                          {"cut_at": left, "dropped": len(data) - left})
+                data = data[:left]
+        writer.write(data)
+        state[direction] = sent + len(data)
+        await asyncio.wait_for(writer.drain(), 60.0)
+
+
+def proxied_endpoints(servers, *, seed: int = 0,
+                      schedule: FaultSchedule | None = None) -> tuple:
+    """Start one `ChaosProxy` per server; returns `(proxies, endpoints)`
+    where endpoints are the (host, port) pairs clients should dial.
+    Proxy i derives its rng from `seed + i` so a multi-node soak is
+    deterministic but the nodes' fault points are decorrelated."""
+    proxies = [ChaosProxy.start_in_thread(
+        "127.0.0.1", s.port if hasattr(s, "port") else int(s),
+        seed=None if seed is None else seed + i, schedule=schedule)
+        for i, s in enumerate(servers)]
+    return proxies, [("127.0.0.1", p.port) for p in proxies]

@@ -32,6 +32,7 @@ from __future__ import annotations
 import itertools
 import socket
 import threading
+import time
 
 import numpy as np
 
@@ -39,6 +40,7 @@ from repro.core import client as fv
 from repro.core import operators as op_ir
 from repro.core.pipeline import PipelineResult
 from repro.core.pool import PoolStats
+from repro.distributed.health import CircuitBreaker
 from repro.net import wire
 
 
@@ -200,12 +202,26 @@ class RemoteNodeHandle:
 
     def __init__(self, host: str, port: int, *, node_id: int = 0,
                  timeout_s: float = 120.0,
-                 max_payload: int = wire.MAX_PAYLOAD):
+                 max_payload: int = wire.MAX_PAYLOAD,
+                 reconnect: bool = True,
+                 reconnect_attempts: int = 3,
+                 reconnect_backoff_s: float = 0.05,
+                 reconnect_reset_s: float = 0.5):
         self.host = host
         self.port = port
         self.node_id = node_id
         self.timeout_s = float(timeout_s)
         self.max_payload = int(max_payload)
+        self.reconnect = bool(reconnect)
+        self.reconnect_attempts = int(reconnect_attempts)
+        self.reconnect_backoff_s = float(reconnect_backoff_s)
+        # gates reconnection so a down server is probed, not hammered:
+        # one failed reconnect cycle trips OPEN (fast-fail verbs), and
+        # after reset_after_s a single HALF_OPEN probe retries.
+        self._breaker = CircuitBreaker(
+            1, open_after=1, reset_after_s=float(reconnect_reset_s))
+        self._closed = False
+        self._ever_connected = False
         # serializes the socket: cluster drain threads, settle-on-read
         # counters and catalog calls may interleave. RLock because
         # settle -> flush -> _recv re-enter through property reads.
@@ -232,9 +248,58 @@ class RemoteNodeHandle:
         # ProtocolError frame instead of mis-decoding every later verb
         self._call(wire.HELLO, {"version": wire.VERSION},
                    op="hello", expect=wire.HELLO_OK)
+        self._ever_connected = True
+
+    def _reopen_qpairs(self) -> None:
+        """Re-establish virtual QPairs on a freshly reconnected server,
+        keeping the client-side `RemoteQPair` objects (and their byte
+        counters) that callers hold references to."""
+        old = list(self._qpairs.values())
+        self._qpairs = {}
+        for qp in old:
+            resp = self._call(wire.OPEN_QP, {}, op="reconnect")
+            qp.vqp = qp.qp_id = int(resp["qp"])
+            qp.region = qp.vqp % max(1, int(resp.get("region_count", 1)))
+            self._qpairs[qp.vqp] = qp
+
+    def _ensure_conn(self, op: str) -> None:
+        """Bounded reconnect-with-backoff behind the breaker: a server
+        that was restarted resumes service on the next verb without a
+        cluster-level heal; a server that stays down fast-fails while
+        the breaker is OPEN and is re-probed once per reset window.
+        Only a handle that connected successfully at least once
+        reconnects — construction against a bad endpoint stays a
+        fast, typed failure."""
+        with self._lock:
+            if not self._dead and self._sock is not None:
+                return
+            if (self._closed or not self.reconnect
+                    or not self._ever_connected):
+                raise fv.NodeDeadError(self.node_id, op=op)
+            if not self._breaker.allow(0):
+                raise fv.NodeDeadError(self.node_id, op=op)
+            delay = self.reconnect_backoff_s
+            last: Exception | None = None
+            for attempt in range(self.reconnect_attempts):
+                try:
+                    self._dead = False
+                    self._connect()
+                    self._reopen_qpairs()
+                except (fv.NodeDeadError, wire.ProtocolError, OSError) as e:
+                    last = e
+                    self._dead = True
+                    if attempt + 1 < self.reconnect_attempts:
+                        time.sleep(delay)
+                        delay *= 2
+                    continue
+                self._breaker.record_success(0)
+                return
+            self._breaker.record_failure(0)
+            raise fv.NodeDeadError(self.node_id, op=op) from last
 
     def close(self) -> None:
         with self._lock:
+            self._closed = True
             self._dead = True
             if self._sock is not None:
                 try:
@@ -263,7 +328,7 @@ class RemoteNodeHandle:
     def _send_frame(self, ftype: int, req_id: int, obj, *,
                     op: str) -> None:
         if self._dead or self._sock is None:
-            raise fv.NodeDeadError(self.node_id, op=op)
+            self._ensure_conn(op)
         try:
             self._sock.sendall(wire.encode_frame(ftype, req_id, obj))
         except (OSError, ValueError) as e:
@@ -284,9 +349,17 @@ class RemoteNodeHandle:
 
     def _recv_frame(self, *, op: str):
         hdr = self._recv_exact(wire.HEADER_SIZE, op=op)
-        ftype, req_id, length = wire.parse_header(
-            hdr, max_payload=self.max_payload)
-        body = self._recv_exact(length, op=op) if length else b""
+        try:
+            ftype, req_id, length = wire.parse_header(
+                hdr, max_payload=self.max_payload)
+            body = self._recv_exact(length, op=op) if length else b""
+            trailer = self._recv_exact(wire.TRAILER_SIZE, op=op)
+            # integrity before trust: a corrupted frame fails typed here
+            # and POISONS the stream (no resync point exists) — the node
+            # reads as dead and failover reroutes, never wrong bytes
+            wire.check_crc(hdr, body, trailer)
+        except wire.ProtocolError as e:
+            raise self._die(op) from e
         return ftype, req_id, (wire.decode_value(body) if length else None)
 
     def _absorb(self, ftype: int, req_id: int, payload) -> None:
@@ -371,7 +444,19 @@ class RemoteNodeHandle:
             pass                        # the server died first; same outcome
 
     def submit(self, qp: RemoteQPair, ft, pipeline: tuple, *,
-               lengths=None, strings=None, row_ids=None) -> RemotePending:
+               lengths=None, strings=None, row_ids=None,
+               deadline_s: float | None = None) -> RemotePending:
+        with self._lock:
+            if self._dead or self._sock is None:
+                # reconnect BEFORE building the payload: a successful
+                # reconnect re-numbers every vqp (`_reopen_qpairs`), and
+                # the frame must carry the fresh id
+                try:
+                    self._ensure_conn("submit")
+                except fv.NodeDeadError as e:
+                    pend = RemotePending(self, qp, next(self._req_ids), ft)
+                    pend.error = e      # resolved by failover in wait()
+                    return pend
         if qp.vqp not in self._qpairs:
             raise fv.FarviewError(f"connection qp{qp.vqp} is closed")
         pipeline = op_ir.validate_pipeline(tuple(pipeline))
@@ -382,7 +467,11 @@ class RemoteNodeHandle:
             "strings": None if strings is None
             else np.asarray(strings, np.uint8),
             "row_ids": None if row_ids is None
-            else np.asarray(row_ids, np.int32)}
+            else np.asarray(row_ids, np.int32),
+            # relative budget (ms): survives unsynchronized clocks; the
+            # server re-anchors it on its own monotonic clock on arrival
+            "deadline_ms": None if deadline_s is None
+            else float(deadline_s) * 1e3}
         with self._lock:
             req_id = next(self._req_ids)
             pend = RemotePending(self, qp, req_id, ft)
@@ -404,7 +493,10 @@ class RemoteNodeHandle:
             if not self._pending:
                 return
             if self._dead or self._sock is None:
-                raise self._die("flush")
+                try:
+                    self._ensure_conn("flush")
+                except fv.NodeDeadError:
+                    raise self._die("flush") from None
             inflight = list(self._pending.values())
             req_id = next(self._req_ids)
             self._send_frame(wire.FLUSH, req_id, {}, op="flush")

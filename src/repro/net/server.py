@@ -54,6 +54,14 @@ from repro.core import client as fv
 from repro.net import wire
 
 
+class ServerLifecycleError(fv.FarviewError):
+    """A server start/stop step timed out or failed: the thread never
+    came up, boot raised, or shutdown leaked the thread. Typed and LOUD —
+    the old behavior (fall through a `ready.wait` / `thread.join`
+    timeout and keep going) turned a wedged server into a mystery
+    failure three tests later."""
+
+
 def _result_payload(res) -> dict:
     """Flatten a FINALIZED PipelineResult into wire values. The client
     rebuilds an already-finalized result from these — `offload._merge`
@@ -92,6 +100,9 @@ class _Submit:
     payload: dict | None = None     # RESULT payload once finalized
     error: Exception | None = None
     done: asyncio.Future = None     # resolved after the reply frame
+    deadline: float | None = None   # time.monotonic() expiry from the
+    #                                 frame's deadline_ms budget; checked
+    #                                 again right before dispatch
 
 
 class _Conn:
@@ -119,6 +130,8 @@ class FViewServer:
                  max_queue_depth: int = 1024, max_conns: int = 4096,
                  flush_interval_s: float = 0.002,
                  max_payload: int = wire.MAX_PAYLOAD,
+                 io_timeout_s: float = 60.0,
+                 idle_timeout_s: float = 3600.0,
                  log_path: str | None = None):
         self.node = node if node is not None else fv.FViewNode(
             capacity_bytes, n_regions=n_regions, interpret=interpret,
@@ -129,6 +142,11 @@ class FViewServer:
         self.max_conns = int(max_conns)
         self.flush_interval_s = float(flush_interval_s)
         self.max_payload = int(max_payload)
+        # every await on the socket is BOUNDED (farlint FL007): a peer
+        # that stalls mid-frame is reaped after io_timeout_s, an idle
+        # connection (between requests) after idle_timeout_s
+        self.io_timeout_s = float(io_timeout_s)
+        self.idle_timeout_s = float(idle_timeout_s)
         self._log_file = open(log_path, "a") if log_path else None
         self._conn_ids = itertools.count()
         self._vqp_ids = itertools.count()
@@ -136,6 +154,7 @@ class FViewServer:
         self._real_qps: list = []
         self._inflight_total = 0
         self._shed_total = 0
+        self._deadline_shed_total = 0
         self._closing = False
         self._server: asyncio.AbstractServer | None = None
         self._loop: asyncio.AbstractEventLoop | None = None
@@ -207,18 +226,34 @@ class FViewServer:
     # Thread-hosted mode: tests and benches run servers inside the test
     # process; CI's server-smoke lane runs them as real subprocesses.
     @classmethod
-    def start_in_thread(cls, **kwargs) -> "FViewServer":
+    def start_in_thread(cls, *, start_timeout_s: float = 60.0,
+                        **kwargs) -> "FViewServer":
         srv = cls(**kwargs)
         ready = threading.Event()
+        boot_err: list[BaseException] = []
 
         def _run() -> None:
             loop = asyncio.new_event_loop()
             asyncio.set_event_loop(loop)
 
             async def _main() -> None:
-                await srv.start()
+                try:
+                    await srv.start()
+                except BaseException as e:  # noqa: BLE001 - reported below
+                    boot_err.append(e)
+                    ready.set()
+                    return
                 ready.set()
                 await srv._stopped.wait()
+                # reap the per-connection tasks the shutdown just woke
+                # (the FL007 wait_for wrappers add a loop iteration to
+                # their wakeup chain), so the loop closes with nothing
+                # pending — asyncio.run does this for the __main__ path
+                pending = [t for t in asyncio.all_tasks()
+                           if t is not asyncio.current_task()]
+                for t in pending:
+                    t.cancel()
+                await asyncio.gather(*pending, return_exceptions=True)
 
             try:
                 loop.run_until_complete(_main())
@@ -227,18 +262,36 @@ class FViewServer:
 
         srv._thread = threading.Thread(target=_run, daemon=True)
         srv._thread.start()
-        if not ready.wait(timeout=60):
-            raise RuntimeError("FViewServer failed to start in 60s")
+        # both failure modes are TYPED (ServerLifecycleError), never a
+        # silent fall-through into verbs against a server that isn't up
+        if not ready.wait(timeout=start_timeout_s):
+            raise ServerLifecycleError(
+                f"FViewServer did not come up within {start_timeout_s:.0f}s "
+                "(event loop thread never signalled ready)")
+        if boot_err:
+            raise ServerLifecycleError(
+                f"FViewServer failed to start: {boot_err[0]}") from boot_err[0]
         return srv
 
-    def stop_thread(self, *, abort: bool = False) -> None:
+    def stop_thread(self, *, abort: bool = False,
+                    join_timeout_s: float = 30.0) -> None:
         self.shutdown(abort=abort)
         thread = getattr(self, "_thread", None)
+        leaked = False
         if thread is not None:
-            thread.join(timeout=30)
+            thread.join(timeout=join_timeout_s)
+            leaked = thread.is_alive()
+            if leaked:
+                self.log(f"stop_thread: server thread still alive "
+                         f"{join_timeout_s:.0f}s after shutdown (leaked)")
         if self._log_file is not None:
             self._log_file.close()
             self._log_file = None
+        if leaked:
+            raise ServerLifecycleError(
+                f"server thread (node {self.node.node_id}, port "
+                f"{self.port}) did not exit within {join_timeout_s:.0f}s "
+                "of shutdown — thread leaked")
 
     # ------------------------------------------------------------ admission
     def _active_tenants(self) -> int:
@@ -298,10 +351,22 @@ class FViewServer:
         for ent in batch:
             if ent.error is not None:
                 continue
+            if (ent.deadline is not None
+                    and time.monotonic() >= ent.deadline):
+                # budget spent while queued behind the batching window:
+                # shed BEFORE dispatch — an expired request never
+                # half-runs (and never costs a scheduler round)
+                self._deadline_shed_total += 1
+                ent.error = fv.DeadlineExceededError(
+                    self.node.node_id, op="dispatch",
+                    detail="budget spent in the server queue")
+                continue
             try:
                 ent.pend = self.node.submit(
                     ent.real_qp, ent.ft, ent.pipeline, lengths=ent.lengths,
-                    strings=ent.strings, row_ids=ent.row_ids)
+                    strings=ent.strings, row_ids=ent.row_ids,
+                    deadline_s=None if ent.deadline is None
+                    else ent.deadline - time.monotonic())
             except Exception as e:      # noqa: BLE001 - typed reply below
                 ent.error = e
         try:
@@ -346,7 +411,16 @@ class FViewServer:
         data = wire.encode_frame(ftype, req_id, obj)
         async with conn.wlock:
             conn.writer.write(data)
-            await conn.writer.drain()
+            try:
+                # bounded (FL007): a peer that stops reading must not pin
+                # this coroutine (and the conn's write lock) forever
+                await asyncio.wait_for(conn.writer.drain(),
+                                       self.io_timeout_s)
+            except asyncio.TimeoutError:
+                # to every caller a stalled peer IS a dead transport
+                raise ConnectionError(
+                    f"conn{conn.conn_id}: send stalled past "
+                    f"{self.io_timeout_s:.0f}s io timeout") from None
 
     async def _serve_conn(self, reader, writer) -> None:
         conn = _Conn(next(self._conn_ids), reader, writer)
@@ -364,14 +438,27 @@ class FViewServer:
         try:
             while not self._closing:
                 try:
-                    hdr = await reader.readexactly(wire.HEADER_SIZE)
+                    # idle bound between requests, io bound mid-frame:
+                    # every read is inside wait_for (farlint FL007)
+                    hdr = await asyncio.wait_for(
+                        reader.readexactly(wire.HEADER_SIZE),
+                        self.idle_timeout_s)
                     ftype, req_id, length = wire.parse_header(
                         hdr, max_payload=self.max_payload)
-                    body = (await reader.readexactly(length)
-                            if length else b"")
+                    body = (await asyncio.wait_for(
+                        reader.readexactly(length), self.io_timeout_s)
+                        if length else b"")
+                    trailer = await asyncio.wait_for(
+                        reader.readexactly(wire.TRAILER_SIZE),
+                        self.io_timeout_s)
+                    wire.check_crc(hdr, body, trailer)
                     payload = wire.decode_value(body) if length else None
                 except (asyncio.IncompleteReadError, ConnectionError):
                     break               # peer went away mid-frame / EOF
+                except asyncio.TimeoutError:
+                    self.log(f"conn{conn.conn_id} reaped: socket idle/"
+                             "stalled past its timeout")
+                    break
                 except wire.ProtocolError as e:
                     # poisoned stream: answer typed, then drop THIS conn
                     self.log(f"conn{conn.conn_id} protocol error: {e}")
@@ -485,6 +572,23 @@ class FViewServer:
                              {"node_id": self.node.node_id,
                               "detail": reason})
             return
+        # deadline budget (PR 9): the frame carries the REMAINING budget
+        # in ms; re-anchor it on this host's monotonic clock. A request
+        # that arrives already expired is shed right here — typed
+        # DEADLINE_EXCEEDED, zero scheduler work
+        deadline_ms = payload.get("deadline_ms")
+        deadline = None
+        if deadline_ms is not None:
+            if float(deadline_ms) <= 0:
+                self._deadline_shed_total += 1
+                await self._send(
+                    conn, wire.ERROR, req_id,
+                    wire.encode_error(fv.DeadlineExceededError(
+                        self.node.node_id, op="admission",
+                        detail="budget already spent on arrival"),
+                        node_id=self.node.node_id))
+                return
+            deadline = time.monotonic() + float(deadline_ms) / 1e3
         vqp = payload["qp"]
         real_qp = conn.vqps.get(vqp)
         if real_qp is None:
@@ -502,7 +606,8 @@ class FViewServer:
             strings=payload.get("strings"),
             row_ids=None if row_ids is None
             else np.asarray(row_ids, np.int32),
-            done=self._loop.create_future())
+            done=self._loop.create_future(),
+            deadline=deadline)
         conn.entries[req_id] = ent
         conn.queue.append(ent)
         self._inflight_total += 1
@@ -518,6 +623,7 @@ class FViewServer:
                 "dispatches": self.node.dispatches,
                 "inflight": self._inflight_total,
                 "shed": self._shed_total,
+                "deadline_shed": self._deadline_shed_total,
                 "conns": len(self._conns)}
 
     def _pool_verb(self, ftype: int, payload):

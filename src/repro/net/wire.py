@@ -1,12 +1,12 @@
 """Binary wire format for the Farview network tier.
 
-Every message is one length-prefixed frame:
+Every message is one length-prefixed frame (wire version 2):
 
-      0      2      3      4             12           16
-      +------+------+------+-------------+------------+=============+
-      | magic| ver  | type | request id  | payload len|  payload    |
-      | u16  | u8   | u8   | u64         | u32        |  (tagged)   |
-      +------+------+------+-------------+------------+=============+
+      0      2      3      4             12           16        16+len
+      +------+------+------+-------------+------------+=========+-----+
+      | magic| ver  | type | request id  | payload len| payload | crc |
+      | u16  | u8   | u8   | u64         | u32        | (tagged)| u32 |
+      +------+------+------+-------------+------------+=========+-----+
 
 `magic` (0x4656, "FV") and `ver` gate decoding up front: a garbage or
 incompatible header raises the typed `ProtocolError` immediately instead
@@ -14,7 +14,18 @@ of a server mis-parsing bytes into a hang. `request id` correlates
 responses to requests — a client may have thousands of verbs in flight
 on one connection and responses return in completion order. `payload
 len` is bounded by `MAX_PAYLOAD`, so an adversarial (or corrupt) length
-field fails typed instead of OOM-ing the peer.
+field fails typed instead of OOM-ing the peer. `crc` (version 2, PR 9)
+is a CRC32 over header + payload: a frame corrupted IN TRANSIT — the
+chaos layer's bit flips, a flaky NIC — fails typed at the receiver
+instead of silently delivering wrong bytes or misrouting a response
+whose request id was the corrupted field. The magic/version checks
+catch garbage; the checksum catches *plausible* garbage.
+
+Deadlines ride SUBMIT payloads as a tagged `deadline_ms` field — the
+REMAINING budget in milliseconds, not an absolute timestamp, so it
+survives unsynchronized clocks. The server re-anchors it on its own
+monotonic clock at admission and sheds expired work before dispatch
+with a typed `DEADLINE_EXCEEDED` error frame (`E_DEADLINE`).
 
 The payload is a tagged recursive value encoding (stdlib `struct`, no
 pickle — the decoder only constructs types named in an explicit
@@ -41,19 +52,23 @@ from __future__ import annotations
 
 import dataclasses
 import struct
+import zlib
 
 import numpy as np
 
 from repro.core import operators as op_ir
-from repro.core.client import FarviewError, NodeDeadError
+from repro.core.client import (DeadlineExceededError, FarviewError,
+                               NodeDeadError)
 from repro.core.table import Column, FTable
 from repro.distributed.health import (DroppedDispatchError, OverloadedError,
                                       ReplicaUnavailableError)
 
 MAGIC = 0x4656              # "FV"
-VERSION = 1
+VERSION = 2                 # v2: CRC32 trailer over header + payload
 HEADER = struct.Struct(">HBBQI")
 HEADER_SIZE = HEADER.size   # 16 bytes
+TRAILER = struct.Struct(">I")
+TRAILER_SIZE = TRAILER.size  # 4-byte CRC32 after the payload
 MAX_PAYLOAD = 256 * 2**20   # a frame past this is a protocol error, not an OOM
 
 # ------------------------------------------------------------------ frame types
@@ -279,7 +294,10 @@ def encode_frame(ftype: int, req_id: int, obj=None) -> bytes:
     if len(payload) > MAX_PAYLOAD:
         raise ProtocolError(
             f"payload of {len(payload)} bytes exceeds MAX_PAYLOAD")
-    return HEADER.pack(MAGIC, VERSION, ftype, req_id, len(payload)) + payload
+    hdr = HEADER.pack(MAGIC, VERSION, ftype, req_id, len(payload))
+    # CRC over header AND payload: a corrupted request id (misrouted
+    # response) is as wrong as a corrupted byte in an ndarray
+    return hdr + payload + TRAILER.pack(zlib.crc32(payload, zlib.crc32(hdr)))
 
 
 def parse_header(hdr: bytes, *, max_payload: int = MAX_PAYLOAD):
@@ -301,17 +319,37 @@ def parse_header(hdr: bytes, *, max_payload: int = MAX_PAYLOAD):
     return ftype, req_id, length
 
 
+def check_crc(hdr: bytes, payload: bytes, trailer: bytes) -> None:
+    """Verify a received frame's CRC32 trailer; typed error on mismatch.
+    Stream readers call this with the three byte ranges they just read —
+    the only defense against bytes that are plausible but WRONG (a bit
+    flip inside an ndarray payload parses fine and merges wrong)."""
+    if len(trailer) != TRAILER_SIZE:
+        raise ProtocolError(
+            f"truncated crc trailer: {len(trailer)} of {TRAILER_SIZE} bytes")
+    want = TRAILER.unpack(trailer)[0]
+    got = zlib.crc32(payload, zlib.crc32(hdr))
+    if got != want:
+        raise ProtocolError(
+            f"frame checksum mismatch (crc32 {got:#010x} != {want:#010x}): "
+            "corrupted in transit")
+
+
 def decode_frame(buf: bytes, *, max_payload: int = MAX_PAYLOAD):
     """Parse one COMPLETE frame from `buf` -> (ftype, req_id, payload obj).
 
-    Test/bench convenience; the server and client read header + payload
-    separately off their streams via `parse_header` + `decode_value`."""
+    Test/bench convenience; the server and client read header + payload +
+    crc trailer separately off their streams via `parse_header` +
+    `check_crc` + `decode_value`."""
     ftype, req_id, length = parse_header(buf[:HEADER_SIZE],
                                          max_payload=max_payload)
-    body = buf[HEADER_SIZE:]
-    if len(body) != length:
+    body = buf[HEADER_SIZE:HEADER_SIZE + length]
+    trailer = buf[HEADER_SIZE + length:]
+    if len(body) != length or len(trailer) != TRAILER_SIZE:
         raise ProtocolError(
-            f"frame body is {len(body)} bytes, header promised {length}")
+            f"frame body is {len(buf) - HEADER_SIZE} bytes, header "
+            f"promised {length} (+{TRAILER_SIZE} crc)")
+    check_crc(buf[:HEADER_SIZE], body, trailer)
     return ftype, req_id, decode_value(body) if length else None
 
 
@@ -323,6 +361,8 @@ E_REPLICA = 4
 E_OVERLOADED = 5
 E_PROTOCOL = 6
 E_MEMORY = 7        # pool out of pages — the client's alloc raises MemoryError
+E_DEADLINE = 8      # budget spent before dispatch: the typed
+#                     DEADLINE_EXCEEDED shed (never a health strike)
 
 _ERROR_CODES = (
     # order matters: first isinstance match wins, subclasses before bases
@@ -330,6 +370,7 @@ _ERROR_CODES = (
     (E_DROPPED, DroppedDispatchError),
     (E_REPLICA, ReplicaUnavailableError),
     (E_OVERLOADED, OverloadedError),
+    (E_DEADLINE, DeadlineExceededError),
     (E_PROTOCOL, ProtocolError),
     (E_GENERIC, FarviewError),
     (E_MEMORY, MemoryError),
@@ -362,6 +403,11 @@ def decode_error(payload: dict) -> Exception:
     if code == E_OVERLOADED:
         return OverloadedError(int(node_id or 0),
                                detail=payload.get("detail") or msg)
+    if code == E_DEADLINE:
+        return DeadlineExceededError(
+            None if node_id is None else int(node_id),
+            op=payload.get("op") or "dispatch",
+            detail=payload.get("detail") or "deadline budget exhausted")
     if code == E_PROTOCOL:
         return ProtocolError(msg)
     if code == E_MEMORY:

@@ -48,8 +48,9 @@ def test_rule_registry_and_aliases():
     assert rule_id("host-sync") == "FL002"
     assert rule_id("no-such-rule") is None
     assert rule_id("async-blocking") == "FL006"
+    assert rule_id("await-bound") == "FL007"
     assert set(RULES) == {"FL000", "FL001", "FL002", "FL003", "FL004",
-                          "FL005", "FL006"}
+                          "FL005", "FL006", "FL007"}
 
 
 def test_syntax_error_is_reported_not_raised():
@@ -585,3 +586,61 @@ def test_async_blocking_flags_from_time_import_sleep_alias():
         snooze(1)                               # line 5
     """, NET_PATH)
     assert lines_of(fs, "FL006") == [5]
+
+
+# --------------------------------------------------------- FL007 await-bound
+def test_await_bound_flags_unbounded_net_awaits():
+    fs = run("""
+    import asyncio
+
+    async def serve(reader, writer):
+        hdr = await reader.readexactly(16)      # line 5
+        body = await reader.read(1024)          # line 6
+        line = await reader.readline()          # line 7
+        await writer.drain()                    # line 8
+        r, w = await asyncio.open_connection("h", 1)    # line 9
+        return hdr, body, line, r, w
+    """, NET_PATH)
+    assert lines_of(fs, "FL007") == [5, 6, 7, 8, 9]
+
+
+def test_await_bound_accepts_wait_for_wrapped_calls():
+    fs = run("""
+    import asyncio
+
+    async def serve(reader, writer, io_timeout_s):
+        hdr = await asyncio.wait_for(
+            reader.readexactly(16), io_timeout_s)
+        await asyncio.wait_for(writer.drain(), io_timeout_s)
+        r, w = await asyncio.wait_for(
+            asyncio.open_connection("h", 1), 30.0)
+        return hdr, r, w
+    """, NET_PATH)
+    assert lines_of(fs, "FL007") == []
+
+
+def test_await_bound_out_of_scope_and_suppression():
+    unbounded = """
+    async def serve(reader):
+        return await reader.readexactly(16)
+    """
+    # outside src/repro/net/ the rule does not apply
+    assert lines_of(run(unbounded, "src/repro/core/other.py"),
+                    "FL007") == []
+    fs = run("""
+    async def pump(reader):
+        return await reader.read(4096)  # farlint: ok FL007 -- lifetime bounded by peers
+    """, NET_PATH)
+    assert lines_of(fs, "FL007") == []
+
+
+def test_await_bound_ignores_unrelated_awaits():
+    fs = run("""
+    import asyncio
+
+    async def serve(queue, task):
+        item = await queue.get()        # not a stream read
+        await asyncio.sleep(0.1)
+        return item, await task
+    """, NET_PATH)
+    assert lines_of(fs, "FL007") == []

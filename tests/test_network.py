@@ -465,6 +465,13 @@ class TestLiveProtocolRobustness:
             body += raw.recv(length - len(body))
         err = wire.decode_error(wire.decode_value(body))
         assert isinstance(err, wire.ProtocolError)
+        trailer = b""
+        while len(trailer) < wire.TRAILER_SIZE:
+            chunk = raw.recv(wire.TRAILER_SIZE - len(trailer))
+            if not chunk:
+                break
+            trailer += chunk
+        wire.check_crc(hdr, body, trailer)      # server frames carry CRC
         assert raw.recv(1) == b""       # and the poisoned conn is dropped
         raw.close()
         # the server is still fully alive for everyone else
@@ -485,6 +492,8 @@ class TestLiveProtocolRobustness:
             body += raw.recv(length - len(body))
         assert isinstance(wire.decode_error(wire.decode_value(body)),
                           wire.ProtocolError)
+        wire.check_crc(hdr, body,
+                       raw.recv(wire.TRAILER_SIZE, socket.MSG_WAITALL))
         raw.close()
 
     def test_version_mismatch_is_typed(self, trio):
@@ -500,4 +509,6 @@ class TestLiveProtocolRobustness:
         err = wire.decode_error(wire.decode_value(body))
         assert isinstance(err, wire.ProtocolError)
         assert "version" in str(err)
+        wire.check_crc(hdr, body,
+                       raw.recv(wire.TRAILER_SIZE, socket.MSG_WAITALL))
         raw.close()
