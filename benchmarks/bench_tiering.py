@@ -1,0 +1,175 @@
+"""Hot/cold tiering economics (PR 10): capacity, cold-scan bytes, cache.
+
+What the paper's tiering claim has to survive as numbers:
+
+  capacity_analytics   demote a dict-friendly analytics table (low-
+                       cardinality int columns, the regime column
+                       stores compress best) and report the pool's
+                       `effective_capacity` — logical bytes served per
+                       physical DRAM byte. GUARDED: >= 1.5x.
+  scan_hot / scan_cold the same selection scan over the same table
+                       before and after demotion. The cold row carries
+                       `cold_read_frac` (cold physical read bytes /
+                       hot logical read bytes) — GUARDED < 0.9: a cold
+                       scan must measurably read FEWER bytes, because
+                       the fused kernel decompresses at line rate
+                       instead of promoting first. `shipped_delta` must
+                       be 0: results are byte-identical, the response
+                       never reflects the tier.
+  scan_promoted        demote + promote round-trip, then the hot scan
+                       again. `hot_p50_ratio` (promoted p50 / original
+                       hot p50) is GUARDED <= 2x: tiering must not tax
+                       the hot path it left behind.
+  read_cold            plain `table_read` of the demoted table:
+                       `shipped_frac` = physical bytes billed / logical
+                       table bytes (the compressed-wire half of the
+                       accounting contract).
+  cache_miss / cache_warm   2-node cluster with a client page cache:
+                       the warm read's `warm_shipped_bytes` is GUARDED
+                       == 0 (a hit moves no bytes) and `hit_frac` == 1.
+
+Standalone:  python -m benchmarks.bench_tiering --quick --json BENCH.json
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import operators as op
+from repro.core.client import (FViewNode, alloc_table_mem, farview_request,
+                               open_connection, table_read, table_write)
+from repro.core.cluster import FarCluster
+from repro.core.table import Column, FTable
+
+COLS = tuple(Column(f"c{i}", "i32" if i == 0 else "f32") for i in range(8))
+PAGE = 64 * 1024        # small enough that quick mode still spans pages
+
+PIPE = (op.Select((op.Predicate("c1", "<", 64.0),
+                   op.Predicate("c2", ">", 16.0))),)
+
+
+def _analytics_data(rng, n):
+    """The regime the capacity claim is about: every column draws from a
+    small vocabulary (dict mode packs to ~a byte per 4-byte word)."""
+    d = {"c0": rng.integers(0, 64, n).astype(np.int32)}
+    for i in range(1, 8):
+        d[f"c{i}"] = rng.integers(0, 128, n).astype(np.float32)
+    return d
+
+
+def _scan_p50(qp, ft, repeat):
+    res = farview_request(qp, ft, PIPE).finalize()      # warmup: trace
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        farview_request(qp, ft, PIPE).finalize()
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2], res
+
+
+def run() -> None:
+    q = common.quick()
+    n = 1 << (14 if q else 18)
+    repeat = 1 if q else 5
+    rng = np.random.default_rng(0)
+    data = _analytics_data(rng, n)
+    ft_schema = FTable("facts", COLS, n_rows=n)
+    words = ft_schema.encode(data)
+
+    # hysteresis disabled: the bench scans the cold table repeatedly and
+    # must measure the FUSED decompress path, not a promotion
+    node = FViewNode(256 * 2**20, page_bytes=PAGE, promote_after=10**9)
+    qp = open_connection(node)
+    ft = FTable("facts", COLS, n_rows=n)
+    alloc_table_mem(qp, ft)
+    table_write(qp, ft, words)
+
+    sec_hot, res_hot = _scan_p50(qp, ft, repeat)
+    common.row("tiering", "scan_hot", sec_hot * 1e6, rows=n,
+               read_mb=round(res_hot.read_bytes / 2**20, 3),
+               mrows_per_s=round(n / sec_hot / 1e6, 2))
+
+    t0 = time.perf_counter()
+    demoted = node.pool.demote_table(ft)
+    demote_us = (time.perf_counter() - t0) * 1e6
+    s = node.pool.tier_summary()
+    common.row("tiering", "capacity_analytics", demote_us, rows=n,
+               cold_pages=demoted,
+               logical_mb=round(s["logical_bytes"] / 2**20, 3),
+               physical_mb=round(s["physical_bytes"] / 2**20, 3),
+               effective_capacity=round(s["effective_capacity"], 2))
+
+    sec_cold, res_cold = _scan_p50(qp, ft, repeat)
+    common.row("tiering", "scan_cold", sec_cold * 1e6, rows=n,
+               read_mb=round(res_cold.read_bytes / 2**20, 3),
+               cold_read_frac=round(res_cold.read_bytes
+                                    / max(res_hot.read_bytes, 1), 3),
+               shipped_delta=res_cold.shipped_bytes - res_hot.shipped_bytes,
+               mrows_per_s=round(n / sec_cold / 1e6, 2))
+
+    shipped0 = qp.bytes_shipped
+    t0 = time.perf_counter()
+    table_read(qp, ft)
+    read_us = (time.perf_counter() - t0) * 1e6
+    common.row("tiering", "read_cold", read_us, rows=n,
+               shipped_frac=round((qp.bytes_shipped - shipped0)
+                                  / ft.n_bytes, 3))
+
+    # round-trip back to hot: the tier must not tax the path it left
+    node.pool.promote_table(ft)
+    sec_back, res_back = _scan_p50(qp, ft, repeat)
+    assert res_back.shipped_bytes == res_hot.shipped_bytes
+    common.row("tiering", "scan_promoted", sec_back * 1e6, rows=n,
+               hot_p50_ratio=round(sec_back / max(sec_hot, 1e-9), 2))
+    del node, qp, ft
+
+    # client cache: a warm partitioned read ships nothing
+    cl = FarCluster(2, 256 * 2**20, cache_bytes=256 * 2**20)
+    cqp = cl.open_connection()
+    ct = cl.alloc_table_mem(cqp, FTable("facts", COLS, n_rows=n))
+    cl.table_write(cqp, ct, words)
+    live = sum(1 for p in ct.parts if p is not None and p.n_rows > 0)
+
+    def _miss_read():
+        cl.cache.drop_table("facts")
+        t0 = time.perf_counter()
+        cl.table_read(cqp, ct)
+        return time.perf_counter() - t0
+
+    miss = sorted(_miss_read() for _ in range(repeat))[repeat // 2]
+    common.row("tiering", "cache_miss_2nodes", miss * 1e6, rows=n,
+               nodes=2)
+    cl.table_read(cqp, ct)                          # fill
+    h0, s0 = cqp.cache_hits, cqp.bytes_shipped
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        cl.table_read(cqp, ct)
+        ts.append(time.perf_counter() - t0)
+    warm = sorted(ts)[len(ts) // 2]
+    common.row("tiering", "cache_warm_2nodes", warm * 1e6, rows=n,
+               nodes=2, warm_shipped_bytes=cqp.bytes_shipped - s0,
+               hit_frac=round((cqp.cache_hits - h0) / (repeat * live), 3),
+               speedup=round(miss / max(warm, 1e-9), 1))
+    del cl, cqp, ct
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    if args.quick:
+        common.QUICK = True
+    run()
+    common.print_csv()
+    if args.json:
+        common.write_json(args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -182,6 +182,57 @@ def check_chaos(cur_rows: list[dict], *, max_chaos_ratio: float,
     return failures
 
 
+def check_tiering(cur_rows: list[dict], *, min_capacity: float,
+                  max_cold_read_frac: float,
+                  max_hot_ratio: float) -> list[str]:
+    """PR 10 tiering guards, checked against the CURRENT run only:
+    demoting the analytics table must buy at least `min_capacity`x
+    effective capacity (logical bytes served per physical DRAM byte); a
+    cold scan must read at most `max_cold_read_frac` of the hot scan's
+    bytes (the fused decompress runs off the COMPRESSED frames) while
+    shipping byte-identical results (`shipped_delta` == 0); the
+    demote->promote round-trip must leave the hot p50 within
+    `max_hot_ratio`x of the original; and a warm client-cache read must
+    ship ZERO bytes with a perfect hit rate."""
+    failures = []
+    for r in cur_rows:
+        if r.get("bench") != "tiering":
+            continue
+        cap = r.get("effective_capacity")
+        if cap is not None and cap < min_capacity:
+            failures.append(
+                f"tiering {r['name']}: effective_capacity {cap:.2f}x < "
+                f"{min_capacity}x (cold compression bought too little)")
+        frac = r.get("cold_read_frac")
+        if frac is not None and frac > max_cold_read_frac:
+            failures.append(
+                f"tiering {r['name']}: cold_read_frac {frac:.3f} > "
+                f"{max_cold_read_frac} (cold scan did not measurably "
+                f"cut read bytes)")
+        if r.get("shipped_delta"):
+            failures.append(
+                f"tiering {r['name']}: shipped_delta "
+                f"{r['shipped_delta']} != 0 (cold results are not "
+                f"byte-identical to hot)")
+        ratio = r.get("hot_p50_ratio")
+        if ratio is not None and ratio > max_hot_ratio:
+            failures.append(
+                f"tiering {r['name']}: hot_p50_ratio {ratio:.2f}x > "
+                f"{max_hot_ratio}x (the tier round-trip taxed the hot "
+                f"path)")
+        if r.get("warm_shipped_bytes"):
+            failures.append(
+                f"tiering {r['name']}: warm cache read shipped "
+                f"{r['warm_shipped_bytes']} bytes (a hit must move "
+                f"nothing)")
+        hf = r.get("hit_frac")
+        if hf is not None and hf < 1.0:
+            failures.append(
+                f"tiering {r['name']}: hit_frac {hf:.3f} < 1.0 (warm "
+                f"reads missed the client cache)")
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("current", help="fresh benchmarks.run --json output")
@@ -209,6 +260,15 @@ def main() -> int:
                     help="fail when hedged throughput with one degraded "
                          "(slowed, not killed) node recovers to less "
                          "than this fraction of clean")
+    ap.add_argument("--min-capacity", type=float, default=1.5,
+                    help="fail when the tiering bench's effective "
+                         "capacity multiplier falls below this")
+    ap.add_argument("--max-cold-read-frac", type=float, default=0.9,
+                    help="fail when a cold scan reads more than this "
+                         "fraction of the hot scan's bytes")
+    ap.add_argument("--max-hot-ratio", type=float, default=2.0,
+                    help="fail when the post-promote hot scan p50 "
+                         "exceeds this multiple of the original hot p50")
     args = ap.parse_args()
 
     cur_rows, cur_meta = load_rows(args.current)
@@ -245,6 +305,19 @@ def main() -> int:
               f"min-chaos-recovery {args.min_chaos_recovery}), "
               f"{len(tail_failures)} failed")
     chaos_failures += tail_failures
+    tier_failures = check_tiering(
+        cur_rows, min_capacity=args.min_capacity,
+        max_cold_read_frac=args.max_cold_read_frac,
+        max_hot_ratio=args.max_hot_ratio)
+    n_tier = sum(1 for r in cur_rows if r.get("bench") == "tiering")
+    for line in tier_failures:
+        print(f"TIERING GUARD FAILED: {line}")
+    if n_tier:
+        print(f"# {n_tier} tiering rows checked "
+              f"(min-capacity {args.min_capacity}, max-cold-read-frac "
+              f"{args.max_cold_read_frac}, max-hot-ratio "
+              f"{args.max_hot_ratio}), {len(tier_failures)} failed")
+    chaos_failures += tier_failures
     baseline = args.against or latest_committed_baseline(
         cur_meta.get("quick"))
     if baseline is None:

@@ -71,17 +71,18 @@ def timeit(fn, *, repeat: int = 5, warmup: int = 2) -> float:
 
 def cluster_padding(*ctables) -> tuple[int, int]:
     """(valid_rows, padded_rows) across cluster tables: what the nodes'
-    pow2 shape-bucketed executables actually run vs the rows that carry
-    data. The gap is the ROADMAP's bucketing-waste item — hash partitions
-    of pow2 tables land at n/k+eps rows and round up to the next bucket —
+    shape-bucketed executables actually run vs the rows that carry data.
+    The gap was the ROADMAP's bucketing-waste item — hash partitions of
+    pow2 tables land at n/k+eps rows; the quarter-octave `shape_bucket`
+    ladder caps the round-up at 1.25x where pow2 paid up to 2x —
     reported per bench row so the waste stays visible in BENCH json."""
-    from repro.core.operators import pow2_bucket
+    from repro.core.operators import shape_bucket
     valid = padded = 0
     for ct in ctables:
         for p in ct.parts:
             if p is not None and p.n_rows:
                 valid += p.n_rows
-                padded += pow2_bucket(p.n_rows)
+                padded += shape_bucket(p.n_rows)
     return valid, padded
 
 

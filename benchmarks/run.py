@@ -22,6 +22,9 @@
   bench_chaos                seeded socket faults through ChaosProxy:
                              clean/soak/degraded phases, chaos tail ratio
                              and hedged gray-failure recovery
+  bench_tiering              hot/cold memory tiering: effective-capacity
+                             multiplier, cold-scan byte reduction, hot-path
+                             no-regression round-trip, client cache hits
 
 FV rows time the fused jitted request path with BLOCKING p50 timing (see
 common.timeit); shipped/read byte columns are exact and carry the paper's
@@ -50,7 +53,7 @@ from benchmarks import (bench_chaos, bench_cluster_scaleout, bench_crypto,
                         bench_multiclient_mixed, bench_network,
                         bench_projection, bench_rdma, bench_rebalance,
                         bench_regex, bench_resources, bench_selection,
-                        common)
+                        bench_tiering, common)
 from benchmarks.common import print_csv, write_json
 
 ALL = {
@@ -70,6 +73,7 @@ ALL = {
     "failover": bench_failover.run,
     "network": bench_network.run,
     "chaos": bench_chaos.run,
+    "tiering": bench_tiering.run,
 }
 
 

@@ -45,22 +45,23 @@ from __future__ import annotations
 
 import itertools
 import math
+import threading
 import time
-from collections import deque
+from collections import OrderedDict, deque
 from dataclasses import dataclass
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import operators as op_ir
+# FarviewError moved to core.errors (the tiering codec below the pool needs
+# to raise it); re-exported here so every `fv.FarviewError` call site —
+# including the net tier's typed error frames — keeps working unchanged.
+from repro.core.errors import FarviewError, PageCodecError  # noqa: F401
 from repro.core.offload import _merge
 from repro.core.pipeline import PipelineResult, compile_pipeline
 from repro.core.pool import FarPool
 from repro.core.table import FTable, WORD_BYTES
-
-
-class FarviewError(RuntimeError):
-    pass
 
 
 class NodeDeadError(FarviewError):
@@ -122,6 +123,103 @@ class QPair:
         return self._bytes_read_pool
 
 
+class PageCache:
+    """Bounded client-side partition cache with versioned invalidation.
+
+    Entries are keyed `(table_name, partition_index)` and stamped with
+    the partition's epoch (`ClusterTable.part_version[i]`) at fill time.
+    Every lookup presents the CURRENT epoch; a mismatch means some flip
+    — a write, a migration step, a heal promotion, a cold-storage
+    restore — moved the partition on, so the stale copy is dropped on
+    sight and the lookup misses. Invalidation therefore costs nothing at
+    flip time: bumping the epoch counter IS the invalidation, and it
+    invalidates exactly the partitions that moved (an untouched
+    partition keeps serving from cache across its neighbors' flips).
+
+    LRU over bytes: `capacity_bytes` bounds the sum of cached row
+    matrices; filling past the bound evicts from the cold end. Cached
+    arrays are private read-only copies — a hit may be handed to many
+    readers concurrently and must never alias pool or caller memory.
+    Thread-safe: cluster reads race rebalance/heal sweeps by design."""
+
+    def __init__(self, capacity_bytes: int):
+        if capacity_bytes <= 0:
+            raise ValueError(
+                f"PageCache needs a positive byte budget, got "
+                f"{capacity_bytes}")
+        self.capacity_bytes = int(capacity_bytes)
+        self._lock = threading.Lock()
+        # (name, part) -> (epoch, rows); insertion order = LRU order
+        self._entries: OrderedDict = OrderedDict()
+        self._bytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.invalidations = 0
+
+    def get(self, name: str, part: int, epoch: int):
+        key = (name, part)
+        with self._lock:
+            ent = self._entries.get(key)
+            if ent is None:
+                self.misses += 1
+                return None
+            cached_epoch, rows = ent
+            if cached_epoch != epoch:
+                del self._entries[key]
+                self._bytes -= rows.nbytes
+                self.invalidations += 1
+                self.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return rows
+
+    def put(self, name: str, part: int, epoch: int,
+            rows: np.ndarray) -> None:
+        rows = np.array(rows, copy=True)
+        rows.setflags(write=False)
+        if rows.nbytes > self.capacity_bytes:
+            return          # would evict everything else for one entry
+        key = (name, part)
+        with self._lock:
+            old = self._entries.pop(key, None)
+            if old is not None:
+                self._bytes -= old[1].nbytes
+            self._entries[key] = (epoch, rows)
+            self._bytes += rows.nbytes
+            while self._bytes > self.capacity_bytes:
+                _, (_, dropped) = self._entries.popitem(last=False)
+                self._bytes -= dropped.nbytes
+                self.evictions += 1
+
+    def drop_table(self, name: str) -> int:
+        """Forget every partition of `name` (table freed — its epochs die
+        with it, so a same-named future table must not hit)."""
+        with self._lock:
+            stale = [k for k in self._entries if k[0] == name]
+            for key in stale:
+                _, rows = self._entries.pop(key)
+                self._bytes -= rows.nbytes
+            return len(stale)
+
+    @property
+    def cached_bytes(self) -> int:
+        with self._lock:
+            return self._bytes
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"entries": len(self._entries), "bytes": self._bytes,
+                    "hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions,
+                    "invalidations": self.invalidations}
+
+
 @dataclass
 class DynamicRegion:
     region_id: int
@@ -177,8 +275,13 @@ class FViewNode:
 
     def __init__(self, capacity_bytes: int = 64 * 2**20, *, n_regions: int = 6,
                  n_shards: int = 1, interpret: bool | None = None,
-                 node_id: int = 0, fault=None):
-        self.pool = FarPool(capacity_bytes, n_shards=n_shards)
+                 node_id: int = 0, fault=None, page_bytes: int | None = None,
+                 **pool_kw):
+        # page_bytes / pool_kw pass through to FarPool — tiering tests use
+        # small pages so multi-page (mixed-tier) tables stay cheap
+        if page_bytes is not None:
+            pool_kw["page_bytes"] = page_bytes
+        self.pool = FarPool(capacity_bytes, n_shards=n_shards, **pool_kw)
         self.node_id = node_id      # cluster position (0 for a solo node)
         self.fault = fault          # FaultInjector (duck-typed) or None
         self.regions = [DynamicRegion(i) for i in range(n_regions)]
@@ -254,6 +357,12 @@ class FViewNode:
             # accepting the verb would ghost-dispatch against it
             raise FarviewError(f"connection qp{qp.qp_id} is closed")
         pipeline = op_ir.validate_pipeline(tuple(pipeline))
+        # tiering hysteresis: every submitted verb is an access. Word tables
+        # promote only after `promote_after` hits in the window (a lone cold
+        # scan runs fused-decompressed, no tier-bit thrash); string tables
+        # promote immediately (their dispatch reads the byte sideband, so
+        # cold has no fused-decode path to stay on).
+        self.pool.note_access(ft)
         req = PendingRequest(qp, ft, pipeline, lengths, strings, row_ids)
         if deadline_s is not None:
             if deadline_s <= 0:     # dead on arrival: shed, never queued
@@ -353,8 +462,12 @@ class FViewNode:
             wkey = (int(w) if op_ir.has_crypt_pre(req.pipeline)
                     else op_ir.pow2_bucket(w))
             return ("str", sig, layout, op_ir.pow2_bucket(n), wkey, ids)
+        # tiered tables ride their own stacks: their executable takes the
+        # decode-descriptor operand (a different compile-cache entry), and
+        # keeping flat tables off it preserves the pre-tiering fast path
         return ("word", sig, layout, req.ft.row_words,
-                op_ir.pow2_bucket(req.ft.n_rows), ids)
+                op_ir.pow2_bucket(req.ft.n_rows), ids,
+                self.pool.is_tiered(req.ft))
 
     def _resolve_build(self, pipeline: tuple):
         """The node reads the join build table into "on-chip memory"
@@ -374,8 +487,11 @@ class FViewNode:
         self.check_fault("dispatch")
         ft0 = reqs[0].ft
         sig = op_ir.signature(reqs[0].pipeline)
+        # homogeneous by dispatch key: tiered-ness is part of the key, so
+        # one group is all-tiered or all-flat
+        tiered = reqs[0].strings is None and self.pool.is_tiered(ft0)
         pipe = compile_pipeline(ft0, reqs[0].pipeline,
-                                interpret=self.interpret)
+                                interpret=self.interpret, tiered=tiered)
         for req in reqs:
             region = self.regions[req.qp.region]
             if region.loaded_signature != sig:
@@ -390,11 +506,17 @@ class FViewNode:
                            row_ids=req.row_ids)
             else:
                 build = self._resolve_build(req.pipeline)
+                tier = pw = phys = None
+                if tiered:
+                    tier = self.pool.tier_desc(req.ft)
+                    pw = self.pool.page_words
+                    phys = self.pool.tier_read_bytes(req.ft, pipe.read_cols)
                 res = pipe.run_pages(self.pool.buf, req.ft.pages,
                                      req.ft.n_rows, build=build,
                                      n_rows=req.ft.n_rows,
                                      row_words=req.ft.row_words,
-                                     row_ids=req.row_ids)
+                                     row_ids=req.row_ids, tier=tier,
+                                     page_words=pw, read_bytes=phys)
             results = [res]
         elif reqs[0].strings is not None:
             results = self._dispatch_strings_batched(pipe, reqs)
@@ -411,7 +533,7 @@ class FViewNode:
         bucket with the pool's pinned null page; the bucket executable
         reads zeros past each table's extent and n_valid masks them."""
         row_words = reqs[0].ft.row_words
-        bucket = op_ir.pow2_bucket(max(r.ft.n_rows for r in reqs))
+        bucket = op_ir.shape_bucket(max(r.ft.n_rows for r in reqs))
         n_pages = max(1, math.ceil(bucket * row_words * WORD_BYTES
                                    / self.pool.page_bytes))
         pages = np.full((len(reqs), n_pages), self.pool.null_page, np.int32)
@@ -424,9 +546,23 @@ class FViewNode:
             for b, r in enumerate(reqs):
                 row_ids[b, : r.ft.n_rows] = r.row_ids    # tails masked
         build = self._resolve_build(reqs[0].pipeline)
+        tier = pw = phys = None
+        if pipe.tiered:
+            # stack each request's decode descriptors, padded to the
+            # bucket's page count with null-descriptor rows (mode RAW over
+            # the pinned null page — reads zeros, masked by n_valid)
+            descs = [self.pool.tier_desc_padded(r.ft, n_pages)
+                     for r in reqs]
+            tier = tuple(jnp.asarray(np.stack([d[i] for d in descs]))
+                         for i in range(len(descs[0])))
+            pw = self.pool.page_words
+            phys = [self.pool.tier_read_bytes(r.ft, pipe.read_cols)
+                    for r in reqs]
         return pipe.run_pages_batched(self.pool.buf, pages, n_valid,
                                       build=build, n_rows=bucket,
-                                      row_words=row_words, row_ids=row_ids)
+                                      row_words=row_words, row_ids=row_ids,
+                                      tier=tier, page_words=pw,
+                                      read_bytes=phys)
 
     def _dispatch_strings_batched(self, pipe, reqs) -> list[PipelineResult]:
         """Stacked string/regex round: zero-pad each request's byte matrix
@@ -434,8 +570,8 @@ class FViewNode:
         and are masked via n_valid; widths stay exact when the key pinned
         them (pre-crypt keystream)."""
         mats = [np.asarray(r.strings, np.uint8) for r in reqs]
-        bucket_n = op_ir.pow2_bucket(max(m.shape[0] for m in mats))
-        bucket_w = max(op_ir.pow2_bucket(m.shape[1]) for m in mats) \
+        bucket_n = op_ir.shape_bucket(max(m.shape[0] for m in mats))
+        bucket_w = max(op_ir.shape_bucket(m.shape[1]) for m in mats) \
             if not op_ir.has_crypt_pre(reqs[0].pipeline) \
             else mats[0].shape[1]
         stacked = np.zeros((len(reqs), bucket_n, bucket_w), np.uint8)
@@ -507,11 +643,19 @@ def table_write(qp: QPair, ft: FTable, words: np.ndarray) -> None:
 
 
 def table_read(qp: QPair, ft: FTable) -> jnp.ndarray:
-    """Plain one-sided RDMA read: ships the whole table (no push-down)."""
+    """Plain one-sided RDMA read: ships the whole table (no push-down).
+
+    A tiered extent bills its PHYSICAL bytes — the compressed stream is
+    what crosses the wire; the decode (fused for word pages, block codec
+    for string extents) reconstructs the logical rows byte-identically.
+    `tier_read_bytes` degrades to `ft.n_bytes` for flat tables."""
     qp.node.check_fault("table_read")
-    rows = qp.node.pool.read_table(ft)
-    qp._bytes_shipped += ft.n_bytes
-    qp._bytes_read_pool += ft.n_bytes
+    pool = qp.node.pool
+    pool.note_access(ft)                    # reads count toward promotion
+    phys = pool.tier_read_bytes(ft)
+    rows = pool.read_table(ft)
+    qp._bytes_shipped += phys
+    qp._bytes_read_pool += phys
     qp.requests += 1
     return rows
 

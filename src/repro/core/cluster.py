@@ -145,6 +145,13 @@ class ClusterTable:
     #                                     what a co-partitioned build reuses
     keys: "np.ndarray | None" = None    # current per-row partition keys
     version: int = 0                    # bumped on every migration flip
+    # per-partition epochs (PR 10): `part_version[i]` bumps whenever
+    # partition i's CONTENT or placement changes — a write landing on it,
+    # a migration step moving its rows, a heal promoting/restoring it.
+    # The client-side PageCache stamps entries with the epoch at fill
+    # time, so a flip invalidates exactly the partitions it touched and
+    # nothing else (cache coherence without callbacks).
+    part_version: "list[int] | None" = None
     heat: TableHeat | None = None       # per-node load (drift detector input)
     # replication (PR 6): partition i is SERVED by node `home[i]` (identity
     # until a failure promotes a replica); `replicas[i]` maps node -> the
@@ -167,6 +174,21 @@ class ClusterTable:
         """Rows per node under the current map."""
         return [len(np.asarray(p)) for p in self.part_rows]
 
+    def bump(self, indices=None) -> None:
+        """One map flip: bump the table version AND the epochs of the
+        partitions it touched (all of them by default)."""
+        self.version += 1
+        self.bump_parts(range(len(self.parts)) if indices is None
+                        else indices)
+
+    def bump_parts(self, indices) -> None:
+        """Advance the named partitions' epochs without a map flip (the
+        in-place write path: placement unchanged, bytes replaced)."""
+        if self.part_version is None:
+            return
+        for i in indices:
+            self.part_version[i] += 1
+
 
 class ClusterQP:
     """One logical connection = one QPair on every node.
@@ -180,6 +202,11 @@ class ClusterQP:
         self.cluster = cluster
         self.qps = qps
         self.requests = 0
+        # client-cache accounting (PR 10): a hit is a table_read
+        # partition served without touching any node; only meaningful
+        # when the cluster was built with cache_bytes > 0
+        self.cache_hits = 0
+        self.cache_misses = 0
 
     @property
     def bytes_shipped(self) -> int:
@@ -452,7 +479,9 @@ class FarCluster:
                  hedge_after_s: float | None = None,
                  fault: FaultInjector | None = None,
                  breaker: CircuitBreaker | None = None,
-                 nodes: list | None = None):
+                 nodes: list | None = None,
+                 cache_bytes: int = 0,
+                 page_bytes: int | None = None):
         # `nodes=` plugs in pre-built node handles — notably
         # `net.client.RemoteNodeHandle` transports to real `FViewServer`
         # processes (see `net.client.remote_cluster`). Anything with the
@@ -498,9 +527,11 @@ class FarCluster:
         # verb, failover re-drains and ordinary cluster flushes may
         # target the same node concurrently
         self._node_locks = [threading.Lock() for _ in range(n_nodes)]
+        node_kw = {} if page_bytes is None else {"page_bytes": page_bytes}
         self.nodes = nodes if nodes is not None else [
             fv.FViewNode(capacity_bytes, n_regions=n_regions,
-                         interpret=interpret, node_id=i, fault=self.fault)
+                         interpret=interpret, node_id=i, fault=self.fault,
+                         **node_kw)
             for i in range(n_nodes)]
         self.partitioner = partitioner
         self.replicas = int(replicas)   # default k for alloc_table_mem
@@ -511,6 +542,13 @@ class FarCluster:
         # (free_table_mem, check_drift) that take it again.
         self._lock = threading.RLock()
         self.catalog: dict[str, ClusterTable] = {}  # guarded-by: self._lock
+        # client-side coherent partition cache (PR 10): opt-in by byte
+        # budget. `table_read` consults it per partition, validated
+        # against the partition's epoch — hits skip the network entirely,
+        # and any flip (write / rebalance / heal) invalidates exactly the
+        # partitions it bumped. Off (None) by default: zero overhead and
+        # byte counters identical to the un-cached cluster.
+        self.cache = fv.PageCache(cache_bytes) if cache_bytes else None
 
     @property
     def n_nodes(self) -> int:
@@ -637,6 +675,8 @@ class FarCluster:
             ctable.home = list(range(self.n_nodes))
         if ctable.replicas is None:
             ctable.replicas = [dict() for _ in range(self.n_nodes)]
+        if ctable.part_version is None:
+            ctable.part_version = [0] * len(ctable.parts)
         with self._lock:
             self.catalog[ctable.name] = ctable
         return ctable
@@ -860,6 +900,8 @@ class FarCluster:
             for node in self.nodes:
                 for i in range(len(ctable.parts)):
                     node.tables.pop(f"{name}@p{i}", None)
+        if self.cache is not None:
+            self.cache.drop_table(name)
         with self._lock:
             if self.catalog.get(name) is ctable:
                 del self.catalog[name]
@@ -891,6 +933,7 @@ class FarCluster:
             if not landed:
                 raise ReplicaUnavailableError(
                     f"replicated table {ctable.name!r}: every node is dead")
+            ctable.bump_parts(range(len(ctable.parts)))
             return
         self._write_parts(cqp, ctable, words)
 
@@ -915,12 +958,15 @@ class FarCluster:
                      words: np.ndarray) -> None:
         """Scatter rows to EVERY alive copy of each partition. A write
         only fails when a partition has no alive copy at all — partial
-        redundancy degrades loudly (warning) but keeps serving."""
+        redundancy degrades loudly (warning) but keeps serving. Every
+        written partition's epoch advances: cached copies of its old
+        bytes are stale the moment the first copy lands."""
         row_bytes = ctable.schema.row_words * WORD_BYTES
         for i, (part, idx) in enumerate(zip(ctable.parts,
                                             ctable.part_rows)):
             if part is None or part.n_rows == 0:
                 continue
+            ctable.bump_parts((i,))
             idx = np.asarray(idx)
             data = words[idx]
             copies = [(ctable.home[i], part)]
@@ -981,14 +1027,35 @@ class FarCluster:
         order via the partition map (ships the whole table — no
         push-down). Fails over per partition: a dead primary's rows are
         read from the first alive replica, loudly erroring only when a
-        partition has no surviving copy."""
+        partition has no surviving copy.
+
+        With a cluster cache (`cache_bytes > 0`) each partition is
+        consulted against its CURRENT epoch first — a hit is served from
+        the client copy with no node traffic (no bytes billed, because no
+        bytes moved), a miss fills the cache under the epoch captured
+        BEFORE the read, so a racing flip can only produce a stale stamp
+        that the next lookup rejects, never a wrong-bytes hit."""
+        cache = self.cache
         if ctable.replicated:
+            # one whole-table entry under partition index -1; every
+            # copy's epoch moves together (replicated writes bump all)
+            epoch = (ctable.part_version[0]
+                     if ctable.part_version else 0)
+            if cache is not None:
+                rows = cache.get(ctable.name, -1, epoch)
+                if rows is not None:
+                    cqp.cache_hits += 1
+                    return jnp.asarray(rows)
+                cqp.cache_misses += 1
             last: Exception | None = None
             for j in range(self.n_nodes):
                 if not self.health.is_alive(j):
                     continue
                 try:
-                    return fv.table_read(cqp.qps[j], ctable.parts[j])
+                    res = fv.table_read(cqp.qps[j], ctable.parts[j])
+                    if cache is not None:
+                        cache.put(ctable.name, -1, epoch, np.asarray(res))
+                    return res
                 except fv.NodeDeadError as e:
                     self.health.record_failure(j, e)
                     last = e
@@ -1001,13 +1068,25 @@ class FarCluster:
             if part is None or part.n_rows == 0:
                 continue
             idx = np.asarray(idx)
+            epoch = (ctable.part_version[i]
+                     if ctable.part_version else 0)
+            if cache is not None:
+                rows = cache.get(ctable.name, i, epoch)
+                if rows is not None:
+                    out[idx] = rows
+                    cqp.cache_hits += 1
+                    continue
+                cqp.cache_misses += 1
             served, last = False, None
             for node_id, handle in self._serving_candidates(ctable, i):
                 if not self.health.is_alive(node_id):
                     continue
                 try:
-                    out[idx] = np.asarray(
+                    rows = np.asarray(
                         fv.table_read(cqp.qps[node_id], handle))
+                    out[idx] = rows
+                    if cache is not None:
+                        cache.put(ctable.name, i, epoch, rows)
                     served = True
                     break
                 except fv.NodeDeadError as e:
@@ -1436,6 +1515,68 @@ class FarCluster:
                                        max_step_bytes=max_step_bytes)
         return out
 
+    # ---------------------------------------------------------- memory tiering
+    def demote_cold(self, max_heat_rows: int = 0, *,
+                    tables: "list[str] | None" = None) -> dict:
+        """Heat-driven tier sweep: demote every table copy sitting on a
+        node whose heat ledger shows at most `max_heat_rows` rows touched
+        since the last reset — the cluster-level trigger for the pool's
+        hot/cold page tiering (pool.demote_table). Replicas demote with
+        their primaries: a cold partition is cold on every node holding
+        a copy. Settles first — in-flight dispatches hold raw page
+        extents that demotion is about to free. Remote node handles (no
+        in-process pool) and dead nodes are skipped; re-promotion is the
+        pool's job, on access, with hysteresis. Returns
+        {table: [(partition, pages_demoted), ...]} for what moved."""
+        with self._lock:
+            cts = [t for t in self.catalog.values()
+                   if tables is None or t.name in tables]
+        if not cts:
+            return {}
+        self.settle()
+        report: dict = {}
+        for t in cts:
+            rows = (t.heat.rows_snapshot() if t.heat is not None
+                    else np.zeros(self.n_nodes, np.int64))
+            demoted = []
+            for i, part in enumerate(t.parts):
+                if part is None or part.n_rows == 0:
+                    continue
+                if t.replicated:
+                    copies = [(i, part)]
+                    node_heat = rows[i]
+                else:
+                    copies = ([(t.home[i], part)]
+                              + sorted(t.replicas[i].items()))
+                    node_heat = rows[t.home[i]]
+                if node_heat > max_heat_rows:
+                    continue
+                n = 0
+                for node_id, handle in copies:
+                    pool = getattr(self.nodes[node_id], "pool", None)
+                    if pool is None or not self.health.is_alive(node_id):
+                        continue
+                    n += pool.demote_table(handle)
+                if n:
+                    demoted.append((i, n))
+            if demoted:
+                report[t.name] = demoted
+        return report
+
+    def tier_summary(self) -> dict:
+        """Aggregate capacity accounting over every in-process pool."""
+        sums = [node.pool.tier_summary() for node in self.nodes
+                if getattr(node, "pool", None) is not None]
+        out: dict = {}
+        for s in sums:
+            for k, v in s.items():
+                if k != "effective_capacity":   # a ratio — recomputed below
+                    out[k] = out.get(k, 0) + v
+        out["effective_capacity"] = (
+            out["logical_bytes"] / out["physical_bytes"]
+            if out.get("physical_bytes") else 0.0)
+        return out
+
     # ------------------------------------------------------------ self-healing
     def _cyclic_alive(self, i: int) -> int:
         """First alive node in cyclic order from i — the deterministic
@@ -1486,6 +1627,7 @@ class FarCluster:
                     del t.replicas[i][j]    # pages died with the node
                     changed = True
             lost: list = []
+            touched: list = []      # partitions whose serving copy moved
             for i, part in enumerate(t.parts):
                 if t.home[i] not in dead:
                     continue
@@ -1500,6 +1642,7 @@ class FarCluster:
                     t.parts[i] = t.replicas[i].pop(j)
                     t.home[i] = j
                     report["promoted"].append((name, i, j))
+                    touched.append(i)
                     changed = True
                 else:
                     lost.append(i)
@@ -1530,7 +1673,9 @@ class FarCluster:
                         f"below {t.k_replicas} copies — not enough alive "
                         "nodes", stacklevel=2)
             if changed:
-                t.version += 1
+                # restore_table already bumped the partitions it rebuilt;
+                # here the promotions flip their own epochs too
+                t.bump(touched)
                 self._refresh_aliases(t)
                 t.heat.reset()
         return report
@@ -1618,7 +1763,7 @@ class FarCluster:
             ctable.home[i] = j
             restored.append(i)
         if restored:
-            ctable.version += 1
+            ctable.bump(restored)
             self._refresh_aliases(ctable)
         return restored
 
@@ -1688,7 +1833,7 @@ class FarCluster:
             old = t.parts
             t.parts = parts
             t.part_rows = [np.asarray(i) for i in target]
-            t.version += 1
+            t.bump([i for i, ch in enumerate(changed) if ch])
             t.co_spec = new_spec
             t.partitioner = (new_spec.kind if t is ctable
                              else f"co[{new_spec.kind}]")
@@ -1772,7 +1917,7 @@ class FarCluster:
         old = ctable.parts
         ctable.parts = parts
         ctable.part_rows = [np.asarray(i) for i in target_part_rows]
-        ctable.version += 1
+        ctable.bump()
         ctable.co_spec = spec
         for i, part in enumerate(old):
             if part is not None:
@@ -1857,7 +2002,7 @@ class FarCluster:
         ctable.parts[dst] = new_dst
         ctable.part_rows[src] = new_src_rows
         ctable.part_rows[dst] = new_dst_rows
-        ctable.version += 1
+        ctable.bump((src, dst))
         if old_src is not None:
             fv.free_table_mem(src_qp, old_src)
         if old_dst is not None:

@@ -1,0 +1,20 @@
+"""Base error types shared across layers.
+
+`FarviewError` used to live in `core.client`; the tiering codec
+(`distributed.compress`) and the pool both need to raise it, and client
+imports pool — so the base class lives here, below everything. `core.client`
+re-exports it unchanged (every existing `fv.FarviewError` call site keeps
+working, including the net tier's typed error frames).
+"""
+from __future__ import annotations
+
+
+class FarviewError(RuntimeError):
+    """Base class for every typed Farview failure."""
+
+
+class PageCodecError(FarviewError):
+    """A compressed page failed validation (corrupt stream, bad checksum,
+    impossible descriptor). Raised INSTEAD of returning wrong bytes — a
+    cold page that cannot be decoded exactly is a loud error, never a
+    silently-wrong result."""

@@ -143,6 +143,25 @@ def pow2_bucket(n: int) -> int:
     return 1 << max(0, int(n) - 1).bit_length()
 
 
+def shape_bucket(n: int) -> int:
+    """Quarter-octave pad target: smallest m * 2^e >= n with m in 5..8
+    (powers of two below 8 for tiny n). Four steps per octave caps the
+    padded-work overhead at 1.25x where pow2 rounding pays up to 2x —
+    hash partitions land at n/k + eps rows and a pow2 target rounds
+    nearly half the dispatch back to waste.
+
+    This is the PAD target only, never the COALESCING key: requests
+    still group by `pow2_bucket` (one batch per octave) and the batch
+    pads to the quarter-octave rung of its largest member, so a bucket
+    costs at most four traced shapes instead of one — a bounded retrace
+    price for an unbounded per-dispatch row saving."""
+    n = max(1, int(n))
+    if n <= 8:
+        return pow2_bucket(n)       # the ladder degenerates below m=5
+    step = 1 << ((n - 1).bit_length() - 3)      # octave top is 8 * step
+    return -(-n // step) * step
+
+
 def has_crypt_pre(pipeline: tuple) -> bool:
     """True if the pipeline decrypts the read stream. The CTR keystream is
     positional over the row-major flattening, so width padding would shift

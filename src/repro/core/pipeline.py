@@ -64,6 +64,7 @@ from repro.core.regex import compile_regex
 from repro.core.table import FTable, WORD_BYTES
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
+from repro.kernels import tier as ktier
 
 _DROP_KEY = int(kref.KEY_SENTINEL) + 1   # masked-row group key (never in data)
 
@@ -191,9 +192,14 @@ class CompiledPipeline:
     """One fused jit executable per (schema layout, pipeline signature)."""
 
     def __init__(self, schema: FTable, pipeline: tuple,
-                 interpret: bool | None):
+                 interpret: bool | None, tiered: bool = False):
         pipeline = op_ir.validate_pipeline(tuple(pipeline))
         self.signature = op_ir.signature(pipeline)
+        # tiered executables take the pool's decode descriptors as an extra
+        # operand and fuse the cold-page decompress into the same dispatch
+        # (kernels/tier.py); `tiered` is part of the compile-cache key, so
+        # flat-DRAM pipelines keep their exact pre-tiering trace.
+        self.tiered = bool(tiered)
         # interpret=True means "no real Pallas backend": lower the operators
         # to XLA-native implementations instead of emulating the MXU.
         self.interpret = (interpret if interpret is not None
@@ -264,7 +270,8 @@ class CompiledPipeline:
         self._jit_rows = jax.jit(self._rows_entry)
         # farlint: ok jit-closure -- captured attrs are write-once (__init__)
         self._jit_pages = jax.jit(self._pages_entry,
-                                  static_argnames=("n_rows", "row_words"))
+                                  static_argnames=("n_rows", "row_words",
+                                                   "page_words"))
         # farlint: ok jit-closure -- captured attrs are write-once (__init__)
         self._jit_strings = jax.jit(self._strings_entry)
 
@@ -311,23 +318,35 @@ class CompiledPipeline:
 
     def run_pages(self, buf, pages, n_valid, build=None, *,
                   n_rows: int, row_words: int,
-                  row_ids=None) -> PipelineResult:
+                  row_ids=None, tier=None, page_words: int | None = None,
+                  read_bytes: int | None = None) -> PipelineResult:
         """The fused request verb: ONE dispatch does page gather + pipeline.
 
         buf: pool buffer (n_pages, page_words); pages: (P,) page ids;
         n_valid: traced row-validity scalar (rows >= n_valid are masked);
         row_ids: optional (n_rows,) original-table row indices (partition
-        dispatch — keystream offsets + survivor-id packing).
+        dispatch — keystream offsets + survivor-id packing). On a tiered
+        pipeline, `tier` is the pool's decode-descriptor tuple
+        (`FarPool.tier_desc`) and `page_words` the static frame width: the
+        cold-page decompress fuses into the SAME dispatch. `read_bytes`
+        overrides the logical read accounting with the physical
+        (compressed) bytes the tiered gather actually pulls.
         """
         payload = self._jit_pages(
             buf, jnp.asarray(pages, jnp.int32),
             jnp.asarray(n_valid, jnp.int32), self._as_build(build),
-            self._as_ids(row_ids), n_rows=n_rows, row_words=row_words)
-        return self._wrap(payload, self._pages_read_bytes(n_rows, row_words))
+            self._as_ids(row_ids), self._as_tier(tier),
+            n_rows=n_rows, row_words=row_words, page_words=page_words)
+        return self._wrap(payload,
+                          self._pages_read_bytes(n_rows, row_words)
+                          if read_bytes is None else read_bytes)
 
     def run_pages_batched(self, buf, pages, n_valid, build=None, *,
                           n_rows: int, row_words: int,
-                          row_ids=None) -> list[PipelineResult]:
+                          row_ids=None, tier=None,
+                          page_words: int | None = None,
+                          read_bytes: list[int] | None = None
+                          ) -> list[PipelineResult]:
         """Stacked multi-client dispatch: pages (B, P), n_valid (B,).
 
         One vmapped executable serves the whole scheduling round; the
@@ -346,9 +365,11 @@ class CompiledPipeline:
         payload = self._jit_pages(
             buf, pages, jnp.asarray(n_valid, jnp.int32),
             self._as_build(build), self._as_ids(row_ids),
-            n_rows=n_rows, row_words=row_words)
+            self._as_tier(tier),
+            n_rows=n_rows, row_words=row_words, page_words=page_words)
         return [self._wrap(self._split(payload, b, int(nv[b])),
-                           self._pages_read_bytes(int(nv[b]), row_words))
+                           self._pages_read_bytes(int(nv[b]), row_words)
+                           if read_bytes is None else read_bytes[b])
                 for b in range(int(pages.shape[0]))]
 
     def run_strings_batched(self, strings, lengths, n_valid, *,
@@ -392,6 +413,19 @@ class CompiledPipeline:
     @staticmethod
     def _as_ids(row_ids):
         return None if row_ids is None else jnp.asarray(row_ids, jnp.int32)
+
+    def _as_tier(self, tier):
+        if (tier is None) == self.tiered:
+            raise ValueError("tiered pipelines take a tier descriptor "
+                             "operand; flat pipelines take none")
+        return tier
+
+    @property
+    def read_cols(self) -> tuple[int, ...] | None:
+        """Column indices a column-granular gather touches, or None when
+        the plan reads full rows — what the tiered dispatch passes to
+        `FarPool.tier_read_bytes` so physical billing matches the gather."""
+        return tuple(self.proj_cols) if self._columnar_read() else None
 
     @staticmethod
     def _as_build(build):
@@ -446,32 +480,51 @@ class CompiledPipeline:
             return self._body(s, ln, nv, None, ids, narrowed=False)
         return jax.vmap(one)(strings, lengths, n_valid, row_ids)
 
-    def _pages_entry(self, buf, pages, n_valid, build, row_ids, *,
-                     n_rows, row_words):
+    def _pages_entry(self, buf, pages, n_valid, build, row_ids, tier, *,
+                     n_rows, row_words, page_words):
         if pages.ndim == 2:                     # stacked multi-client round
             # `build` is closed over, not vmapped: the round shares ONE
             # join build table, broadcast across the stacked probes.
+            # `tier` (when present) is a stacked descriptor tuple and maps
+            # with the pages — each request decodes its own cold planes
+            # inside the same vmapped body.
             if row_ids is None:
-                def one(pg, nv):
+                def one(pg, nv, tr):
                     return self._gather_run(buf, pg, nv, build, None,
-                                            n_rows, row_words)
-                return jax.vmap(one)(pages, n_valid)
+                                            n_rows, row_words, tr,
+                                            page_words)
+                if tier is None:
+                    return jax.vmap(lambda pg, nv: one(pg, nv, None)
+                                    )(pages, n_valid)
+                return jax.vmap(one)(pages, n_valid, tier)
 
-            def one(pg, nv, ids):
+            def one(pg, nv, ids, tr):
                 return self._gather_run(buf, pg, nv, build, ids,
-                                        n_rows, row_words)
-            return jax.vmap(one)(pages, n_valid, row_ids)
+                                        n_rows, row_words, tr, page_words)
+            if tier is None:
+                return jax.vmap(lambda pg, nv, ids: one(pg, nv, ids, None)
+                                )(pages, n_valid, row_ids)
+            return jax.vmap(one)(pages, n_valid, row_ids, tier)
         return self._gather_run(buf, pages, n_valid, build, row_ids,
-                                n_rows, row_words)
+                                n_rows, row_words, tier, page_words)
 
     def _gather_run(self, buf, pages, n_valid, build, row_ids,
-                    n_rows, row_words):
+                    n_rows, row_words, tier=None, page_words=None):
         if self._columnar_read():
-            work = fpool.gather_columns(buf, pages, n_rows, row_words,
-                                        tuple(self.proj_cols))
+            if tier is not None:
+                work = ktier.gather_columns_tiered(
+                    buf, tier, n_rows, row_words, tuple(self.proj_cols),
+                    page_words)
+            else:
+                work = fpool.gather_columns(buf, pages, n_rows, row_words,
+                                            tuple(self.proj_cols))
             return self._body(work, None, n_valid, build, row_ids,
                               narrowed=True)
-        rows = fpool.gather_rows(buf, pages, n_rows, row_words)
+        if tier is not None:
+            rows = ktier.gather_rows_tiered(buf, tier, n_rows, row_words,
+                                            page_words)
+        else:
+            rows = fpool.gather_rows(buf, pages, n_rows, row_words)
         return self._body(rows, None, n_valid, build, row_ids,
                           narrowed=False)
 
@@ -688,7 +741,8 @@ _CACHE_LOCK = threading.Lock()   # cluster nodes flush from parallel threads
 
 
 def compile_pipeline(schema: FTable, pipeline: tuple,
-                     *, interpret: bool | None = None) -> CompiledPipeline:
+                     *, interpret: bool | None = None,
+                     tiered: bool = False) -> CompiledPipeline:
     """Fetch (or build) the fused executable for (schema layout, signature).
 
     The key deliberately excludes the table *name*: two clients running the
@@ -696,6 +750,11 @@ def compile_pipeline(schema: FTable, pipeline: tuple,
     what lets the node's scheduler coalesce them into a stacked dispatch.
     `interpret` is normalized to its resolved boolean before keying, so
     `interpret=None` (auto) and an explicit matching bool share the entry.
+    `tiered=True` keys a SEPARATE executable whose gather takes the pool's
+    decode descriptors and inflates cold pages in-dispatch — flat tables
+    never pay for the decode arithmetic, and flipping a table's tier flips
+    which cached executable serves it (a cache lookup, like any other
+    "partial reconfiguration").
     """
     pipeline = op_ir.validate_pipeline(tuple(pipeline))
     if interpret is None:
@@ -705,7 +764,8 @@ def compile_pipeline(schema: FTable, pipeline: tuple,
     # different-width string tables share one executable — which is what
     # lets the scheduler width-bucket stacked regex rounds.
     key = (tuple((c.name, c.dtype) for c in schema.columns),
-           bool(schema.str_width), op_ir.signature(pipeline), interpret)
+           bool(schema.str_width), op_ir.signature(pipeline), interpret,
+           bool(tiered))
     # One build per key under concurrent flushes. The whole get-or-build
     # runs under the lock: the old lock-free fast path read the dict while
     # parallel drains were inserting, and a racing reader could see a
@@ -715,7 +775,7 @@ def compile_pipeline(schema: FTable, pipeline: tuple,
         pipe = _CACHE.get(key)
         if pipe is None:
             pipe = _CACHE[key] = CompiledPipeline(schema, pipeline,
-                                                  interpret)
+                                                  interpret, tiered)
     return pipe
 
 

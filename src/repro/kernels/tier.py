@@ -1,0 +1,125 @@
+"""Fused in-dispatch page decompression (the tiering read path).
+
+`FarPool` keeps COLD pages compressed in place (`distributed/compress.py`
+encodes each column plane bit-packed delta/dict into a shared "cold
+frame"). These gathers are the device-side inverse: pure traced functions
+of `(buf, descriptors)` that reconstruct the LOGICAL words of a mixed
+raw/compressed page list inside the SAME jitted program as the operator
+pipeline — one dispatch still does gather + decompress + operators, so
+offloaded verbs over cold data run at line rate instead of bouncing
+through a host-side inflate.
+
+Descriptor layout (one row per logical page, built by `FarPool.tier_desc`):
+
+  phys    (P,)   int32   raw page id, or the cold frame holding the stream
+  mode    (P,C)  int32   per column plane: MODE_RAW | MODE_DELTA | MODE_DICT
+  width   (P,C)  int32   packed bits per value (1..32)
+  base    (P,C)  uint32  delta base (wrap-around add)
+  dictoff (P,C)  int32   dictionary word offset, FRAME-relative
+  bitoff  (P,C)  int32   packed plane bit offset, FRAME-relative
+                         (a 2 MiB frame is 2^24 bits — fits int32)
+
+A fully-raw page is one descriptor row of MODE_RAW planes whose `phys` is
+the original page — including the scheduler's null-page bucket padding
+(mode RAW + phys = null page reads zeros, masked by n_valid as before).
+The decode is branch-free: every lane computes the raw word AND the
+unpacked value (indices clamped in-bounds) and selects by mode, so mixed
+hot/cold page lists stay ONE gather with no host-visible control flow.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.compress import MODE_DICT, MODE_RAW
+
+# descriptor tuple order — every producer/consumer goes through these names
+TIER_FIELDS = ("phys", "mode", "width", "base", "dictoff", "bitoff")
+
+
+def null_descriptor(n_pages: int, n_cols: int, null_page: int):
+    """An all-raw descriptor bundle pointing every page at `null_page` —
+    what batched dispatch uses to pad a round's descriptor stack."""
+    return (np.full((n_pages,), null_page, np.int32),
+            np.full((n_pages, n_cols), MODE_RAW, np.int32),
+            np.ones((n_pages, n_cols), np.int32),
+            np.zeros((n_pages, n_cols), np.uint32),
+            np.zeros((n_pages, n_cols), np.int32),
+            np.zeros((n_pages, n_cols), np.int32))
+
+
+def _decode_flat(buf, tier, g, page_words: int, n_cols: int):
+    """Logical words at flat indices `g` (any shape, int32) -> uint32.
+
+    Pure in (buf, tier); `page_words`/`n_cols` are static. For each index:
+    locate its page + column plane, compute its rank within the plane
+    (pages start mid-row when n_cols doesn't divide page_words — `phase`
+    accounts for it), extract the packed value from a 2-word straddle
+    read, then apply the plane's mode. All three candidate values are
+    computed with clamped indices and selected by mode, keeping the
+    program branch-free (vmap/batched-dispatch safe).
+    """
+    phys, mode, width, base, dictoff, bitoff = tier
+    ubuf = jnp.asarray(buf, jnp.float32).view(jnp.uint32)
+    pw = np.int32(page_words)
+    C = np.int32(n_cols)
+
+    p = g // pw                                  # logical page
+    k = g % pw                                   # word within page
+    c = g % C                                    # column plane (global idx)
+    frame = phys[p]
+    m = mode[p, c]
+    w = width[p, c]
+
+    # raw candidate: the word itself, straight from the (possibly null) page
+    raw = ubuf[frame, k]
+
+    # packed candidate: rank j of this word within its (page, column) plane
+    phase = (p * pw) % C                         # column of page's word 0
+    j = (k - (c - phase) % C) // C
+    bit = bitoff[p, c] + j * w
+    wi = jnp.clip(bit >> 5, 0, pw - 2)           # clamp: raw lanes don't read
+    sh = (bit & 31).astype(jnp.uint32)
+    lo = ubuf[frame, wi]
+    hi = ubuf[frame, wi + 1]
+    straddle = jnp.where(sh == 0, jnp.uint32(0),
+                         hi << (jnp.uint32(32) - sh))
+    packed = (lo >> sh) | straddle
+    packed = packed & (jnp.uint32(0xFFFFFFFF)
+                       >> (jnp.uint32(32) - w.astype(jnp.uint32)))
+
+    # delta candidate: wrap-around add of the plane base (exact inverse)
+    delta_val = packed + base[p, c]
+    # dict candidate: frame-relative dictionary lookup (index clamped so
+    # non-dict lanes stay in-bounds; their value is masked out by `m`)
+    didx = jnp.clip(dictoff[p, c] + packed.astype(jnp.int32), 0, pw - 1)
+    dict_val = ubuf[frame, didx]
+
+    return jnp.where(m == MODE_RAW, raw,
+                     jnp.where(m == MODE_DICT, dict_val, delta_val))
+
+
+def gather_rows_tiered(buf, tier, n_rows: int, row_words: int,
+                       page_words: int) -> jnp.ndarray:
+    """Tiered analogue of `pool.gather_rows` -> (n_rows, row_words) f32.
+
+    Byte-identical to gathering the raw pages: cold planes decode to the
+    exact stored bit patterns (the codec works on u32 bitcasts, so NaN
+    payloads survive). Safe inside a jitted/vmapped program."""
+    g = (jnp.arange(n_rows, dtype=jnp.int32)[:, None] * np.int32(row_words)
+         + jnp.arange(row_words, dtype=jnp.int32)[None, :])
+    u = _decode_flat(buf, tier, g, page_words, row_words)
+    return u.view(jnp.float32)
+
+
+def gather_columns_tiered(buf, tier, n_rows: int, row_words: int,
+                          col_idx: tuple[int, ...],
+                          page_words: int) -> jnp.ndarray:
+    """Tiered smart addressing -> (n_rows, k) f32: only the projected
+    columns' planes are unpacked (a cold plane's packed words are the only
+    DRAM the column touches — the accounting in `FarPool.tier_read_bytes`
+    matches)."""
+    g = (jnp.arange(n_rows, dtype=jnp.int32)[:, None] * np.int32(row_words)
+         + jnp.asarray(col_idx, jnp.int32)[None, :])
+    u = _decode_flat(buf, tier, g, page_words, row_words)
+    return u.view(jnp.float32)

@@ -182,6 +182,22 @@ class RemotePool:
             {"table_id": ft.table_id, "idx": np.asarray(row_idx)},
             op="table_read")["data"]
 
+    # ---- tiering (PR 10): the tier lives in the SERVER's pool. The
+    # server-side read/submit paths note accesses and bill compressed
+    # physical bytes against their own ledgers; over the socket the
+    # DECODED rows are what ships, so this hop legitimately bills
+    # logical bytes and never sees a tier bit.
+    def is_tiered(self, ft) -> bool:
+        return False
+
+    def note_access(self, ft) -> bool:
+        return False
+
+    def tier_read_bytes(self, ft, col_idx=None) -> int:
+        if col_idx is None:
+            return ft.n_bytes
+        return ft.n_rows * len(col_idx) * 4
+
     @property
     def stats(self) -> PoolStats:
         try:

@@ -336,3 +336,59 @@ class TestCacheKeyNormalization:
         p_expl = compile_pipeline(ft, PIPE, interpret=resolved)
         assert p_auto is p_expl
         assert cache_info() == 1
+
+
+class TestShapeBucketPadding:
+    """PR 10 satellite: quarter-octave pad targets close the pow2
+    padding-waste gap. Coalescing still groups by `pow2_bucket`; the
+    stacked dispatch pads to `shape_bucket` of its largest member."""
+
+    def test_ladder_invariants(self):
+        for n in range(1, 300_000, 173):
+            sb, pb = op.shape_bucket(n), op.pow2_bucket(n)
+            assert n <= sb <= pb
+            if n > 8:
+                step = 1 << ((n - 1).bit_length() - 3)
+                assert sb % step == 0           # on the quarter-octave rung
+                assert sb <= 1.25 * n           # the waste bound
+
+    def test_hash_partition_waste_regression(self):
+        """The regime the fix targets: hash partitions land at n/k + eps
+        rows, just past a power of two, and pow2 rounding paid ~1.3x of
+        the dispatch in padding. The finer ladder must stay under 1.25x
+        — this assertion is the regression guard."""
+        rng = np.random.default_rng(7)
+        sizes = 1_000_000 // 3 + rng.integers(0, 400, 64)
+        valid = int(sizes.sum())
+        pow2 = sum(op.pow2_bucket(int(n)) for n in sizes)
+        fine = sum(op.shape_bucket(int(n)) for n in sizes)
+        assert pow2 > 1.3 * valid       # what the old target wasted
+        assert fine <= 1.25 * valid     # the new bound, forever
+        assert fine < pow2
+
+    def test_fine_pad_round_one_dispatch_byte_identical(self):
+        """Sizes sharing a pow2 bucket but below its top still coalesce
+        into ONE launch at the finer rung, byte-identical to solo and
+        with padded rows invisible to accounting."""
+        sizes = (9000, 9500, 8300)      # pow2 bucket 16384, rung 10240
+        assert op.shape_bucket(max(sizes)) < op.pow2_bucket(max(sizes))
+        node = FViewNode(64 * 2**20, n_regions=len(sizes))
+        qps, fts = [], []
+        for i, n in enumerate(sizes):
+            qp = open_connection(node)
+            ft, _ = word_table(qp, f"fp{i}", n, seed=100 + i)
+            qps.append(qp)
+            fts.append(ft)
+        pends = [submit_request(qp, ft, PIPE) for qp, ft in zip(qps, fts)]
+        before = node.dispatches
+        node.flush()
+        assert node.dispatches == before + 1
+        for pend, (ref, _), ft, qp in zip(pends, solo_refs(sizes, PIPE),
+                                          fts, qps):
+            res = pend.wait()
+            assert res.count == ref.count
+            np.testing.assert_array_equal(np.asarray(res.rows),
+                                          np.asarray(ref.rows))
+            assert res.shipped_bytes == ref.shipped_bytes
+            assert res.read_bytes == ft.n_bytes
+            assert qp.bytes_read_pool == ft.n_bytes

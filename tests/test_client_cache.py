@@ -1,0 +1,281 @@
+"""Client-side coherent page cache (PR 10, part 3).
+
+The coherence rule under test: **the partition-map version is the
+epoch**. Every cache entry is stamped with its partition's epoch at
+fill time; every flip that can change a partition's bytes — a write, a
+rebalance step, a heal promotion, a cold-storage restore — bumps that
+partition's epoch and ONLY that partition's. So:
+
+  * accounting is exact: a cold read misses once per non-empty
+    partition, a warm read hits once per partition and ships ZERO bytes;
+  * invalidation is surgical: writing keys owned by one partition
+    invalidates that partition alone — its neighbors keep serving from
+    cache across the flip;
+  * heal invalidates exactly the partitions it promoted or restored;
+  * the cache is a bounded LRU over bytes (evicts cold end, refuses
+    entries larger than the whole budget, typed error on a non-positive
+    budget);
+  * concurrent readers racing a live rebalance stay byte-identical —
+    the epoch is captured BEFORE the node read, so a racing flip can
+    only produce a stale stamp the next lookup rejects, never a
+    wrong-bytes hit.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.client import PageCache
+from repro.core.cluster import FarCluster
+from repro.core.table import FTable, Column
+
+N = 600
+COLS = tuple(Column(f"c{i}", "i32" if i == 0 else "f32") for i in range(8))
+
+
+def make_data(keys, seed=0):
+    rng = np.random.default_rng(seed)
+    d = {"c0": np.asarray(keys, np.int32)}
+    for i in range(1, 8):
+        d[f"c{i}"] = rng.integers(-50, 50, len(keys)).astype(np.float32)
+    return d
+
+
+def schema(name="t"):
+    return FTable(name, COLS, n_rows=N)
+
+
+def hash_cluster(k=3, *, cache_bytes=8 * 2**20, seed=0, replicas=1):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, 64, N).astype(np.int32)
+    words = schema().encode(make_data(keys, seed))
+    cl = FarCluster(k, cache_bytes=cache_bytes, replicas=replicas)
+    cqp = cl.open_connection()
+    ct = cl.alloc_table_mem(cqp, schema(), partitioner="hash", keys=keys)
+    cl.table_write(cqp, ct, words)
+    return cl, cqp, ct, words, keys
+
+
+def nonempty(ct):
+    return sum(1 for p in ct.parts if p is not None and p.n_rows > 0)
+
+
+# ---------------------------------------------------------------------------
+# the LRU itself
+# ---------------------------------------------------------------------------
+class TestPageCacheUnit:
+    def test_rejects_nonpositive_budget(self):
+        with pytest.raises(ValueError):
+            PageCache(0)
+
+    def test_lru_evicts_cold_end(self):
+        row = np.ones((1, 256), np.float32)         # 1 KiB per entry
+        c = PageCache(3 * row.nbytes)
+        for i in range(3):
+            c.put("t", i, 0, row)
+        assert len(c) == 3 and c.evictions == 0
+        c.get("t", 0, 0)                            # touch: 0 is now MRU
+        c.put("t", 3, 0, row)                       # over budget by one
+        assert c.evictions == 1
+        assert c.get("t", 1, 0) is None             # 1 was the cold end
+        assert c.get("t", 0, 0) is not None
+        assert c.cached_bytes <= c.capacity_bytes
+
+    def test_oversized_entry_refused(self):
+        c = PageCache(1024)
+        c.put("t", 0, 0, np.ones((1, 300), np.float32))   # 1200 B > 1024
+        assert len(c) == 0 and c.cached_bytes == 0
+
+    def test_epoch_mismatch_drops_on_sight(self):
+        c = PageCache(1 << 20)
+        c.put("t", 0, epoch=5, rows=np.ones((2, 2), np.float32))
+        assert c.get("t", 0, epoch=6) is None
+        assert c.invalidations == 1 and len(c) == 0
+        assert c.stats()["misses"] == 1
+
+    def test_hits_are_readonly_private_copies(self):
+        c = PageCache(1 << 20)
+        src = np.ones((2, 2), np.float32)
+        c.put("t", 0, 0, src)
+        src[:] = 7.0                                # caller mutates after put
+        got = c.get("t", 0, 0)
+        np.testing.assert_array_equal(got, np.ones((2, 2), np.float32))
+        with pytest.raises(ValueError):
+            got[0, 0] = 9.0
+
+    def test_drop_table_is_per_table(self):
+        c = PageCache(1 << 20)
+        c.put("a", 0, 0, np.ones((1, 4), np.float32))
+        c.put("a", 1, 0, np.ones((1, 4), np.float32))
+        c.put("b", 0, 0, np.ones((1, 4), np.float32))
+        assert c.drop_table("a") == 2
+        assert c.get("b", 0, 0) is not None
+
+
+# ---------------------------------------------------------------------------
+# cluster integration: exact accounting + surgical invalidation
+# ---------------------------------------------------------------------------
+class TestClusterCacheAccounting:
+    def test_cold_then_warm_read_exact_counts(self):
+        cl, cqp, ct, words, _ = hash_cluster()
+        P = nonempty(ct)
+        got = np.asarray(cl.table_read(cqp, ct))
+        np.testing.assert_array_equal(got, words)
+        assert (cqp.cache_misses, cqp.cache_hits) == (P, 0)
+        shipped = cqp.bytes_shipped
+        got = np.asarray(cl.table_read(cqp, ct))
+        np.testing.assert_array_equal(got, words)
+        assert (cqp.cache_misses, cqp.cache_hits) == (P, P)
+        # a hit moves no bytes: warm read ships NOTHING
+        assert cqp.bytes_shipped == shipped
+        assert cl.cache.stats()["hits"] == P
+
+    def test_write_invalidates_exactly_the_written_table(self):
+        """A full rewrite bumps exactly the written table's non-empty
+        partitions; a neighbor table sharing the cache keeps serving
+        every one of its partitions from the client copy."""
+        cl, cqp, ct, words, keys = hash_cluster()
+        ftb = FTable("b", COLS, n_rows=N)
+        wb = ftb.encode(make_data(keys, seed=8))
+        ctb = cl.alloc_table_mem(cqp, FTable("b", COLS, n_rows=N),
+                                 partitioner="hash", keys=keys)
+        cl.table_write(cqp, ctb, wb)
+        cl.table_read(cqp, ct)                      # warm both tables
+        cl.table_read(cqp, ctb)
+        pv0 = list(ct.part_version)
+        words2 = schema().encode(make_data(keys, seed=9))
+        cl.table_write(cqp, ct, words2)
+        moved = [i for i, (a, b) in enumerate(zip(pv0, ct.part_version))
+                 if a != b]
+        live = [i for i, p in enumerate(ct.parts)
+                if p is not None and p.n_rows > 0]
+        assert sorted(moved) == live                # every written part...
+        h0, m0, inv0 = (cqp.cache_hits, cqp.cache_misses,
+                        cl.cache.invalidations)
+        np.testing.assert_array_equal(
+            np.asarray(cl.table_read(cqp, ct)), words2)
+        np.testing.assert_array_equal(
+            np.asarray(cl.table_read(cqp, ctb)), wb)
+        assert cqp.cache_misses - m0 == len(moved)  # ...and ONLY those
+        assert cqp.cache_hits - h0 == nonempty(ctb)
+        assert cl.cache.invalidations - inv0 == len(moved)
+
+    def test_replicated_table_caches_whole_and_invalidates_on_write(self):
+        cl = FarCluster(2, cache_bytes=8 * 2**20)
+        cqp = cl.open_connection()
+        words = schema().encode(make_data(np.zeros(N, np.int32)))
+        ct = cl.alloc_table_mem(cqp, schema(), replicate=True)
+        cl.table_write(cqp, ct, words)
+        cl.table_read(cqp, ct)
+        cl.table_read(cqp, ct)
+        assert (cqp.cache_misses, cqp.cache_hits) == (1, 1)
+        cl.table_write(cqp, ct, words)              # bump every copy
+        cl.table_read(cqp, ct)
+        assert cqp.cache_misses == 2
+        assert cl.cache.invalidations == 1
+
+    def test_free_table_drops_entries(self):
+        cl, cqp, ct, words, _ = hash_cluster()
+        cl.table_read(cqp, ct)
+        assert len(cl.cache) > 0
+        cl.free_table_mem(cqp, ct)
+        assert len(cl.cache) == 0
+
+    def test_cache_disabled_by_default(self):
+        cl = FarCluster(2)
+        assert cl.cache is None
+
+
+class TestCacheCoherenceUnderFlips:
+    def test_rebalance_invalidates_only_moved_partitions(self):
+        """Induce skew, warm the cache, rebalance: partitions the plan
+        moved re-fetch, the rest hit — and the bytes are identical."""
+        cl, cqp, ct, words, keys = hash_cluster(seed=0)
+        rng = np.random.default_rng(7)
+        owners = ct.co_spec.owners_of(np.arange(64))
+        hot = np.arange(64)[owners == 0]
+        new_keys = hot[rng.integers(0, len(hot), N)].astype(np.int32)
+        new_words = schema().encode(make_data(new_keys, seed=1))
+        cl.table_write(cqp, ct, new_words, keys=new_keys)
+        cl.table_read(cqp, ct)                      # warm post-skew
+        pv0 = list(ct.part_version)
+        h0, m0 = cqp.cache_hits, cqp.cache_misses
+        plan = cl.rebalance(cqp, ct)
+        assert plan.n_moved > 0
+        moved = [i for i, (a, b) in enumerate(zip(pv0, ct.part_version))
+                 if a != b]
+        assert moved
+        got = np.asarray(cl.table_read(cqp, ct))
+        np.testing.assert_array_equal(got, new_words)
+        assert cqp.cache_misses - m0 >= len(
+            [i for i in moved if ct.parts[i] is not None
+             and ct.parts[i].n_rows > 0])
+        # at least the partitions the plan never touched kept serving
+        untouched_hits = cqp.cache_hits - h0
+        assert untouched_hits == sum(
+            1 for i, p in enumerate(ct.parts)
+            if i not in moved and p is not None and p.n_rows > 0)
+
+    def test_heal_invalidates_exactly_promoted_partitions(self):
+        cl, cqp, ct, words, _ = hash_cluster(k=3, replicas=2)
+        cl.table_read(cqp, ct)
+        pv0 = list(ct.part_version)
+        cl.fault.kill(0)
+        # the warm cache even masks the death: epochs haven't moved, so
+        # this read is all hits and never touches the dead node
+        h0 = cqp.cache_hits
+        np.testing.assert_array_equal(np.asarray(cl.table_read(cqp, ct)),
+                                      words)
+        assert cqp.cache_hits - h0 == nonempty(ct)
+        cl.health.mark_dead(0)                      # detector verdict
+        cl.heal(cqp)
+        moved = [i for i, (a, b) in enumerate(zip(pv0, ct.part_version))
+                 if a != b]
+        assert moved and len(moved) < len(ct.parts)
+        h0, m0 = cqp.cache_hits, cqp.cache_misses
+        got = np.asarray(cl.table_read(cqp, ct))
+        np.testing.assert_array_equal(got, words)
+        live = [i for i, p in enumerate(ct.parts)
+                if p is not None and p.n_rows > 0]
+        assert cqp.cache_misses - m0 == len([i for i in moved if i in live])
+        assert cqp.cache_hits - h0 == len([i for i in live
+                                           if i not in moved])
+
+    def test_concurrent_readers_across_map_flip_byte_identical(self):
+        """The splice-harness race: reader threads hammer table_read
+        while the main thread rebalances a skewed map. Every read —
+        before, during, after the flips — must reassemble the exact
+        table; the epoch-captured-before-read rule makes a stale fill
+        harmless (rejected next lookup) rather than wrong."""
+        cl, cqp, ct, words, keys = hash_cluster(seed=2)
+        rng = np.random.default_rng(4)
+        owners = ct.co_spec.owners_of(np.arange(64))
+        hot = np.arange(64)[owners == 0]
+        new_keys = hot[rng.integers(0, len(hot), N)].astype(np.int32)
+        new_words = schema().encode(make_data(new_keys, seed=5))
+        cl.table_write(cqp, ct, new_words, keys=new_keys)
+
+        stop = threading.Event()
+        bad = []
+
+        def reader():
+            q = cl.open_connection()
+            while not stop.is_set():
+                got = np.asarray(cl.table_read(q, ct))
+                if not np.array_equal(got, new_words):
+                    bad.append(got)
+                    return
+
+        threads = [threading.Thread(target=reader) for _ in range(3)]
+        for t in threads:
+            t.start()
+        try:
+            plan = cl.rebalance(cqp, ct)
+        finally:
+            stop.set()
+            for t in threads:
+                t.join()
+        assert not bad, "a reader observed torn bytes during the flip"
+        assert plan.n_moved > 0
+        np.testing.assert_array_equal(
+            np.asarray(cl.table_read(cqp, ct)), new_words)

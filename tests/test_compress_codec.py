@@ -1,0 +1,196 @@
+"""Hypothesis property tests for the PR 10 page codecs.
+
+Two codec families guard the cold tier, and each property here is a
+promise the pool's tiering layer depends on:
+
+  * word-page codec (column-plane bit packing): decode(encode(x)) == x
+    for ANY u32 page — arbitrary column counts, phases, widths, value
+    distributions (dict-friendly low cardinality, delta-friendly narrow
+    spans, incompressible noise, NaN/inf float bitcasts), including
+    empty and single-word pages;
+  * incompressible pages fall back to raw: encode returns None rather
+    than a stream that wouldn't fit the frame (the pool keeps the page
+    raw and the tier bit says so);
+  * corruption is a typed failure: any bit flipped in the stream or the
+    descriptors raises `PageCodecError` (a `FarviewError`) — never
+    wrong bytes returned to a caller;
+  * block codec (string extents): decode(encode(b)) == b for arbitrary
+    byte strings, and any framing/CRC damage raises `PageCodecError`.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dep: pip install hypothesis")
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.core.errors import FarviewError, PageCodecError
+from repro.distributed import compress as pc
+
+_settings = dict(deadline=None, max_examples=25,
+                 suppress_health_check=[HealthCheck.too_slow])
+
+
+# ---------------------------------------------------------------------------
+# word pages: generators
+# ---------------------------------------------------------------------------
+@st.composite
+def _page(draw):
+    """One logical page of u32 words with a chosen personality."""
+    C = draw(st.integers(1, 12))
+    n = draw(st.integers(0, 4096))
+    phase = draw(st.integers(0, max(0, C - 1)))
+    kind = draw(st.sampled_from(
+        ["dict", "delta", "noise", "floats", "const", "mixed"]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    if kind == "dict":
+        vocab = rng.integers(0, 2**32, draw(st.integers(1, 64)),
+                             dtype=np.uint64).astype(np.uint32)
+        words = vocab[rng.integers(0, vocab.size, n)]
+    elif kind == "delta":
+        lo = rng.integers(0, 2**31, dtype=np.uint64)
+        words = (lo + rng.integers(0, draw(st.sampled_from(
+            [1, 2, 255, 65536])), n, dtype=np.uint64)).astype(np.uint32)
+    elif kind == "noise":
+        words = rng.integers(0, 2**32, n, dtype=np.uint64).astype(np.uint32)
+    elif kind == "floats":
+        f = rng.normal(size=n).astype(np.float32)
+        if n:
+            f[rng.integers(0, 2, n, dtype=bool)] = np.float32(np.nan)
+            f[0] = np.float32(np.inf)
+        words = f.view(np.uint32)
+    elif kind == "const":
+        words = np.full((n,), rng.integers(0, 2**32, dtype=np.uint64),
+                        np.uint32)
+    else:   # mixed: per-column personalities (dtype-per-column layout)
+        words = rng.integers(0, 2**32, n, dtype=np.uint64).astype(np.uint32)
+        cols = (phase + np.arange(n)) % C
+        for c in range(C):
+            m = cols == c
+            if draw(st.booleans()):
+                words[m] = rng.integers(0, 7, int(m.sum()),
+                                        dtype=np.uint64).astype(np.uint32)
+    return words, C, phase
+
+
+page_strategy = _page()
+
+
+@settings(**_settings)
+@given(page=page_strategy)
+def test_word_page_roundtrip_exact(page):
+    words, C, phase = page
+    plan = pc.encode_word_page(words, C, phase=phase)
+    assert plan is not None         # no frame bound given -> always encodes
+    out = pc.decode_word_page(plan, C)
+    np.testing.assert_array_equal(out, words)
+
+
+@settings(**_settings)
+@given(n=st.sampled_from([0, 1]), C=st.integers(1, 8),
+       seed=st.integers(0, 2**31 - 1))
+def test_empty_and_single_word_pages(n, C, seed):
+    rng = np.random.default_rng(seed)
+    words = rng.integers(0, 2**32, n, dtype=np.uint64).astype(np.uint32)
+    plan = pc.encode_word_page(words, C)
+    out = pc.decode_word_page(plan, C)
+    np.testing.assert_array_equal(out, words)
+    assert plan.n_words == n
+
+
+@settings(**_settings)
+@given(C=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_incompressible_page_falls_back_to_raw(C, seed):
+    """Noise packs at width 32 + slack + dict-free overhead: it can never
+    fit back inside its own frame, so the frame-bounded encode must
+    return None (the pool keeps the page raw, tier bit RAW)."""
+    rng = np.random.default_rng(seed)
+    n = 2048
+    words = rng.integers(0, 2**32, n, dtype=np.uint64).astype(np.uint32)
+    assert pc.encode_word_page(words, C, page_words=n) is None
+    # unconstrained encode still roundtrips (width-32 verbatim planes)
+    plan = pc.encode_word_page(words, C)
+    np.testing.assert_array_equal(pc.decode_word_page(plan, C), words)
+
+
+@settings(**_settings)
+@given(page=page_strategy, seed=st.integers(0, 2**31 - 1))
+def test_corrupt_stream_raises_typed_error(page, seed):
+    words, C, phase = page
+    if words.size == 0:
+        return
+    plan = pc.encode_word_page(words, C, phase=phase)
+    rng = np.random.default_rng(seed)
+    j = int(rng.integers(0, plan.stream.shape[0]))
+    plan.stream = plan.stream.copy()
+    plan.stream[j] ^= np.uint32(1 << int(rng.integers(0, 32)))
+    with pytest.raises(PageCodecError):
+        pc.decode_word_page(plan, C)
+    assert issubclass(PageCodecError, FarviewError)
+
+
+@settings(**_settings)
+@given(page=page_strategy,
+       field=st.sampled_from(["widths", "bitoff", "base", "modes",
+                              "n_words"]))
+def test_corrupt_descriptor_raises_typed_error(page, field):
+    words, C, phase = page
+    if words.size == 0:
+        return
+    plan = pc.encode_word_page(words, C, phase=phase)
+    if field == "n_words":
+        plan.n_words += 1
+    else:
+        arr = getattr(plan, field).copy()
+        arr[0] += 1
+        setattr(plan, field, arr)
+    with pytest.raises(PageCodecError):
+        pc.decode_word_page(plan, C)
+
+
+# ---------------------------------------------------------------------------
+# block codec (string extents)
+# ---------------------------------------------------------------------------
+blob_strategy = st.one_of(
+    st.binary(min_size=0, max_size=5000),
+    # the padded-string regime the codec targets: text + zero tails
+    st.builds(
+        lambda seed, n, w: np.concatenate([
+            np.frombuffer(np.random.default_rng(seed)
+                          .integers(97, 123, (n, w // 2), dtype=np.uint8)
+                          .tobytes(), np.uint8).reshape(n, w // 2),
+            np.zeros((n, w - w // 2), np.uint8)], axis=1).tobytes(),
+        st.integers(0, 2**31 - 1), st.integers(1, 64),
+        st.integers(2, 64)),
+    # long runs (RLE regime)
+    st.builds(lambda b, k: bytes(b) * k,
+              st.binary(min_size=1, max_size=8), st.integers(1, 3000)),
+)
+
+
+@settings(**_settings)
+@given(data=blob_strategy)
+def test_block_codec_roundtrip(data):
+    enc = pc.encode_blocks(data)
+    assert pc.decode_blocks(enc) == data
+
+
+@settings(**_settings)
+@given(data=st.binary(min_size=1, max_size=2000),
+       seed=st.integers(0, 2**31 - 1))
+def test_block_codec_corruption_raises(data, seed):
+    enc = bytearray(pc.encode_blocks(data))
+    rng = np.random.default_rng(seed)
+    enc[int(rng.integers(0, len(enc)))] ^= 1 << int(rng.integers(0, 8))
+    with pytest.raises(PageCodecError):
+        pc.decode_blocks(bytes(enc))
+
+
+@settings(**_settings)
+@given(data=st.binary(min_size=0, max_size=500),
+       cut=st.integers(1, 100))
+def test_block_codec_truncation_raises(data, cut):
+    enc = pc.encode_blocks(data)
+    with pytest.raises(PageCodecError):
+        pc.decode_blocks(enc[:max(0, len(enc) - cut)])

@@ -1,0 +1,465 @@
+"""Hot/cold memory tiering byte-parity suite (PR 10 tentpole).
+
+Contract under test: demoting pages to the compressed cold tier is
+INVISIBLE to every verb except in the byte accounting —
+
+(a) solo parity: selection / projection / smart addressing / group /
+    distinct / crypt(pre+post) run byte-identical against fully-hot,
+    fully-cold, and mixed-tier tables (small pool pages make real
+    multi-page tables cheap), with cold dispatches billing the
+    compressed physical bytes (`read_bytes` strictly below the raw
+    read) and identical `shipped_bytes`;
+(b) string extents: a demoted string table promotes on first access and
+    regex masks stay exact;
+(c) tier mechanics: incompressible pages fall back to raw (counter
+    says so, tier bit stays raw), a corrupted cold frame raises typed
+    `PageCodecError` on promote instead of restoring wrong bytes,
+    access hysteresis promotes after `promote_after` touches, a write
+    promotes first, and the capacity multiplier is real;
+(d) the scheduler: cold tables in one shape bucket still coalesce into
+    ONE stacked dispatch; mixed hot/cold rounds split per tier and both
+    halves stay byte-identical;
+(e) cluster scale (2 and 4 nodes): the same verbs over fully-cold and
+    mixed-tier partition placements match the flat solo reference,
+    including a node KILLED MID-STREAM whose cold partition fails over
+    to a (equally cold) replica, and `demote_cold` only sweeps tables
+    the heat ledgers call idle.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import operators as op
+from repro.core.client import (FViewNode, PageCodecError, alloc_table_mem,
+                               farview_request, merge_group_partials,
+                               open_connection, submit_request, table_read,
+                               table_write)
+from repro.core.cluster import FarCluster
+from repro.core.table import FTable, Column, string_table
+from repro.kernels import ref as kref
+
+PAGE = 4096                      # small pool pages: 5-page tables at N=600
+N = 600
+COLS = tuple(Column(f"c{i}", "i32" if i == 0 else "f32") for i in range(8))
+KEY, NONCE = (11, 22), 7
+NODE_COUNTS = (2, 4)
+MIXED = [0, 2, 4]                # pages demoted in the mixed-tier layout
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(42)
+    d = {"c0": rng.integers(0, 13, N).astype(np.int32)}
+    for i in range(1, 8):
+        # integer-valued floats: sums are order-insensitive, so
+        # byte-identical is meaningful for aggregates too
+        d[f"c{i}"] = rng.integers(-50, 50, N).astype(np.float32)
+    return d
+
+
+def schema(name="t"):
+    return FTable(name, COLS, n_rows=N)
+
+
+def tiered_node(**kw):
+    return FViewNode(2 * 2**20, page_bytes=PAGE, **kw)
+
+
+def loaded(node, words, name="t"):
+    qp = open_connection(node)
+    ft = schema(name)
+    alloc_table_mem(qp, ft)
+    table_write(qp, ft, words)
+    return qp, ft
+
+
+def solo_ref(pipe, words):
+    """Flat-DRAM reference: default pages, nothing demoted."""
+    node = FViewNode(64 * 2**20)
+    qp, ft = loaded(node, words)
+    return farview_request(qp, ft, pipe).finalize()
+
+
+def assert_rows_identical(res, ref):
+    assert res.count == ref.count
+    np.testing.assert_array_equal(np.asarray(res.rows), np.asarray(ref.rows))
+    assert res.shipped_bytes == ref.shipped_bytes
+
+
+VERBS = {
+    "selection": (op.Select((op.Predicate("c1", "<", 0.0),
+                             op.Predicate("c2", ">", -20.0))),),
+    "projection": (op.Project(("c2", "c5")),),
+    "smart": (op.SmartAddress(("c3",)),),
+    "crypt_post": (op.Select((op.Predicate("c2", ">", 0.0),)),
+                   op.Crypt(key=KEY, nonce=NONCE, when="post")),
+}
+GROUPED = {
+    "group": (op.GroupBy("c0", ("c1", "c2"), n_buckets=128),),
+    "distinct": (op.Distinct(("c0",), n_buckets=128),),
+}
+
+
+class TestSoloTierParity:
+    @pytest.mark.parametrize("verb", sorted(VERBS))
+    @pytest.mark.parametrize("tier", ["cold", "mixed"])
+    def test_rows_verbs_byte_identical(self, data, verb, tier):
+        pipe = VERBS[verb]
+        words = schema().encode(data)
+        ref = solo_ref(pipe, words)
+        node = tiered_node(promote_after=99)    # no promotion mid-test
+        qp, ft = loaded(node, words)
+        hot = farview_request(qp, ft, pipe).finalize()
+        assert_rows_identical(hot, ref)
+        n = node.pool.demote_table(
+            ft, page_idx=MIXED if tier == "mixed" else None)
+        assert n == (len(MIXED) if tier == "mixed" else len(ft.pages))
+        res = farview_request(qp, ft, pipe).finalize()
+        assert_rows_identical(res, ref)
+        # honest accounting: physical (compressed) bytes billed, and the
+        # tiered dispatch bills exactly what the descriptors say it read
+        assert res.read_bytes < hot.read_bytes
+        assert node.pool.is_tiered(ft)
+
+    @pytest.mark.parametrize("verb", sorted(GROUPED))
+    @pytest.mark.parametrize("tier", ["cold", "mixed"])
+    def test_grouped_verbs_byte_identical(self, data, verb, tier):
+        pipe = GROUPED[verb]
+        words = schema().encode(data)
+        ref = merge_group_partials(
+            schema(), pipe if verb == "group" else (),
+            [solo_ref(pipe, words)]).groups
+        node = tiered_node(promote_after=99)
+        qp, ft = loaded(node, words)
+        node.pool.demote_table(
+            ft, page_idx=MIXED if tier == "mixed" else None)
+        res = farview_request(qp, ft, pipe).finalize()
+        got = merge_group_partials(
+            ft, pipe if verb == "group" else (), [res]).groups
+        assert set(got) == set(ref)
+        for k in ref:
+            for a, b in zip(ref[k], got[k]):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    @pytest.mark.parametrize("tier", ["cold", "mixed"])
+    def test_join_small_cold_probe_and_build(self, data, tier):
+        """JoinSmall resolves its build table through the pool read path,
+        which decodes cold pages host-side — so BOTH sides of the join
+        can be demoted and the probe stream still matches exactly."""
+        rng = np.random.default_rng(3)
+        bcols = (Column("k", "i32"), Column("v"))
+        bd = {"k": rng.permutation(64)[:40].astype(np.int32),
+              "v": rng.integers(0, 99, 40).astype(np.float32)}
+        pipe = (op.JoinSmall(probe_key="c0", build_table="cust",
+                             build_key="k", build_cols=("v",)),)
+        jdata = dict(data)
+        jdata["c0"] = rng.integers(0, 64, N).astype(np.int32)
+        words = schema().encode(jdata)
+
+        def with_build(node):
+            qp = open_connection(node)
+            b = FTable("cust", bcols, n_rows=40)
+            alloc_table_mem(qp, b)
+            table_write(qp, b, b.encode(bd))
+            return b
+
+        node_ref = FViewNode(64 * 2**20)
+        with_build(node_ref)
+        qp, ft = loaded(node_ref, words)
+        ref = farview_request(qp, ft, pipe).finalize()
+        assert ref.count > 0
+
+        node = tiered_node(promote_after=99)
+        b = with_build(node)
+        qp, ft = loaded(node, words)
+        node.pool.demote_table(
+            ft, page_idx=MIXED if tier == "mixed" else None)
+        node.pool.demote_table(b)               # build side cold too
+        assert_rows_identical(farview_request(qp, ft, pipe).finalize(),
+                              ref)
+
+    def test_crypt_pre_ciphertext_is_the_raw_fallback(self, data):
+        """Encrypted-at-rest pages are pseudo-random: the codec must
+        refuse them (None -> raw tier bit) rather than grow the frame,
+        and the verb still decrypts byte-identically."""
+        pipe = (op.Crypt(key=KEY, nonce=NONCE, when="pre"),
+                op.Select((op.Predicate("c1", "<", 0.0),)))
+        flat = jnp.asarray(schema().encode(data).reshape(-1))
+        enc = np.asarray(kref.ctr_crypt(
+            flat.view(jnp.uint32), jnp.asarray(KEY, jnp.uint32), NONCE)
+        ).view(np.float32).reshape(N, len(COLS))
+        ref = solo_ref(pipe, enc)
+        assert ref.count > 0
+        node = tiered_node(promote_after=99)
+        qp, ft = loaded(node, enc)
+        before = node.pool.tier_stats["incompressible_pages"]
+        # only the zero-padded tail page compresses; every FULL page of
+        # ciphertext must be refused and kept raw
+        assert node.pool.demote_table(ft) <= 1
+        assert node.pool.tier_stats["incompressible_pages"] >= before + 4
+        bits = node.pool.tier_bits(ft)
+        assert not any(bits[:-1])               # full pages stayed raw
+        assert_rows_identical(farview_request(qp, ft, pipe).finalize(), ref)
+
+    def test_table_read_cold_byte_identical(self, data):
+        words = schema().encode(data)
+        node = tiered_node(promote_after=99)
+        qp, ft = loaded(node, words)
+        node.pool.demote_table(ft)
+        np.testing.assert_array_equal(np.asarray(table_read(qp, ft)), words)
+        # plain reads bill physical too
+        assert qp.bytes_shipped < ft.n_bytes
+
+
+class TestStringTierParity:
+    def test_regex_after_demote_promotes_and_matches(self):
+        import re as pyre
+        strs = [b"error: disk full", b"all fine", b"ERROR", b"warn: error",
+                b"errr", b"late error"]
+        rng = np.random.default_rng(5)
+        picked = [strs[j] for j in rng.integers(0, len(strs), 300)]
+        ft, mat, lens = string_table("logs", picked, 48)
+        pipe = (op.RegexMatch("error"),)
+        node = tiered_node()
+        qp = open_connection(node)
+        alloc_table_mem(qp, ft)
+        assert node.pool.demote_table(ft) > 0       # extent-granular
+        assert node.pool.is_tiered(ft)
+        res = farview_request(qp, ft, pipe,
+                              strings=mat, lengths=lens).finalize()
+        # string extents promote on FIRST access (no fused decode path)
+        assert not node.pool.is_tiered(ft)
+        expect = [bool(pyre.search(b"error", s)) for s in picked]
+        assert np.asarray(res.mask).tolist() == expect
+
+
+class TestTierMechanics:
+    def test_corrupt_cold_frame_raises_typed_error(self, data):
+        """A flipped bit in a cold frame is a typed failure on promote —
+        never wrong bytes quietly restored."""
+        node = tiered_node(promote_after=99)
+        qp, ft = loaded(node, schema().encode(data))
+        assert node.pool.demote_table(ft) == len(ft.pages)
+        te = node.pool._tier[ft.table_id]
+        p = int(np.flatnonzero(te.cold)[0])
+        frame, off = int(te.phys[p]), int(te.span[p][0])
+        buf = node.pool.buf
+        w = buf[frame, off:off + 1].view(jnp.uint32) ^ jnp.uint32(1)
+        node.pool.buf = buf.at[frame, off:off + 1].set(w.view(jnp.float32))
+        with pytest.raises(PageCodecError):
+            node.pool.promote_table(ft)
+
+    def test_access_hysteresis_promotes(self, data):
+        pipe = VERBS["selection"]
+        node = tiered_node()                    # promote_after=3 default
+        qp, ft = loaded(node, schema().encode(data))
+        node.pool.demote_table(ft)
+        for i in range(2):
+            farview_request(qp, ft, pipe).finalize()
+            assert node.pool.is_tiered(ft)      # scans don't thrash
+        farview_request(qp, ft, pipe).finalize()
+        assert not node.pool.is_tiered(ft)      # third touch promotes
+        assert node.pool.tier_stats["promoted_pages"] == len(ft.pages)
+
+    def test_write_promotes_first(self, data):
+        node = tiered_node(promote_after=99)
+        qp, ft = loaded(node, schema().encode(data))
+        node.pool.demote_table(ft)
+        d2 = dict(data)
+        d2["c1"] = data["c1"] + 1.0
+        words2 = schema().encode(d2)
+        table_write(qp, ft, words2)
+        assert not node.pool.is_tiered(ft)
+        np.testing.assert_array_equal(np.asarray(table_read(qp, ft)),
+                                      words2)
+
+    def test_effective_capacity_multiplier(self):
+        """Dict-friendly analytics columns (low-cardinality ints) are the
+        regime the paper's capacity claim is about: demoting them must
+        serve >=1.5 logical bytes per physical byte."""
+        cols = tuple(Column(f"k{i}", "i32") for i in range(8))
+        ft = FTable("facts", cols, n_rows=4000)
+        rng = np.random.default_rng(9)
+        d = {c.name: rng.integers(0, 13, 4000).astype(np.int32)
+             for c in cols}
+        node = tiered_node(promote_after=99)
+        qp = open_connection(node)
+        alloc_table_mem(qp, ft)
+        table_write(qp, ft, ft.encode(d))
+        free_before = node.pool.free_pages
+        node.pool.demote_table(ft)
+        s = node.pool.tier_summary()
+        assert s["cold_pages"] == len(ft.pages)
+        assert s["effective_capacity"] >= 1.5   # the acceptance bar
+        assert node.pool.free_pages > free_before
+        np.testing.assert_array_equal(np.asarray(table_read(qp, ft)),
+                                      ft.encode(d))
+
+    def test_demote_promote_roundtrip_exact(self, data):
+        words = schema().encode(data)
+        node = tiered_node(promote_after=99)
+        qp, ft = loaded(node, words)
+        node.pool.demote_table(ft)
+        assert node.pool.promote_table(ft) == len(ft.pages)
+        assert not node.pool.is_tiered(ft)
+        np.testing.assert_array_equal(np.asarray(table_read(qp, ft)), words)
+
+
+class TestTieredScheduler:
+    def test_cold_tables_coalesce_one_dispatch(self, data):
+        """Same-bucket cold tables ride ONE stacked tiered executable,
+        each billing its own compressed bytes."""
+        node = FViewNode(8 * 2**20, page_bytes=PAGE, n_regions=3,
+                         promote_after=99)
+        words = schema().encode(data)
+        qps, fts = [], []
+        for i in range(3):
+            qp, ft = loaded(node, words, name=f"c{i}")
+            node.pool.demote_table(ft)
+            qps.append(qp)
+            fts.append(ft)
+        pipe = VERBS["selection"]
+        ref = solo_ref(pipe, words)
+        pends = [submit_request(qp, ft, pipe) for qp, ft in zip(qps, fts)]
+        before = node.dispatches
+        node.flush()
+        assert node.dispatches == before + 1
+        for pend, ft in zip(pends, fts):
+            res = pend.wait()
+            assert_rows_identical(res, ref)
+            assert res.read_bytes == node.pool.tier_read_bytes(ft)
+            assert res.read_bytes < ft.n_bytes
+
+    def test_mixed_tier_round_splits_per_tier(self, data):
+        """Hot and cold tables in one bucket run as TWO dispatches (the
+        tiered executable takes descriptor operands), both exact."""
+        node = FViewNode(8 * 2**20, page_bytes=PAGE, n_regions=2,
+                         promote_after=99)
+        words = schema().encode(data)
+        qp_h, ft_h = loaded(node, words, name="hot")
+        qp_c, ft_c = loaded(node, words, name="cold")
+        node.pool.demote_table(ft_c)
+        pipe = VERBS["selection"]
+        ref = solo_ref(pipe, words)
+        ph = submit_request(qp_h, ft_h, pipe)
+        pc = submit_request(qp_c, ft_c, pipe)
+        before = node.dispatches
+        node.flush()
+        assert node.dispatches == before + 2
+        assert_rows_identical(ph.wait(), ref)
+        assert_rows_identical(pc.wait(), ref)
+
+
+def tiered_cluster(words, k, *, replicas=2, demote="all", **kw):
+    cl = FarCluster(k, 8 * 2**20, page_bytes=PAGE, replicas=replicas, **kw)
+    cqp = cl.open_connection()
+    ct = cl.alloc_table_mem(cqp, schema())
+    cl.table_write(cqp, ct, words)
+    if demote == "all":
+        rep = cl.demote_cold(max_heat_rows=10**9)
+        assert "t" in rep
+    elif demote == "mixed":         # partition 0 cold, the rest hot
+        cl.nodes[0].pool.demote_table(ct.parts[0])
+        for j, h in ct.replicas[0].items():
+            cl.nodes[j].pool.demote_table(h)
+    return cl, cqp, ct
+
+
+class TestClusterTierParity:
+    @pytest.mark.parametrize("k", NODE_COUNTS)
+    @pytest.mark.parametrize("tier", ["all", "mixed"])
+    def test_selection_over_cold_partitions(self, data, k, tier):
+        pipe = VERBS["selection"]
+        words = schema().encode(data)
+        ref = solo_ref(pipe, words)
+        cl, cqp, ct = tiered_cluster(words, k, demote=tier)
+        res = cl.submit_request(cqp, ct, pipe).wait().finalize()
+        assert_rows_identical(res, ref)
+
+    @pytest.mark.parametrize("k", NODE_COUNTS)
+    def test_group_over_cold_partitions(self, data, k):
+        pipe = GROUPED["group"]
+        words = schema().encode(data)
+        ref = merge_group_partials(schema(), pipe,
+                                   [solo_ref(pipe, words)]).groups
+        cl, cqp, ct = tiered_cluster(words, k)
+        got = cl.submit_request(cqp, ct, pipe).wait().finalize().groups
+        assert set(got) == set(ref)
+        for key in ref:
+            for a, b in zip(ref[key], got[key]):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    @pytest.mark.parametrize("k", NODE_COUNTS)
+    def test_kill_mid_stream_over_cold_partition(self, data, k):
+        """The ISSUE's marquee failure case: a verb in flight over a COLD
+        partition loses its serving node; the gather fails over to the
+        replica — which is just as cold — and splices byte-identically."""
+        pipe = VERBS["crypt_post"]
+        words = schema().encode(data)
+        ref = solo_ref(pipe, words)
+        cl, cqp, ct = tiered_cluster(words, k)
+        for node in cl.nodes:           # every copy everywhere is cold
+            for name, ft in node.tables.items():
+                assert node.pool.is_tiered(ft), (node.node_id, name)
+        pend = cl.submit_request(cqp, ct, pipe)
+        cl.fault.kill(k - 1)            # dies AFTER submit, BEFORE drain
+        assert_rows_identical(pend.wait().finalize(), ref)
+        assert ct.heat.failovers >= 1
+
+    @pytest.mark.parametrize("k", NODE_COUNTS)
+    def test_copartitioned_join_cold_probe_and_build(self, data, k):
+        rng = np.random.default_rng(3)
+        bft = FTable("cust", (Column("k", "i32"), Column("v")), n_rows=40)
+        bd = {"k": rng.permutation(64)[:40].astype(np.int32),
+              "v": rng.integers(0, 99, 40).astype(np.float32)}
+        pipe = (op.JoinSmall(probe_key="c0", build_table="cust",
+                             build_key="k", build_cols=("v",)),)
+        jdata = dict(data)
+        jdata["c0"] = rng.integers(0, 64, N).astype(np.int32)
+        words = schema().encode(jdata)
+        node = FViewNode(64 * 2**20)
+        qp = open_connection(node)
+        b = FTable(bft.name, bft.columns, n_rows=bft.n_rows)
+        alloc_table_mem(qp, b)
+        table_write(qp, b, b.encode(bd))
+        ref = None
+        ft = schema()
+        alloc_table_mem(qp, ft)
+        table_write(qp, ft, words)
+        ref = farview_request(qp, ft, pipe).finalize()
+
+        cl = FarCluster(k, 8 * 2**20, page_bytes=PAGE, replicas=2)
+        cqp = cl.open_connection()
+        ct = cl.alloc_table_mem(cqp, schema(), partitioner="hash",
+                                keys=jdata["c0"])
+        cl.table_write(cqp, ct, words)
+        cb = cl.alloc_table_mem(
+            cqp, FTable(bft.name, bft.columns, n_rows=bft.n_rows),
+            co_partition=ct, keys=bd["k"])
+        cl.table_write(cqp, cb, bft.encode(bd))
+        rep = cl.demote_cold(max_heat_rows=10**9)   # probe AND build cold
+        assert "t" in rep
+        res = cl.submit_request(cqp, ct, pipe).wait().finalize()
+        assert_rows_identical(res, ref)
+
+
+class TestClusterDemoteSweep:
+    def test_demote_cold_respects_heat(self, data):
+        """The sweep is ledger-driven: a table with recent traffic stays
+        hot, the idle one is demoted on every node holding a copy."""
+        cl = FarCluster(2, 8 * 2**20, page_bytes=PAGE, replicas=2)
+        cqp = cl.open_connection()
+        words = schema().encode(data)
+        ct_hot = cl.alloc_table_mem(cqp, schema("busy"))
+        ct_idle = cl.alloc_table_mem(cqp, schema("idle"))
+        cl.table_write(cqp, ct_hot, words)
+        cl.table_write(cqp, ct_idle, words)
+        cl.submit_request(cqp, ct_hot, VERBS["selection"]).wait()
+        rep = cl.demote_cold(max_heat_rows=0)
+        assert "idle" in rep and "busy" not in rep
+        for i, part in enumerate(ct_idle.parts):
+            assert cl.nodes[ct_idle.home[i]].pool.is_tiered(part)
+        # the cold table still answers byte-identically
+        np.testing.assert_array_equal(
+            np.asarray(cl.table_read(cqp, ct_idle)), words)
